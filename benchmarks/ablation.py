@@ -1,0 +1,38 @@
+"""Tables 1 & 3 — progressive ablation of ElasticMoE components on
+DP3->DP4 (scale-up) and DP4->DP3 (scale-down), DeepSeek-V2-Lite, TP2."""
+from benchmarks.common import Table, scale_cost
+
+ABLATIONS = [
+    ("ElasticMoE (full)", {}),
+    ("- IPCAlloc", {"ipc_safe_alloc": False}),
+    ("- HCCL", {"ipc_safe_alloc": False, "hccl": False}),
+    ("- PreInit", {"ipc_safe_alloc": False, "hccl": False, "preinit": False}),
+    ("- ZeroCopy", {"ipc_safe_alloc": False, "hccl": False, "preinit": False,
+                    "zero_copy": False}),
+]
+
+
+def run_one(n0: int, n1: int, name: str) -> Table:
+    t = Table(name, ["configuration", "scale_time_s", "downtime_s",
+                     "peak_mem_gb"])
+    for label, flags in ABLATIONS:
+        pre = flags.pop("preinit", True)
+        _, cost = scale_cost("deepseek-v2-lite-16b", n0, n1, "elastic",
+                             preinit=pre, **flags)
+        flags["preinit"] = pre
+        t.add(label, cost.scale_time_s, cost.downtime_s, cost.peak_mem_gb)
+    return t
+
+
+def run():
+    return [run_one(6, 8, "table1_ablation_scale_up_dp3_dp4"),
+            run_one(8, 6, "table3_ablation_scale_down_dp4_dp3")]
+
+
+def main():
+    for t in run():
+        t.show()
+
+
+if __name__ == "__main__":
+    main()

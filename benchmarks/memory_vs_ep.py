@@ -1,0 +1,29 @@
+"""Fig. 4b — per-device model-weight memory vs EP degree.
+
+Shows why horizontal scaling (which caps EP at the per-instance degree)
+wastes HBM: expert weights dominate and shrink ~1/EP."""
+from benchmarks.common import PAPER_MODELS, TP_OF, Table, cfg_of, tensors_for
+from repro.core.scaling_plan import placement
+
+
+def run() -> Table:
+    t = Table("fig4b_weight_gb_per_device",
+              ["model"] + [f"EP{e}" for e in (2, 4, 8, 16, 32)])
+    for model in PAPER_MODELS:
+        tp = TP_OF[model]
+        mcfg, tensors = tensors_for(model, tp)
+        weights = [x for x in tensors if x.kind != "kv"]
+        row = [model]
+        for ep in (2, 4, 8, 16, 32):
+            place = placement(weights, cfg_of(ep, tp))
+            row.append(max(sum(s.values()) for s in place.values()) / 1e9)
+        t.add(*row)
+    return t
+
+
+def main():
+    run().show()
+
+
+if __name__ == "__main__":
+    main()

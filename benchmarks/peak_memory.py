@@ -1,0 +1,32 @@
+"""Fig. 8 — peak per-device memory during scale-up (DeepSeek-V2-Lite)."""
+from benchmarks.common import STRATEGY_LABELS, Table, feasible, scale_cost
+
+
+def run() -> Table:
+    t = Table("fig8_peak_memory_gb", ["transition"] + list(STRATEGY_LABELS))
+    for n0, n1 in [(2, 4), (4, 6), (6, 8)]:
+        row = [f"{n0}->{n1}"]
+        for strat in STRATEGY_LABELS:
+            n1_eff = 2 * n0 if strat == "horizontal" else n1
+            if not feasible(strat, n0, n1_eff):
+                row.append("n/a")
+                continue
+            _, cost = scale_cost("deepseek-v2-lite-16b", n0, n1_eff, strat)
+            row.append(cost.peak_mem_gb)
+        t.add(*row)
+    return t
+
+
+def main():
+    t = run()
+    t.show()
+    for r in t.rows:
+        ours, cold = r[1], r[2]
+        extrav = r[3]
+        print(f"  {r[0]}: ours {ours:.1f}GB vs cold-restart {cold:.1f}GB "
+              f"(+{100 * (ours / cold - 1):.1f}%), vs extravagant+colocated "
+              f"worst {max(v for v in r[3:] if isinstance(v, float)):.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

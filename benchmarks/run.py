@@ -1,0 +1,64 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs everything and prints both human-readable
+tables and a machine-readable CSV block (name,<row...>).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation, bootup_breakdown, engine_measured,
+                            granularity, latency_breakdown, memory_vs_ep,
+                            peak_memory, scaledown_latency, scaleup_latency,
+                            slo_compliance, slo_dynamics, throughput_windows)
+    modules = [
+        ("fig1", granularity),
+        ("fig4a", bootup_breakdown),
+        ("fig4b", memory_vs_ep),
+        ("fig7", scaleup_latency),
+        ("fig8", peak_memory),
+        ("fig9", slo_dynamics),
+        ("fig10", slo_compliance),
+        ("fig11", latency_breakdown),
+        ("fig12", scaledown_latency),
+        ("table1+3", ablation),
+        ("table2", throughput_windows),
+        ("measured", engine_measured),
+    ]
+    tables = []
+    failures = []
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        print(f"\n{'=' * 72}\n[{name}] {mod.__doc__.splitlines()[0]}")
+        try:
+            if mod is slo_dynamics:
+                outs = [mod.run(True), mod.run(False)]
+            else:
+                out = mod.run()
+                outs = out if isinstance(out, list) else [out]
+            for t in outs:
+                if t is not None:
+                    t.show()
+                    tables.append(t)
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, str(e)))
+    print(f"\n{'=' * 72}\n# CSV")
+    print("table,row...")
+    for t in tables:
+        for line in t.csv_rows():
+            print(line)
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: {failures}")
+        raise SystemExit(1)
+    print(f"\nall {len(modules)} benchmarks passed "
+          f"({len(tables)} tables)")
+
+
+if __name__ == "__main__":
+    main()

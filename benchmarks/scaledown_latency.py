@@ -1,0 +1,41 @@
+"""Fig. 12 — scale-down latency across methods (appendix A.2)."""
+from benchmarks.common import (PAPER_MODELS, STRATEGY_LABELS, Table, feasible,
+                               scale_cost)
+
+TRANSITIONS = {
+    "deepseek-v2-lite-16b": [(8, 6), (6, 4), (4, 2)],
+    "qwen3-30b-a3b": [(10, 8), (8, 6), (6, 4)],
+    "deepseek-v3": [(32, 16), (24, 16), (20, 16), (16, 2)],
+}
+
+
+def run() -> Table:
+    strategies = {k: v for k, v in STRATEGY_LABELS.items()
+                  if k != "horizontal"}
+    t = Table("fig12_scaledown_latency_s",
+              ["model", "transition"] + list(strategies))
+    for model in PAPER_MODELS:
+        for n0, n1 in TRANSITIONS[model]:
+            row = [model, f"{n0}->{n1}"]
+            for strat in strategies:
+                if not feasible(strat, n0, n1):
+                    row.append("n/a")
+                    continue
+                _, cost = scale_cost(model, n0, n1, strat)
+                row.append(cost.scale_time_s)
+            t.add(*row)
+    return t
+
+
+def main():
+    t = run()
+    t.show()
+    for r in t.rows:
+        ours = r[2]
+        base = min(v for v in r[3:] if isinstance(v, float))
+        print(f"  {r[0]} {r[1]}: {ours:.2f}s vs {base:.2f}s "
+              f"({ours / base:.2f}x of fastest baseline)")
+
+
+if __name__ == "__main__":
+    main()

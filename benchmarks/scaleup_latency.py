@@ -1,0 +1,49 @@
+"""Fig. 7 — scale-up latency across methods for the three paper MoE models.
+
+x-axis: source->destination NPU transitions (fixed 2-NPU steps for
+DeepSeek-V2-Lite / Qwen3-30B, progressively larger steps for DeepSeek-V3);
+values: projected seconds from the byte-exact plan + calibrated cost model.
+"""
+from benchmarks.common import (PAPER_MODELS, STRATEGY_LABELS, Table, feasible,
+                               scale_cost)
+
+TRANSITIONS = {
+    "deepseek-v2-lite-16b": [(2, 4), (4, 6), (6, 8)],
+    "qwen3-30b-a3b": [(4, 6), (6, 8), (8, 10)],
+    "deepseek-v3": [(16, 18), (16, 20), (16, 24), (16, 32)],
+}
+
+
+def run() -> Table:
+    t = Table("fig7_scaleup_latency_s",
+              ["model", "transition"] + list(STRATEGY_LABELS))
+    for model in PAPER_MODELS:
+        for n0, n1 in TRANSITIONS[model]:
+            row = [model, f"{n0}->{n1}"]
+            for strat in STRATEGY_LABELS:
+                if strat == "horizontal":
+                    n1_eff = 2 * n0
+                else:
+                    n1_eff = n1
+                if not feasible(strat, n0, n1_eff):
+                    row.append("n/a")
+                    continue
+                _, cost = scale_cost(model, n0, n1_eff, strat)
+                row.append(cost.scale_time_s)
+            t.add(*row)
+    return t
+
+
+def main():
+    t = run()
+    t.show()
+    # headline: speedup vs best baseline
+    for r in t.rows:
+        ours = r[2]
+        base = min(v for v in r[3:] if isinstance(v, float))
+        print(f"  {r[0]} {r[1]}: ElasticMoE {ours:.2f}s vs best baseline "
+              f"{base:.2f}s -> {base / ours:.1f}x faster")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Fig. 9 — SLO attainment dynamics around a scaling event
+(DeepSeek-V2-Lite; scale-up 4->6 and scale-down 6->4; discrete-event sim)."""
+import numpy as np
+
+from benchmarks.common import Table
+from repro.configs import get_config
+from repro.serving.metrics import SLO, slo_attainment_timeline
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workload import make_workload, step_up
+
+MODEL = "deepseek-v2-lite-16b"
+STRATS = ["elastic", "cold_restart", "colocated"]
+
+
+def _run(strategy: str, up: bool):
+    mcfg = get_config(MODEL)
+    n0, n1 = (4, 6) if up else (6, 4)
+    sim = ServingSimulator(mcfg, tp=2, ndev=n0, strategy=strategy)
+    rps0 = 0.7 * _sustainable_rps(sim, n0)
+    rps1 = (1.3 if up else 0.45) * _sustainable_rps(sim, n0)
+    reqs = make_workload(duration_s=240.0, rps_fn=step_up(rps0, rps1, 60.0),
+                         prompt_len=2000, output_range=(500, 750), seed=0)
+    # scaling command issued shortly after the load shift
+    sim.run(reqs, until=75.0)
+    sim.command_scale(n1)
+    sim.run([], until=240.0)
+    return reqs, sim
+
+
+def _sustainable_rps(sim, ndev):
+    per_req_s = (sim.perf.prefill_s(2000, ndev)
+                 + 625 * sim.perf.decode_step_s(32, ndev))
+    batch = min(sim.perf.max_batch(ndev), 64)
+    return batch / per_req_s
+
+
+def run(up=True) -> Table:
+    slo = SLO(ttft_s=5.0, tpot_s=1.5) if up else SLO(ttft_s=2.0, tpot_s=1.0)
+    name = "fig9a_scaleup_slo_timeline" if up else "fig9b_scaledown_slo_timeline"
+    t = Table(name, ["t_s"] + STRATS + ([f"{s}_per_npu" for s in STRATS]
+                                        if not up else []))
+    runs = {s: _run(s, up) for s in STRATS}
+    grids = {}
+    for s, (reqs, sim) in runs.items():
+        ts, att = slo_attainment_timeline(reqs, slo, window_s=20.0, dt=5.0)
+        grids[s] = dict(zip(np.round(ts, 1), att))
+    for tt in np.arange(50.0, 240.0, 10.0):
+        row = [tt] + [grids[s].get(tt, float("nan")) for s in STRATS]
+        if not up:
+            for s in STRATS:
+                ndev = runs[s][1].ndev + runs[s][1].extra_devices_during_scale
+                a = grids[s].get(tt, float("nan"))
+                row.append(a / max(ndev, 1))
+        t.add(*row)
+    return t
+
+
+def main():
+    for up in (True, False):
+        t = run(up)
+        t.show()
+        # summary: post-event recovery time to >=0.9
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Table 2 — offline throughput before/during/after a scale-up (DeepSeek-
+V2-Lite, DP3TP2 -> DP4TP2, 10000-request batch, 500 prefill/250-500 decode)."""
+from benchmarks.common import Table
+from repro.configs import get_config
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workload import make_workload, fixed_rate
+
+MODEL = "deepseek-v2-lite-16b"
+STRATS = ["colocated", "cold_restart", "elastic"]
+LABELS = {"colocated": "Vertical (Concurrent)",
+          "cold_restart": "Vertical (Cold Restart)",
+          "elastic": "Elastic (Ours)"}
+
+
+def run() -> Table:
+    mcfg = get_config(MODEL)
+    t = Table("table2_throughput_rps", ["method", "before", "during", "after"])
+    sims = {}
+    scale_at = 120.0
+    for strat in STRATS:
+        sim = ServingSimulator(mcfg, tp=2, ndev=6, strategy=strat,
+                               kv_seq_len=1024)
+        reqs = make_workload(duration_s=600.0, rps_fn=fixed_rate(50.0),
+                             prompt_len=500, output_range=(250, 500), seed=2)
+        sim.run(reqs, until=scale_at)
+        sim.command_scale(8)
+        sim.run([], until=600.0)
+        sims[strat] = sim
+    # "during" window: +-5s around the longest transition (cold restart)
+    longest = max(s.events[0].t_ready - s.events[0].t_command
+                  for s in sims.values())
+    w0, w1 = scale_at - 5.0, scale_at + longest + 5.0
+    for strat in STRATS:
+        sim = sims[strat]
+        t.add(LABELS[strat],
+              sim.throughput(60.0, scale_at),
+              sim.throughput(w0, w1),
+              sim.throughput(w1, min(w1 + 120.0, 600.0)))
+    return t
+
+
+def main():
+    t = run()
+    t.show()
+    ours = t.rows[-1]
+    cold = t.rows[1]
+    print(f"  during-scaling throughput: ours {ours[2]:.2f} vs cold-restart "
+          f"{cold[2]:.2f} rps ({ours[2] / max(cold[2], 1e-9):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Virtual expert pages end-to-end: EP remap via page-table update + the
+Pallas paged-GMM kernel consuming the table — no weight buffer is rebuilt.
+
+Shows the O(1) remap: after 'migrating' experts between devices, only the
+page table changes and migrated pages are written into free pool slots; the
+kernel output is bit-identical.
+
+Run:  PYTHONPATH=src python examples/paged_experts_demo.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.expert_pages import ExpertPageTable
+from repro.core.topology import ElasticConfig
+from repro.kernels import ops, ref
+
+
+def main():
+    L, E, D, F, C = 1, 8, 64, 128, 128
+    pool_pages = 2 * E
+    rng = np.random.default_rng(0)
+    weights = rng.standard_normal((E, D, F)).astype(np.float32)
+
+    table = ExpertPageTable(L, E, pool_pages)
+    c2 = ElasticConfig(dp=1, tp=2, devices=(0, 1))
+    table.initial_place(c2)
+
+    # device pools (simulated HBM): page -> weight block
+    pools = {d: np.zeros((pool_pages, D, F), np.float32) for d in (0, 1, 2)}
+    for (l, e), pr in table.active.items():
+        pools[pr.device][pr.page] = weights[e]
+
+    def run_device(d, x):
+        owned = sorted(e for (l, e), pr in table.active.items()
+                       if pr.device == d)
+        pages = jnp.asarray([table.active[(0, e)].page for e in owned],
+                            jnp.int32)
+        out = ops.paged_gmm(pages, jnp.asarray(pools[d]), x[jnp.asarray(owned)])
+        return dict(zip(owned, out))
+
+    x = jnp.asarray(rng.standard_normal((E, C, D)), jnp.float32)
+    before = {}
+    for d in (0, 1):
+        before.update(run_device(d, x))
+
+    print("scaling EP2 -> EP3 (min-move page remap) ...")
+    c3 = ElasticConfig(dp=1, tp=3, devices=(0, 1, 2))
+    migrations = table.stage_remap(c3)
+    print(f"  migrations: {len(migrations)} of {E} experts "
+          f"(only the imbalance moves)")
+    for m in migrations:          # p2p-copy pages into free slots
+        pools[m.dst.device][m.dst.page] = pools[m.src.device][m.src.page]
+    table.commit()
+
+    after = {}
+    for d in (0, 1, 2):
+        after.update(run_device(d, x))
+    for e in range(E):
+        np.testing.assert_array_equal(np.asarray(before[e]),
+                                      np.asarray(after[e]))
+    want = ref.paged_gmm_ref(jnp.arange(E, dtype=jnp.int32),
+                             jnp.asarray(weights), x)
+    got = jnp.stack([after[e] for e in range(E)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print("  outputs bit-identical across the remap; kernel matches oracle")
+    print("  placement:", {d: sorted(e for (l, e), pr in table.active.items()
+                                     if pr.device == d) for d in (0, 1, 2)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,458 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts each ``while``
+body **once**, which under-reports scanned-layer models by ~num_layers x.
+This module parses the HLO module text, builds the call graph
+(while/fusion/call/conditional), extracts per-computation costs, and rolls
+them up with loop trip counts:
+
+* flops            — 2*M*N*K per ``dot`` (batch dims included),
+* collective bytes — output buffer sizes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+* hbm bytes        — sum of operand + output buffer sizes of non-trivial ops
+                     (a "bytes accessed" proxy at fusion granularity).
+
+Trip counts are recovered from the loop condition's integer constant.
+All numbers are per-device (HLO is the per-device SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(
+    r"(pred|token|[suf]\d+|bf16|f16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+
+
+def _split_op(line: str):
+    """Parse '%name = TYPE opcode(args...' robustly.
+
+    TYPE may be a (possibly huge) tuple containing '=', '/*index=k*/'
+    comments, layouts, etc.  We walk the string tracking bracket depth; the
+    opcode is the first bare word followed by '(' at depth 0 after the type
+    expression begins."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    depth = 0
+    i = 0
+    n = len(rest)
+    while i < n:
+        ch = rest[i]
+        if ch in "([{":
+            # is this a word( at depth 0 (i.e. an opcode call)?
+            if ch == "(" and depth == 0:
+                j = i - 1
+                while j >= 0 and (rest[j].isalnum() or rest[j] in "-_"):
+                    j -= 1
+                word = rest[j + 1:i]
+                if word and word[0].isalpha() and j >= 0:
+                    return (m.group(1), rest[:j + 1].strip(), word,
+                            rest[i + 1:])
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        i += 1
+    return None
+
+
+_OP_RE = None  # replaced by _split_op
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    """Indentation-based parse: computation headers start at column 0
+    (``%name (params...) -> type {``, possibly wrapping over several lines);
+    op lines are indented; a bare ``}`` at column 0 closes the computation."""
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if line[0] not in " \t":
+            if line.strip() == "}":
+                cur = None
+                continue
+            head = line
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].lstrip()
+            m = re.match(r"%?([\w.\-]+)\s*\(", head)
+            if m and not head.startswith(("HloModule", "FileNames",
+                                          "FunctionNames")):
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        mo = _split_op(line)
+        if mo:
+            cur.ops.append(OpInfo(mo[0], mo[1], mo[2], line))
+    return comps
+
+
+def _dot_flops(op: OpInfo, types: Dict[str, str]) -> float:
+    """2 * (product of output dims) * (product of rhs contracting dims).
+
+    Operand types are resolved through the computation's symbol table
+    (operands are bare %names in optimized HLO)."""
+    out_dims = _shape_dims(op.type_str)
+    out = 1
+    for d in out_dims:
+        out *= d
+    m = re.search(r"rhs_contracting_dims=\{([\d,]*)\}", op.line)
+    refs = re.findall(r"%[\w.\-]+", op.line.split("(", 1)[1])
+    rhs_type = types.get(refs[1]) if len(refs) >= 2 else None
+    if rhs_type is None or not m:
+        # inline-typed operands (rare) or missing attrs: best-effort
+        inline = _ARRAY_RE.findall(op.line.split("(", 1)[1])
+        if inline and inline[0][1]:
+            return 2.0 * out * int(inline[0][1].split(",")[-1])
+        return 2.0 * out
+    rhs_dims = _shape_dims(rhs_type)
+    cdims = [int(d) for d in m.group(1).split(",")] if m.group(1) else []
+    k = 1
+    for c in cdims:
+        if c < len(rhs_dims):
+            k *= rhs_dims[c]
+    return 2.0 * out * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition — the bound of the
+    canonical `i < N` compare XLA emits for lax.scan/while."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    bytes_once: float = 0.0   # loop-carried accumulators: touched ~once per
+                              # loop on TPU (dus/pad+add), so not x trips
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(self.flops * f, self.bytes_accessed * f,
+                     self.bytes_once,
+                     {k: v * f for k, v in self.coll_bytes.items()})
+
+    def add(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes_accessed += o.bytes_accessed
+        self.bytes_once += o.bytes_once
+        for k in self.coll_bytes:
+            self.coll_bytes[k] += o.coll_bytes[k]
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_accessed + self.bytes_once
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "copy",
+    "reshape", "while", "call", "conditional", "custom-call", "after-all",
+    "partition-id",
+    # --- TPU-fusion approximation: XLA:CPU leaves elementwise chains
+    # unfused, but on the TPU target these fuse into neighbouring dots /
+    # fusions, so their intermediates never touch HBM.  Counting them would
+    # wildly overstate the memory-roofline term (measured 60x on qwen-0.5b).
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "convert",
+    "compare", "select", "and", "or", "not", "xor", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "broadcast", "iota",
+    "transpose", "reverse", "pad", "rng", "rng-bit-generator",
+    "rng-get-and-update-state", "cosine", "sine", "tan", "atan2", "erf",
+    "is-finite", "reduce-precision", "real", "imag", "remainder",
+}
+
+
+def _fusion_bytes(op: OpInfo, types: Dict[str, str],
+                  comps: Dict[str, Computation]) -> float:
+    """Real memory traffic of a fusion op.
+
+    Loop bodies carry big stacked tensors (remat-saved activations, KV
+    caches) that fusions only *slice*: counting the full operand per
+    iteration overstates traffic ~num_layers x.  We look inside the fused
+    computation: a parameter consumed **only** by dynamic-slice contributes
+    its slice size; a root dynamic-update-slice writes only the update."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+    out_b = _type_bytes(op.type_str)
+    arg_str = op.line.split("(", 1)[1]
+    refs = re.findall(r"%[\w.\-]+", arg_str)
+    # drop trailing attribute refs (calls=..., metadata) — operands come first
+    operand_refs = []
+    for r in refs:
+        if r[1:] == (m.group(1) if m else ""):
+            break
+        operand_refs.append(r)
+    operand_bytes = [_type_bytes(types.get(r, "")) for r in operand_refs]
+
+    if not m or m.group(1) not in comps:
+        return out_b + float(sum(operand_bytes)), 0.0
+
+    fc = comps[m.group(1)]
+    body_ops = {o.opcode for o in fc.ops if o.opcode != "parameter"}
+    if body_ops <= {"convert", "bitcast", "copy", "reshape"}:
+        # pure dtype/layout chain: on TPU this fuses into the consumer's
+        # MXU op (bf16 operands convert in-register) — no HBM round-trip
+        return 0.0, 0.0
+    # map parameter index -> internal name; find ds-only params & root dus
+    param_of: Dict[str, int] = {}
+    consumers: Dict[str, List[OpInfo]] = {}
+    ftypes = {o.name: o.type_str for o in fc.ops}
+    for o in fc.ops:
+        if o.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", o.line)
+            if pm:
+                param_of[o.name] = int(pm.group(1))
+        for r in re.findall(r"%[\w.\-]+", o.line.split("(", 1)[1]):
+            consumers.setdefault(r, []).append(o)
+    total = 0.0
+    once = 0.0
+    out_dims = _shape_dims(op.type_str)
+    root = next((o for o in fc.ops if "ROOT" in o.line), None)
+    dus_ops = [o for o in fc.ops
+               if o.opcode in ("dynamic-update-slice", "scatter")]
+    # a dus whose buffer has the fusion's output shape = an in-place update
+    # of the carried buffer (XLA:CPU may wrap it in dtype converts; on TPU
+    # it aliases) — only the update slice is real traffic
+    aliasing_dus = [o for o in dus_ops if _shape_dims(o.type_str) == out_dims]
+    acc_root = False
+    for pname, idx in param_of.items():
+        if idx >= len(operand_bytes):
+            continue
+        cons = consumers.get(pname, [])
+        p_dims = _shape_dims(ftypes.get(pname, ""))
+        if cons and all(c.opcode == "dynamic-slice" for c in cons):
+            total += sum(_type_bytes(c.type_str) for c in cons)
+        elif cons and all(c.opcode in ("dynamic-update-slice", "scatter")
+                          for c in cons):
+            pass  # aliased in-place buffer: write counted via the root below
+        elif p_dims == out_dims and aliasing_dus:
+            pass  # the carried buffer itself: aliased in-place on TPU
+        elif p_dims == out_dims and any(c.opcode == "add" for c in cons):
+            # pad+add accumulator over a loop-carried buffer: on TPU this is
+            # a dus touching one slice/iteration; whole buffer ~once per loop
+            once += operand_bytes[idx]
+            acc_root = True
+        else:
+            total += operand_bytes[idx]
+    if aliasing_dus:
+        op0 = aliasing_dus[0]
+        upd = re.findall(r"%[\w.\-]+", op0.line.split("(", 1)[1])
+        upd_idx = 2 if op0.opcode == "scatter" else 1
+        if len(upd) > upd_idx:
+            total += 2 * _type_bytes(ftypes.get(upd[upd_idx], ""))
+        else:
+            total += out_b
+    elif acc_root:
+        once += out_b
+    else:
+        total += out_b
+    return total, once
+
+
+def analyze(hlo: str) -> Costs:
+    comps = parse_computations(hlo)
+    # operand type lookup per computation: name -> type
+    memo: Dict[str, Costs] = {}
+
+    entry_name = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry_name = m.group(1)
+            break
+    if entry_name is None or entry_name not in comps:
+        # fall back: the computation with the most ops
+        entry_name = max(comps, key=lambda c: len(comps[c].ops))
+
+    def cost_of(name: str, stack=()) -> Costs:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return Costs()
+        comp = comps[name]
+        total = Costs()
+        types: Dict[str, str] = {op.name: op.type_str for op in comp.ops}
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb, mc = _BODY_RE.search(op.line), _COND_RE.search(op.line)
+                if mb:
+                    body_cost = cost_of(mb.group(1), stack + (name,))
+                    trips = _trip_count(comps[mc.group(1)]) if mc and \
+                        mc.group(1) in comps else 1
+                    total.add(body_cost.scaled(trips))
+                continue
+            if op.opcode in ("call", "conditional"):
+                for callee in _CALLS_RE.findall(op.line):
+                    if callee in comps and callee != name:
+                        total.add(cost_of(callee, stack + (name,)))
+            elif op.opcode in ("fusion", "custom-call", "map", "reduce",
+                               "sort", "scatter", "reduce-window",
+                               "select-and-scatter", "all-reduce"):
+                # flops live in the fused computation; bytes are the fusion's
+                # own operands+outputs (counted below) — avoids double count
+                for callee in _CALLS_RE.findall(op.line):
+                    if callee in comps and callee != name:
+                        total.flops += cost_of(callee, stack + (name,)).flops
+            if op.opcode == "dot":
+                total.flops += _dot_flops(op, types)
+            if op.opcode == "convolution":
+                total.flops += 2.0 * _type_bytes(op.type_str)  # rough
+            for kind in COLLECTIVES:
+                if op.opcode.startswith(kind):
+                    if op.opcode.endswith("-done"):
+                        break
+                    total.coll_bytes[kind] += _type_bytes(op.type_str)
+                    break
+            if op.opcode == "fusion":
+                fb, fo = _fusion_bytes(op, types, comps)
+                total.bytes_accessed += fb
+                total.bytes_once += fo
+            elif op.opcode in ("dynamic-update-slice",):
+                # in-place slice write: traffic = the update, not the buffer
+                ups = re.findall(r"%[\w.\-]+", op.line.split("(", 1)[1])
+                upd_t = types.get(ups[1], "") if len(ups) >= 2 else ""
+                total.bytes_accessed += 2 * _type_bytes(upd_t)
+            elif op.opcode == "dynamic-slice":
+                total.bytes_accessed += 2 * _type_bytes(op.type_str)
+            elif op.opcode == "scatter":
+                ups = re.findall(r"%[\w.\-]+", op.line.split("(", 1)[1])
+                upd_t = types.get(ups[2], "") if len(ups) >= 3 else ""
+                total.bytes_accessed += 2 * _type_bytes(upd_t)
+            elif op.opcode not in _SKIP_BYTES_OPS:
+                out_b = _type_bytes(op.type_str)
+                opnd_b = 0
+                # operands listed by name; resolve via local symbol table
+                arg_str = op.line.split("(", 1)[1]
+                for ref in re.findall(r"%([\w.\-]+)", arg_str):
+                    t = types.get("%" + ref)
+                    if t:
+                        opnd_b += _type_bytes(t)
+                # HLO may also inline operand types directly
+                if opnd_b == 0:
+                    opnd_b = _type_bytes(arg_str)
+                total.bytes_accessed += out_b + opnd_b
+        memo[name] = total
+        return total
+
+    return cost_of(entry_name)
+
+
+def top_contributors(hlo: str, n: int = 15):
+    """Per-op scaled byte contributions (same rules as analyze()) — the
+    dry-run 'profiler' used by the §Perf iterations."""
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            entry = re.match(r"ENTRY\s+%?([\w.\-]+)", line).group(1)
+            break
+    mult = {entry: 1}
+    stack = [entry]
+    while stack:
+        nm = stack.pop()
+        for op in comps[nm].ops:
+            if op.opcode == "while":
+                mb = _BODY_RE.search(op.line)
+                mc = _COND_RE.search(op.line)
+                if mb:
+                    t = _trip_count(comps[mc.group(1)]) if mc and \
+                        mc.group(1) in comps else 1
+                    mult[mb.group(1)] = mult.get(nm, 1) * t
+                    stack.append(mb.group(1))
+    rows = []
+    for nm, m in mult.items():
+        comp = comps[nm]
+        types = {o.name: o.type_str for o in comp.ops}
+        for op in comp.ops:
+            if op.opcode == "while":
+                continue
+            b = 0.0
+            if op.opcode == "fusion":
+                t_, o_ = _fusion_bytes(op, types, comps)
+                b = t_ + o_
+            elif op.opcode == "dynamic-update-slice":
+                ups = re.findall(r"%[\w.\-]+", op.line.split("(", 1)[1])
+                b = 2 * _type_bytes(types.get(ups[1], "")) if len(ups) >= 2 \
+                    else 0
+            elif op.opcode == "dynamic-slice":
+                b = 2 * _type_bytes(op.type_str)
+            elif op.opcode == "scatter":
+                ups = re.findall(r"%[\w.\-]+", op.line.split("(", 1)[1])
+                b = 2 * _type_bytes(types.get(ups[2], "")) if len(ups) >= 3 \
+                    else 0
+            elif op.opcode not in _SKIP_BYTES_OPS:
+                b = _type_bytes(op.type_str)
+                arg = op.line.split("(", 1)[1]
+                opnd = 0
+                for ref in re.findall(r"%([\w.\-]+)", arg):
+                    t_ = types.get("%" + ref)
+                    if t_:
+                        opnd += _type_bytes(t_)
+                b += opnd
+            if b:
+                rows.append((b * m, m, op.opcode, op.name, nm))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,136 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables
+for EXPERIMENTS.md (§Dry-run and §Roofline).
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [--mesh singlepod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+ADVICE = {
+    ("compute",): "increase arithmetic intensity (bigger per-step batch or "
+                  "fused kernels); compute-bound is the good place to be",
+    ("memory", "train"): "cut activation traffic: fewer remat boundaries, "
+                         "bf16 intermediates, larger fused blocks",
+    ("memory", "prefill"): "fuse attention (flash) so scores never round-trip"
+                           " HBM; keep QKV in VMEM-sized tiles",
+    ("memory", "decode"): "KV reads dominate: shrink the cache (MLA latent / "
+                          "GQA / windowing) or batch more sequences per step",
+    ("collective", "train"): "overlap grad all-reduce with backprop; shard "
+                             "weights to turn all-gathers into reduce-scatters",
+    ("collective", "decode"): "decode collectives are latency-bound: replicate"
+                              " small KV projections instead of sharding them,"
+                              " and shard the dispatch payload before a2a",
+    ("collective", "prefill"): "batch collectives per layer; shard a2a "
+                               "payloads over the model axis",
+}
+
+
+def load(mesh: str) -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, f"*_{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def advice(bottleneck: str, kind: str) -> str:
+    k = "train" if "train" in kind or kind == "encode" else kind
+    return ADVICE.get((bottleneck, k)) or ADVICE.get((bottleneck,)) or ""
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | kind | t_compute | t_memory | t_collective | "
+        "bottleneck | MODEL/HLO flops | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | {r['reason']} |")
+            continue
+        rl = r["roofline"]
+        note = "window=%s" % r["attn_window"] if r.get("attn_window") else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_s(rl['t_compute_s'])} | {fmt_s(rl['t_memory_s'])} | "
+            f"{fmt_s(rl['t_collective_s'])} | **{rl['bottleneck']}** | "
+            f"{rl['useful_flops_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | status | compile | HLO GFLOPs/dev | HBM GB/dev | "
+        "coll GB/dev | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | skip | — | — | — | "
+                         f"— | — |")
+            continue
+        rl = r["roofline"]
+        chips = rl["chips"]
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.1f}s | "
+            f"{rl['flops']/chips/1e9:.1f} | "
+            f"{rl['hbm_bytes']/chips/1e9:.1f} | "
+            f"{rl['coll_bytes_total']/chips/1e9:.2f} | {temp:.1f} |")
+    return "\n".join(lines)
+
+
+def bottleneck_summary(mesh: str) -> str:
+    recs = [r for r in load(mesh) if r["status"] == "ok"]
+    out = []
+    for r in recs:
+        rl = r["roofline"]
+        out.append(f"- **{r['arch']} × {r['shape']}** ({r['kind']}): "
+                   f"{rl['bottleneck']}-bound; {advice(rl['bottleneck'], r['kind'])}.")
+    return "\n".join(out)
+
+
+def worst_pairs(mesh: str, n=5):
+    recs = [r for r in load(mesh) if r["status"] == "ok"]
+    def frac(r):
+        rl = r["roofline"]
+        dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        return rl["t_compute_s"] / dom if dom else 0
+    recs.sort(key=frac)
+    return [(r["arch"], r["shape"], round(frac(r), 3)) for r in recs[:n]]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod")
+    args = ap.parse_args()
+    print("### Dry-run\n")
+    print(dryrun_table(args.mesh))
+    print("\n### Roofline\n")
+    print(roofline_table(args.mesh))
+    print("\n### Bottlenecks\n")
+    print(bottleneck_summary(args.mesh))
+    print("\nworst compute-fraction pairs:", worst_pairs(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

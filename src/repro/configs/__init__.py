@@ -1,0 +1,50 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>``.
+
+The ten assigned architectures plus the paper's own evaluation models.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (INPUT_SHAPES, SHAPES_BY_NAME, InputShape,
+                                ModelConfig, reduced)
+
+from repro.configs.chatglm3_6b import CONFIG as _chatglm3
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.llama32_vision_11b import CONFIG as _llama_vision
+from repro.configs.qwen15_05b import CONFIG as _qwen15
+from repro.configs.stablelm_3b import CONFIG as _stablelm
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.mamba2_13b import CONFIG as _mamba2
+from repro.configs.yi_6b import CONFIG as _yi
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2lite
+from repro.configs.zamba2_27b import CONFIG as _zamba2
+from repro.configs.qwen3_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.deepseek_v3 import CONFIG as _dsv3
+
+# The 10 assigned architectures (public-literature pool).
+ASSIGNED = {
+    c.name: c
+    for c in (
+        _chatglm3, _hubert, _llama_vision, _qwen15, _stablelm,
+        _arctic, _mamba2, _yi, _dsv2lite, _zamba2,
+    )
+}
+
+# Paper's own evaluation models (deepseek-v2-lite is in both sets).
+PAPER_MODELS = {c.name: c for c in (_dsv2lite, _qwen3moe, _dsv3)}
+
+REGISTRY = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return reduced(get_config(name[: -len("-smoke")]))
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "SHAPES_BY_NAME",
+    "ASSIGNED", "PAPER_MODELS", "REGISTRY", "get_config", "reduced",
+]

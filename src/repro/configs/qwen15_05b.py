@@ -1,0 +1,14 @@
+"""qwen1.5-0.5b [dense] — QKV bias, MHA (kv=16).  [hf:Qwen/Qwen1.5-0.5B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    arch_type="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+)

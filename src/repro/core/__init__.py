@@ -1,0 +1,19 @@
+"""ElasticMoE core: the paper's contribution as a composable JAX module."""
+from repro.core.coordinator import LoadEstimator, ScalingPolicy
+from repro.core.elastic_engine import ElasticServer, ScaleEvent
+from repro.core.expert_pages import ExpertPageTable, Migration, PageRef
+from repro.core.hmm import HMM, TransferStats, make_instance_mesh
+from repro.core.imm import IMM, StandbyInstance
+from repro.core.scaling_plan import (Op, STRATEGIES, ScalingPlan, placement,
+                                     plan_elastic, plan_elastic_paged)
+from repro.core.topology import (ElasticConfig, TensorDesc, expert_owner,
+                                 kv_cache_bytes, model_tensors)
+
+__all__ = [
+    "ElasticServer", "ScaleEvent", "HMM", "IMM", "TransferStats",
+    "StandbyInstance", "ExpertPageTable", "Migration", "PageRef",
+    "LoadEstimator", "ScalingPolicy", "ElasticConfig", "TensorDesc",
+    "ScalingPlan", "Op", "STRATEGIES", "plan_elastic", "plan_elastic_paged",
+    "placement", "expert_owner", "kv_cache_bytes", "model_tensors",
+    "make_instance_mesh",
+]

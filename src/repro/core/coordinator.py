@@ -1,0 +1,58 @@
+"""Coordinator (paper §4.3): request routing, SLO-aware load estimation, and
+scaling orchestration with drain-free switchover."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+from repro.serving.metrics import SLO, meets_slo
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class ScalingPolicy:
+    """SLO-aware load estimator (§4.3): scale up when windowed attainment
+    drops below ``low_watermark``; scale down when it stays above
+    ``high_watermark`` with slack capacity."""
+    slo: SLO
+    low_watermark: float = 0.90
+    high_watermark: float = 0.98
+    window: int = 32                  # requests per decision window
+    cooldown_s: float = 20.0
+    queue_scale_up: int = 8           # also scale up on queue backlog
+
+
+class LoadEstimator:
+    def __init__(self, policy: ScalingPolicy):
+        self.policy = policy
+        self.recent: Deque[bool] = deque(maxlen=policy.window)
+        self.last_action_t: float = -1e9
+
+    def record(self, req: Request):
+        ok = meets_slo(req, self.policy.slo)
+        if ok is not None:
+            self.recent.append(ok)
+
+    def attainment(self) -> Optional[float]:
+        if len(self.recent) < max(4, self.policy.window // 4):
+            return None
+        return sum(self.recent) / len(self.recent)
+
+    def decide(self, now: float, queue_depth: int,
+               utilization: float) -> Optional[str]:
+        """Returns 'up' | 'down' | None."""
+        if now - self.last_action_t < self.policy.cooldown_s:
+            return None
+        att = self.attainment()
+        if queue_depth >= self.policy.queue_scale_up or \
+                (att is not None and att < self.policy.low_watermark):
+            self.last_action_t = now
+            self.recent.clear()
+            return "up"
+        if att is not None and att >= self.policy.high_watermark \
+                and utilization < 0.4 and queue_depth == 0:
+            self.last_action_t = now
+            self.recent.clear()
+            return "down"
+        return None

@@ -1,0 +1,147 @@
+"""Hardware cost model: converts scaling plans into projected wall-clock
+latency / downtime / peak memory at *paper scale*.
+
+This container has no NPUs/TPUs, so — as recorded in DESIGN.md §2 — all byte
+counts (zero-copy / P2P / disk / init) are exact outputs of the planner,
+and this model multiplies them by CloudMatrix384-like constants to reproduce
+the paper's Figures 7/8/12 and Tables 1/3.  Constants are calibrated once
+against Table 1 (DeepSeek-V2-Lite DP3->DP4: ElasticMoE 2.43 s, -HCCL 10.4 s,
+-PreInit 62.8 s, -ZeroCopy 67.4 s with 67.4 s downtime) and then reused for
+every other experiment unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.scaling_plan import Op, ScalingPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    # CloudMatrix384-flavoured constants
+    disk_bw: float = 0.4e9          # bytes/s per device, disk -> HBM
+    p2p_bw: float = 120e9           # bytes/s per link (Unified Bus class)
+    p2p_bw_slow: float = 0.8e9      # without HCCL: staged through host
+    hbm_init_bw: float = 400e9      # memset for fresh KV allocations
+    zero_copy_per_tensor: float = 2e-5   # handle open/import, seconds
+    warmup_s: float = 2.0           # model warmup of the target instance
+    preinit_boot_s: float = 55.0    # cold instance boot (engine + graphs)
+    comm_setup_s: float = 3.0       # communication group (re)init
+    kv_alloc_s: float = 1.5         # KV allocator setup on a fresh instance
+    device_hbm: float = 64e9        # Ascend 910C HBM per device
+
+
+DEFAULT_HW = HardwareModel()
+
+
+@dataclasses.dataclass
+class ScalingCost:
+    scale_time_s: float
+    downtime_s: float
+    peak_mem_bytes_per_device: Dict[int, int]
+    breakdown: Dict[str, float]
+
+    @property
+    def peak_mem_gb(self) -> float:
+        return max(self.peak_mem_bytes_per_device.values()) / 1e9
+
+    @property
+    def total_mem_gb(self) -> float:
+        return sum(self.peak_mem_bytes_per_device.values()) / 1e9
+
+
+def plan_cost(plan: ScalingPlan,
+              *,
+              hw: HardwareModel = DEFAULT_HW,
+              preinit: bool = True,
+              zero_copy: bool = True,
+              hccl: bool = True,
+              ipc_safe_alloc: bool = True,
+              strategy: str = "elastic",
+              resident_bytes_per_device: Optional[Dict[int, int]] = None
+              ) -> ScalingCost:
+    """Project a plan onto the hardware model.
+
+    ``resident_bytes_per_device``: bytes already live per device before the
+    transition (old instance weights+KV); used for peak-memory accounting.
+
+    The ablation flags mirror Table 1:
+    * ``ipc_safe_alloc=False`` — zero-copy still works but tensors must be
+      re-registered through a bounce buffer: adds latency and +1 copy of the
+      largest tensor per device to peak memory.
+    * ``hccl=False`` — P2P staged through host memory (slow path).
+    * ``preinit=False`` — target instance must cold-boot first.
+    * ``zero_copy=False`` — every ZERO_COPY step becomes a DISK reload and
+      the old instance must be torn down first => downtime.
+    """
+    steps = plan.steps
+    resident = dict(resident_bytes_per_device or {})
+    peak = dict(resident)
+    live = dict(resident)
+
+    disk_bytes: Dict[int, int] = {}
+    p2p_in: Dict[int, int] = {}
+    init_bytes: Dict[int, int] = {}
+    n_zero_copy = 0
+    zero_copy_bytes = 0
+
+    for s in steps:
+        if s.op == Op.FREE:
+            continue
+        op = s.op
+        if op == Op.ZERO_COPY and not zero_copy:
+            op = Op.DISK
+        if op == Op.ZERO_COPY:
+            n_zero_copy += 1
+            zero_copy_bytes += s.nbytes
+            continue  # no new bytes: aliases existing memory
+        if op == Op.DISK:
+            disk_bytes[s.dst] = disk_bytes.get(s.dst, 0) + s.nbytes
+        elif op == Op.P2P:
+            p2p_in[s.dst] = p2p_in.get(s.dst, 0) + s.nbytes
+        elif op == Op.INIT:
+            init_bytes[s.dst] = init_bytes.get(s.dst, 0) + s.nbytes
+        live[s.dst] = live.get(s.dst, 0) + s.nbytes
+        peak[s.dst] = max(peak.get(s.dst, 0), live[s.dst])
+
+    if not ipc_safe_alloc:
+        # bounce-buffer registration: one extra copy of the largest shard
+        biggest = max((s.nbytes for s in steps if s.op != Op.FREE), default=0)
+        for d in list(peak):
+            peak[d] = peak.get(d, 0) + biggest
+
+    devs = set(plan.new.devices) | (set(plan.old.devices) if plan.old else set())
+    for d in devs:
+        peak.setdefault(d, 0)
+
+    p2p_bw = hw.p2p_bw if hccl else hw.p2p_bw_slow
+    t_disk = max((b / hw.disk_bw for b in disk_bytes.values()), default=0.0)
+    t_p2p = max((b / p2p_bw for b in p2p_in.values()), default=0.0)
+    t_init = max((b / hw.hbm_init_bw for b in init_bytes.values()), default=0.0)
+    t_zc = n_zero_copy * hw.zero_copy_per_tensor
+    if not ipc_safe_alloc:
+        t_zc += n_zero_copy * hw.zero_copy_per_tensor * 20  # re-registration
+
+    t = t_disk + t_p2p + t_init + t_zc + hw.warmup_s
+    breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
+                 "zero_copy": t_zc, "warmup": hw.warmup_s}
+    if not preinit:
+        t += hw.preinit_boot_s + hw.comm_setup_s
+        breakdown["cold_boot"] = hw.preinit_boot_s + hw.comm_setup_s
+    if strategy in ("cold_restart",) or not zero_copy:
+        # old instance gone before the new one is ready -> downtime
+        downtime = t
+        breakdown["kv_alloc"] = hw.kv_alloc_s
+        t += hw.kv_alloc_s
+        downtime = t
+    else:
+        downtime = 0.0
+    return ScalingCost(scale_time_s=t, downtime_s=downtime,
+                       peak_mem_bytes_per_device=peak, breakdown=breakdown)
+
+
+def resident_bytes(plan_place: Dict[int, Dict], kv_included: bool = True
+                   ) -> Dict[int, int]:
+    """Per-device live bytes of a placement (from scaling_plan.placement)."""
+    return {d: sum(shards.values()) for d, shards in plan_place.items()}

@@ -1,0 +1,176 @@
+"""Virtual expert management — the TPU-native ``vpage-remap`` (paper §4.6/D.5).
+
+The paper maps non-contiguous physical pages of expert weights into a
+contiguous *virtual* range so EP reconfiguration is an O(1) remap instead of
+a buffer reallocation + bulk copy.  XLA has no user-visible virtual memory,
+so the TPU-idiomatic analogue is **indirection**: each device owns a fixed
+page *pool* (one page = one (layer, expert) weight block) plus a page
+*table* mapping logical expert slots to pool indices.  The MoE kernel
+(`kernels/moe_gmm.py`) consumes the table and dynamic-slices pages out of the
+pool in VMEM — kernels see a "contiguous" logical expert bank without any
+data movement at remap time.
+
+Double-buffered tables ("old mappings remain active on source devices until
+the new inference instance takes over", §5.2): ``stage_remap`` builds the
+target table + migration list; ``commit`` atomically swaps it in and returns
+the pages to free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.topology import ElasticConfig, expert_owner
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRef:
+    device: int
+    page: int          # index into that device's pool
+
+
+@dataclasses.dataclass(frozen=True)
+class Migration:
+    layer: int
+    expert: int
+    src: PageRef
+    dst: PageRef
+
+
+class ExpertPageTable:
+    """Tracks (layer, expert) -> PageRef for the active and staged configs."""
+
+    def __init__(self, num_layers: int, num_experts: int,
+                 pool_pages_per_device: int = 0):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        # default: room for every page twice (staging headroom) on one device
+        self.pool_pages = pool_pages_per_device or 2 * num_layers * num_experts
+        self.active: Dict[Tuple[int, int], PageRef] = {}
+        self.staged: Optional[Dict[Tuple[int, int], PageRef]] = None
+        self._free: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _ensure_pool(self, device: int):
+        if device not in self._free:
+            self._free[device] = list(range(self.pool_pages))
+
+    def _alloc(self, device: int) -> int:
+        self._ensure_pool(device)
+        if not self._free[device]:
+            raise MemoryError(f"page pool exhausted on device {device}")
+        return self._free[device].pop()
+
+    def pages_in_use(self, device: int) -> int:
+        self._ensure_pool(device)
+        return self.pool_pages - len(self._free[device])
+
+    # ---------------------------------------------------------------- boot
+    def initial_place(self, cfg: ElasticConfig) -> None:
+        """First boot: allocate a page per (layer, expert) on its owner."""
+        assert not self.active
+        for l in range(self.num_layers):
+            for e in range(self.num_experts):
+                d = expert_owner(e, self.num_experts, cfg)
+                self.active[(l, e)] = PageRef(d, self._alloc(d))
+
+    # --------------------------------------------------------------- remap
+    def stage_remap(self, new_cfg: ElasticConfig,
+                    min_move: bool = True) -> List[Migration]:
+        """Build the target table (paper Fig. 6: "global remapping of experts
+        to balance placement across NPUs while minimizing data transfer").
+
+        ``min_move=True`` (paper-faithful): per layer, compute balanced
+        per-device capacities, keep every expert on its current device while
+        capacity allows — thanks to the page indirection, placement need not
+        be contiguous in logical expert order — and migrate only the
+        overflow/orphaned experts to the devices with the most free capacity.
+
+        ``min_move=False``: contiguous ``expert_owner`` placement (what the
+        XLA dense-buffer execution path requires; moves more bytes).
+
+        O(1) per expert either way: unchanged experts keep their *existing*
+        page (no copy, no reallocation); moved experts get a fresh page on
+        the target device and a P2P migration entry.  The active table keeps
+        serving until commit()."""
+        E = self.num_experts
+        devs = list(new_cfg.devices)
+        staged: Dict[Tuple[int, int], PageRef] = {}
+        migrations: List[Migration] = []
+
+        if not min_move:
+            for (l, e), ref in self.active.items():
+                new_owner = expert_owner(e, E, new_cfg)
+                if new_owner == ref.device:
+                    staged[(l, e)] = ref                  # zero-copy remap
+                else:
+                    dst = PageRef(new_owner, self._alloc(new_owner))
+                    staged[(l, e)] = dst
+                    migrations.append(Migration(l, e, ref, dst))
+            self.staged = staged
+            return migrations
+
+        base, extra = divmod(E, len(devs))
+        for l in range(self.num_layers):
+            caps = {d: base + (1 if i < extra else 0)
+                    for i, d in enumerate(devs)}
+            pending: List[Tuple[int, PageRef]] = []
+            for e in range(E):
+                ref = self.active[(l, e)]
+                if ref.device in caps and caps[ref.device] > 0:
+                    staged[(l, e)] = ref                  # stays in place
+                    caps[ref.device] -= 1
+                else:
+                    pending.append((e, ref))
+            for e, ref in pending:                        # most-free first
+                dst_dev = max(caps, key=lambda d: caps[d])
+                caps[dst_dev] -= 1
+                dst = PageRef(dst_dev, self._alloc(dst_dev))
+                staged[(l, e)] = dst
+                migrations.append(Migration(l, e, ref, dst))
+        self.staged = staged
+        return migrations
+
+    def commit(self) -> List[PageRef]:
+        """Switch to the staged table; returns pages to free (old homes of
+        migrated experts)."""
+        assert self.staged is not None
+        to_free: List[PageRef] = []
+        for key, old_ref in self.active.items():
+            if self.staged[key] != old_ref:
+                self._free[old_ref.device].append(old_ref.page)
+                to_free.append(old_ref)
+        self.active = self.staged
+        self.staged = None
+        return to_free
+
+    def abort(self) -> None:
+        """Drop the staged table, freeing its freshly allocated pages."""
+        if self.staged is None:
+            return
+        for key, ref in self.staged.items():
+            if self.active.get(key) != ref:
+                self._free[ref.device].append(ref.page)
+        self.staged = None
+
+    # ------------------------------------------------------------- queries
+    def device_table(self, cfg: ElasticConfig, layer: int,
+                     device: int, staged: bool = False) -> List[int]:
+        """Pool indices of the experts ``device`` owns for ``layer``, in
+        logical expert order — the indirection vector the MoE kernel reads."""
+        table = self.staged if staged else self.active
+        assert table is not None
+        rows = [(e, ref.page) for (l, e), ref in table.items()
+                if l == layer and ref.device == device]
+        rows.sort()
+        return [p for _, p in rows]
+
+    def owners(self, layer: int) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = defaultdict(list)
+        for (l, e), ref in self.active.items():
+            if l == layer:
+                out[ref.device].append(e)
+        for v in out.values():
+            v.sort()
+        return out

@@ -1,0 +1,370 @@
+"""HBM Management Module (paper §4.4) — the decoupled memory layer.
+
+The HMM owns model weights and KV caches *independently of inference
+instances*.  Weights live as per-device buffers; an instance receives
+assembled global ``jax.Array`` views built with
+``jax.make_array_from_single_device_arrays``, which **aliases** the existing
+per-device buffers — the JAX-native zero-copy handle (Ascend IPC in the
+paper).
+
+``scale()`` implements the paper's minimal-cost reconfiguration:
+* shards whose (content, device) are unchanged are *reused* (zero-copy),
+* shards that exist on another device are moved with ``jax.device_put``
+  (device-to-device DMA — the p2p-copy primitive),
+* expert banks are re-grouped at page (single-expert) granularity so only
+  migrated experts cross devices (vpage-remap; see expert_pages.py for the
+  O(1) table mechanics and DESIGN.md §2 for the XLA dense-buffer caveat),
+* KV caches of surviving DP replicas are reused as-is; new replicas get
+  zero-initialized state.
+
+Byte accounting (zero_copy / p2p / local / init) is exact and is asserted
+against the logical planner (scaling_plan.py) in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.expert_pages import ExpertPageTable
+from repro.core.topology import ElasticConfig
+
+
+def _idx_key(index) -> tuple:
+    return tuple((s.start, s.stop, s.step) for s in index)
+
+
+@dataclasses.dataclass
+class TransferStats:
+    zero_copy_bytes: int = 0
+    p2p_bytes: int = 0
+    local_bytes: int = 0
+    init_bytes: int = 0
+    zero_copy_count: int = 0
+    p2p_count: int = 0
+    wall_s: float = 0.0
+
+    def merge(self, o: "TransferStats"):
+        self.zero_copy_bytes += o.zero_copy_bytes
+        self.p2p_bytes += o.p2p_bytes
+        self.local_bytes += o.local_bytes
+        self.init_bytes += o.init_bytes
+        self.zero_copy_count += o.zero_copy_count
+        self.p2p_count += o.p2p_count
+        self.wall_s += o.wall_s
+
+
+def make_instance_mesh(cfg: ElasticConfig, all_devices=None) -> Mesh:
+    devs = all_devices or jax.devices()
+    grid = np.array([devs[i] for i in cfg.devices]).reshape(cfg.dp, cfg.tp)
+    return Mesh(grid, ("dp", "tp"))
+
+
+# --------------------------------------------------------- reshard-with-reuse
+
+def reshard_with_reuse(arr: jax.Array, new_sharding: NamedSharding,
+                       stats: TransferStats,
+                       expert_dim: Optional[int] = None) -> jax.Array:
+    """Rebuild ``arr`` under ``new_sharding`` reusing existing per-device
+    buffers wherever the required shard already lives on the right device.
+
+    ``expert_dim``: if set, allows piecewise assembly along that dim at
+    single-row ("page") granularity when slice boundaries change.
+    """
+    shape = arr.shape
+    old = {}
+    for sh in arr.addressable_shards:
+        old.setdefault(_idx_key(sh.index), []).append((sh.device, sh.data))
+
+    target = new_sharding.devices_indices_map(shape)
+    out = []
+    for dev in new_sharding.addressable_devices:
+        index = target[dev]
+        key = _idx_key(index)
+        holders = old.get(key, [])
+        same = [d for d in holders if d[0] == dev]
+        if same:
+            data = same[0][1]
+            stats.zero_copy_bytes += data.nbytes
+            stats.zero_copy_count += 1
+        elif holders:
+            src_dev, src_data = holders[0]
+            data = jax.device_put(src_data, dev)
+            stats.p2p_bytes += src_data.nbytes
+            stats.p2p_count += 1
+        elif expert_dim is not None:
+            data = _assemble_rows(arr, index, expert_dim, dev, stats)
+        else:
+            raise ValueError(f"no source for shard {key} of {shape}")
+        out.append(data)
+    return jax.make_array_from_single_device_arrays(shape, new_sharding, out)
+
+
+def _assemble_rows(arr, index, dim, dev, stats: TransferStats):
+    """Piecewise (per-page) assembly of one target shard along ``dim``."""
+    want = index[dim]
+    lo = want.start or 0
+    hi = want.stop if want.stop is not None else arr.shape[dim]
+    pieces = []
+    for sh in arr.addressable_shards:
+        s = sh.index[dim]
+        slo = s.start or 0
+        shi = s.stop if s.stop is not None else arr.shape[dim]
+        olo, ohi = max(lo, slo), min(hi, shi)
+        if olo >= ohi:
+            continue
+        sub = jax.lax.slice_in_dim(sh.data, olo - slo, ohi - slo, axis=dim) \
+            if (olo - slo, ohi - slo) != (0, shi - slo) else sh.data
+        if sh.device == dev:
+            stats.local_bytes += sub.nbytes
+        else:
+            stats.p2p_bytes += sub.nbytes
+            stats.p2p_count += 1
+        pieces.append((olo, jax.device_put(sub, dev)))
+    pieces.sort(key=lambda t: t[0])
+    if len(pieces) == 1:
+        return pieces[0][1]
+    return jnp.concatenate([p for _, p in pieces], axis=dim)
+
+
+# ---------------------------------------------------------------------- HMM
+
+class HMM:
+    """Holds weights + KV caches; instances attach via zero-copy handles."""
+
+    def __init__(self, mcfg: ModelConfig, tp: int, *,
+                 batch_per_replica: int, max_len: int,
+                 all_devices=None, seed: int = 0):
+        self.mcfg = mcfg
+        self.tp = tp
+        self.batch_per_replica = batch_per_replica
+        self.max_len = max_len
+        self.all_devices = list(all_devices or jax.devices())
+        self.seed = seed
+        self.active_cfg: Optional[ElasticConfig] = None
+        self.params: Any = None
+        self.cache: Any = None
+        self.staged: Optional[Tuple] = None
+        if mcfg.is_moe:
+            self.page_table = ExpertPageTable(
+                mcfg.num_layers - mcfg.first_k_dense, mcfg.num_experts)
+        else:
+            self.page_table = None
+        self.last_stats: Optional[TransferStats] = None
+
+    # ----------------------------------------------------------- shardings
+    def param_shardings(self, params, mesh: Mesh):
+        """TP over 'tp'; experts over ('dp','tp') = EP; rest replicated over
+        'dp' (attention replicas)."""
+        def spec(path_tuple, leaf):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path_tuple)
+            shape = leaf.shape
+            stacked = 1 if ("blocks/" in path or "cross_blocks/" in path) else 0
+            ntp = mesh.shape["tp"]
+            nep = mesh.shape["dp"] * mesh.shape["tp"]
+            s = [None] * len(shape)
+            import re
+            if re.search(r"moe/w[igo]$", path):
+                if shape[stacked] % nep == 0:
+                    s[stacked] = ("dp", "tp")
+                return P(*s)
+            rules = [
+                (r"attn/q/w$|attn/q_up/w$|xattn/q/w$", stacked + 1),
+                (r"attn/(k|v)/w$|xattn/(k|v)/w$", stacked + 1),
+                (r"attn/o/w$|xattn/o/w$", stacked + 0),
+                (r"attn/(k|v)_up/w$", stacked + 1),
+                (r"(mlp|shared)/(up|gate)/w$", stacked + 1),
+                (r"(mlp|shared)/down/w$", stacked + 0),
+                (r"lm_head/w$", 1),
+                (r"embed$", 0),
+            ]
+            for pat, dim in rules:
+                if re.search(pat, path) and dim < len(shape) \
+                        and shape[dim] % ntp == 0 and shape[dim] >= ntp:
+                    s[dim] = "tp"
+                    return P(*s)
+            return P(*s)
+        specs = jax.tree_util.tree_map_with_path(spec, params)
+        return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+
+    def cache_shardings(self, cache, mesh: Mesh):
+        def spec(path_tuple, leaf):
+            # [L, B, ...]: batch over 'dp'
+            s = [None] * leaf.ndim
+            if leaf.ndim >= 2 and leaf.shape[1] % mesh.shape["dp"] == 0:
+                s[1] = "dp"
+            return P(*s)
+        specs = jax.tree_util.tree_map_with_path(spec, cache)
+        return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+
+    # ----------------------------------------------------------------- boot
+    def boot(self, cfg: ElasticConfig) -> TransferStats:
+        """First boot: 'disk load' = host init + device_put (counted as disk
+        bytes by the caller's cost model)."""
+        from repro.models.model import init_cache, init_params
+        t0 = time.perf_counter()
+        assert cfg.tp == self.tp
+        mesh = make_instance_mesh(cfg, self.all_devices)
+        params = init_params(self.mcfg, jax.random.PRNGKey(self.seed),
+                             jnp.dtype(self.mcfg.dtype))
+        shardings = self.param_shardings(params, mesh)
+        self.params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), params, shardings)
+        cache = init_cache(self.mcfg, cfg.dp * self.batch_per_replica,
+                           self.max_len)
+        cshard = self.cache_shardings(cache, mesh)
+        self.cache = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                                  cache, cshard)
+        self.active_cfg = cfg
+        if self.page_table is not None and not self.page_table.active:
+            self.page_table.initial_place(cfg)
+        st = TransferStats(wall_s=time.perf_counter() - t0)
+        self.last_stats = st
+        return st
+
+    # ---------------------------------------------------------------- scale
+    def scale(self, new_cfg: ElasticConfig) -> TransferStats:
+        """Stage the new configuration's *weights* while the old instance
+        keeps serving (the expensive, concurrent part: zero-copy reuse +
+        P2P transfers + expert-page remap).  KV-cache growth is deferred to
+        ``commit`` — the cache keeps being written by the live instance and,
+        per the paper (§5.2), is handed over *shared*, never copied.
+
+        Returns transfer stats; staged params are attached by the IMM via
+        ``attach_staged`` and made active by ``commit``."""
+        assert self.active_cfg is not None
+        assert new_cfg.tp == self.tp, "TP is fixed during scaling (§4.1)"
+        t0 = time.perf_counter()
+        stats = TransferStats()
+        mesh = make_instance_mesh(new_cfg, self.all_devices)
+        shardings = self.param_shardings(self.params, mesh)
+
+        def reshard(path_tuple, leaf, sh):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path_tuple)
+            import re
+            expert_dim = None
+            if re.search(r"moe/w[igo]$", path):
+                stacked = 1 if "blocks/" in path else 0
+                expert_dim = stacked  # regroup experts at page granularity
+            return reshard_with_reuse(leaf, sh, stats, expert_dim=expert_dim)
+
+        new_params = jax.tree_util.tree_map_with_path(
+            reshard, self.params, shardings)
+
+        migrations = []
+        if self.page_table is not None:
+            migrations = self.page_table.stage_remap(new_cfg)
+        self.staged = (new_cfg, mesh, new_params)
+        stats.wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return stats
+
+    def _grow_cache(self, new_cfg: ElasticConfig, mesh: Mesh,
+                    stats: TransferStats):
+        """Reuse surviving replicas' KV shards; zero-init new replicas."""
+        from repro.models.model import init_cache
+        old_cfg = self.active_cfg
+        new_batch = new_cfg.dp * self.batch_per_replica
+        template = jax.eval_shape(
+            lambda: init_cache(self.mcfg, new_batch, self.max_len))
+        cshard = self.cache_shardings(template, mesh)
+
+        def grow(old_leaf, tmpl, sh):
+            shape = tmpl.shape
+            target = sh.devices_indices_map(shape)
+            old_by_idx = {}
+            for s in old_leaf.addressable_shards:
+                old_by_idx.setdefault(_idx_key(s.index), []).append(
+                    (s.device, s.data))
+            out = []
+            for dev in sh.addressable_devices:
+                key = _idx_key(target[dev])
+                holders = old_by_idx.get(key, [])
+                same = [h for h in holders if h[0] == dev]
+                if same and same[0][1].shape == tuple(
+                        (i.stop or shape[n]) - (i.start or 0)
+                        for n, i in enumerate(target[dev])):
+                    data = same[0][1]
+                    stats.zero_copy_bytes += data.nbytes
+                    stats.zero_copy_count += 1
+                else:
+                    shard_shape = tuple(
+                        (i.stop if i.stop is not None else shape[n])
+                        - (i.start or 0)
+                        for n, i in enumerate(target[dev]))
+                    data = jax.device_put(
+                        jnp.zeros(shard_shape, tmpl.dtype), dev)
+                    stats.init_bytes += data.nbytes
+                out.append(data)
+            return jax.make_array_from_single_device_arrays(shape, sh, out)
+
+        return jax.tree.map(grow, self.cache, template, cshard)
+
+    # --------------------------------------------------------------- attach
+    def attach_staged(self):
+        """Zero-copy handles for the staged instance (IMM open_tensor)."""
+        assert self.staged is not None
+        new_cfg, mesh, params = self.staged
+        return new_cfg, mesh, params, self.cache
+
+    def attach_active(self):
+        return (self.active_cfg,
+                make_instance_mesh(self.active_cfg, self.all_devices),
+                self.params, self.cache)
+
+    def commit(self, live_cache=None) -> TransferStats:
+        """Switchover: staged weights become active, and the *live* KV cache
+        (surviving slots' buffers reused as-is, new slots zero-init) is grown
+        to the new slot count.  Old-only buffers become unreferenced — the
+        paper's deferred FREE."""
+        assert self.staged is not None
+        new_cfg, mesh, params = self.staged
+        stats = TransferStats()
+        t0 = time.perf_counter()
+        if live_cache is not None:
+            self.cache = live_cache
+        self.cache = self._grow_cache(new_cfg, mesh, stats)
+        self.active_cfg = new_cfg
+        self.params = params
+        self.staged = None
+        if self.page_table is not None and self.page_table.staged is not None:
+            self.page_table.commit()
+        stats.wall_s = time.perf_counter() - t0
+        if self.last_stats is not None:
+            self.last_stats.merge(stats)
+        return stats
+
+    def abort(self):
+        self.staged = None
+        if self.page_table is not None:
+            self.page_table.abort()
+
+    def update_cache(self, cache):
+        """The active instance writes back its KV state after each step."""
+        self.cache = cache
+
+    # ------------------------------------------------------------- metrics
+    def resident_bytes_per_device(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        seen = set()
+        for tree in (self.params, self.cache):
+            if tree is None:
+                continue
+            for leaf in jax.tree.leaves(tree):
+                for sh in leaf.addressable_shards:
+                    ptr = sh.data.unsafe_buffer_pointer()
+                    if ptr in seen:
+                        continue  # aliased buffer counted once
+                    seen.add(ptr)
+                    out[sh.device.id] += sh.data.nbytes
+        return dict(out)

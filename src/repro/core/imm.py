@@ -1,0 +1,114 @@
+"""Inference Management Module (paper §4.5).
+
+Keeps an LRU cache of *pre-initialized* inference instances.  In the paper a
+standby instance is a CPU-resident vLLM process that has done every one-time
+setup except binding weights; the JAX analogue of that expensive boot step is
+AOT compilation of the instance's step functions for its (mesh, shapes) —
+so a standby instance here is a set of compiled executables with **no
+weights attached** (built purely from ShapeDtypeStructs).
+
+``activate`` binds a standby instance to the HMM's zero-copy array handles —
+a metadata-only operation (the ZeroCopyLoader replacing vLLM's DiskLoader).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.hmm import HMM, make_instance_mesh
+from repro.core.topology import ElasticConfig
+from repro.serving.engine import as_sds, compile_step_functions
+
+
+@dataclasses.dataclass
+class StandbyInstance:
+    cfg: ElasticConfig
+    mesh: Any
+    compiled: Dict[str, Any]
+    compile_s: float
+    activations: int = 0
+
+
+class IMM:
+    def __init__(self, mcfg: ModelConfig, hmm: HMM, *,
+                 batch_per_replica: int, max_len: int,
+                 prefill_buckets=(64,), lru_capacity: int = 4):
+        self.mcfg = mcfg
+        self.hmm = hmm
+        self.batch_per_replica = batch_per_replica
+        self.max_len = max_len
+        self.prefill_buckets = tuple(prefill_buckets)
+        self.lru_capacity = lru_capacity
+        self._cache: "OrderedDict[Tuple, StandbyInstance]" = OrderedDict()
+        self.stats = {"preinit_hits": 0, "preinit_misses": 0,
+                      "compile_s_total": 0.0}
+
+    def _key(self, cfg: ElasticConfig) -> Tuple:
+        return (cfg.dp, cfg.tp, cfg.devices)
+
+    # ------------------------------------------------------------ pre-init
+    def preinitialize(self, cfg: ElasticConfig) -> StandbyInstance:
+        """Build (or fetch) a standby instance for ``cfg`` — compile only,
+        no weights.  Corresponds to IMM pre-initialization (§4.5)."""
+        key = self._key(cfg)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        mesh = make_instance_mesh(cfg, self.hmm.all_devices)
+        params_sds, cache_sds = self._shape_templates(cfg, mesh)
+        compiled, dt = compile_step_functions(
+            self.mcfg, cfg, mesh, params_sds, cache_sds,
+            batch_per_replica=self.batch_per_replica, max_len=self.max_len,
+            prefill_buckets=self.prefill_buckets)
+        inst = StandbyInstance(cfg, mesh, compiled, dt)
+        self._cache[key] = inst
+        self.stats["compile_s_total"] += dt
+        while len(self._cache) > self.lru_capacity:
+            self._cache.popitem(last=False)
+        return inst
+
+    def _shape_templates(self, cfg: ElasticConfig, mesh):
+        """Sharded ShapeDtypeStructs for params+cache — no allocation."""
+        import jax.numpy as jnp
+        from repro.models.model import init_cache, init_params
+
+        params_shape = jax.eval_shape(
+            lambda: init_params(self.mcfg, jax.random.PRNGKey(0),
+                                jnp.dtype(self.mcfg.dtype)))
+        pshard = self.hmm.param_shardings(params_shape, mesh)
+        params_sds = jax.tree.map(
+            lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+            params_shape, pshard)
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(self.mcfg,
+                               cfg.dp * self.batch_per_replica, self.max_len))
+        cshard = self.hmm.cache_shardings(cache_shape, mesh)
+        cache_sds = jax.tree.map(
+            lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+            cache_shape, cshard)
+        return params_sds, cache_sds
+
+    # ------------------------------------------------------------ activate
+    def activate(self, cfg: ElasticConfig, staged: bool = False):
+        """Attach a standby instance to HMM memory (zero-copy).  Returns
+        (instance, params, cache, was_preinitialized)."""
+        key = self._key(cfg)
+        hit = key in self._cache
+        if hit:
+            self.stats["preinit_hits"] += 1
+        else:
+            self.stats["preinit_misses"] += 1
+        inst = self.preinitialize(cfg)
+        inst.activations += 1
+        if staged:
+            scfg, _, params, cache = self.hmm.attach_staged()
+            assert self._key(scfg) == key
+        else:
+            acfg, _, params, cache = self.hmm.attach_active()
+            assert self._key(acfg) == key
+        return inst, params, cache, hit

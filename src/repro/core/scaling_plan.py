@@ -1,0 +1,260 @@
+"""Minimal-cost scaling plans (paper §4.4, Fig. 6).
+
+Given (old ElasticConfig | None, new ElasticConfig) and the model's logical
+tensors, produce a per-shard plan with one of:
+
+* ``ZERO_COPY`` — the device already holds the bytes; the new instance maps
+  them via a reference handle (Ascend IPC in the paper; buffer aliasing via
+  ``make_array_from_single_device_arrays`` here).
+* ``P2P``       — copy from a device that holds identical bytes, over the
+  fast fabric (HCCL isend/irecv there; ``jax.device_put`` here).
+* ``DISK``      — load from storage (only at first boot, or in baselines).
+* ``INIT``      — fresh allocation of *state* (KV cache on new devices).
+* ``FREE``      — release after switchover (scale-down / migrated experts).
+
+The planner's objective (paper: "maximize zero-copy reuse, minimize the
+relatively slower P2P transfers") falls out of the fixed-TP design: every
+shard that exists anywhere is preferred zero-copy > p2p > disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.topology import ElasticConfig, TensorDesc, expert_owner
+
+
+class Op(enum.Enum):
+    ZERO_COPY = "zero_copy"
+    P2P = "p2p"
+    DISK = "disk"
+    INIT = "init"
+    FREE = "free"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardKey:
+    """Identifies shard *content* (not placement)."""
+    tensor: str
+    part: int        # tp_rank for 'tp', 0 for replicated/expert, dp_rank for kv
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    op: Op
+    key: ShardKey
+    nbytes: int
+    dst: int                    # device id
+    src: Optional[int] = None   # device id for P2P
+
+
+@dataclasses.dataclass
+class ScalingPlan:
+    steps: List[PlanStep]
+    old: Optional[ElasticConfig]
+    new: ElasticConfig
+
+    def bytes_by_op(self) -> Dict[Op, int]:
+        out: Dict[Op, int] = defaultdict(int)
+        for s in self.steps:
+            out[s.op] += s.nbytes
+        return dict(out)
+
+    def count_by_op(self) -> Dict[Op, int]:
+        out: Dict[Op, int] = defaultdict(int)
+        for s in self.steps:
+            out[s.op] += 1
+        return dict(out)
+
+    def p2p_in_bytes_per_device(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        for s in self.steps:
+            if s.op == Op.P2P:
+                out[s.dst] += s.nbytes
+        return dict(out)
+
+    def p2p_out_bytes_per_device(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        for s in self.steps:
+            if s.op == Op.P2P and s.src is not None:
+                out[s.src] += s.nbytes
+        return dict(out)
+
+    def disk_bytes_per_device(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        for s in self.steps:
+            if s.op == Op.DISK:
+                out[s.dst] += s.nbytes
+        return dict(out)
+
+
+# ---------------------------------------------------------------- placement
+
+def placement(tensors: Sequence[TensorDesc],
+              cfg: ElasticConfig,
+              expert_assignment: Optional[Dict[Tuple[int, int], int]] = None
+              ) -> Dict[int, Dict[ShardKey, int]]:
+    """device -> {shard_key -> nbytes} under ``cfg``.
+
+    ``expert_assignment``: optional {(layer, expert) -> device} from the
+    virtual page table (min-move placement); defaults to the contiguous
+    ``expert_owner`` layout the dense-array execution path uses."""
+    num_experts = 1 + max((t.expert for t in tensors if t.kind == "expert"),
+                          default=0)
+    out: Dict[int, Dict[ShardKey, int]] = {d: {} for d in cfg.devices}
+    for t in tensors:
+        if t.kind == "replicated":
+            for d in cfg.devices:
+                out[d][ShardKey(t.name, 0)] = t.nbytes
+        elif t.kind == "tp":
+            for d in cfg.devices:
+                out[d][ShardKey(t.name, cfg.tp_rank(d))] = t.nbytes
+        elif t.kind == "expert":
+            if expert_assignment is not None:
+                d = expert_assignment[(t.layer, t.expert)]
+            else:
+                d = expert_owner(t.expert, num_experts, cfg)
+            out[d][ShardKey(t.name, 0)] = t.nbytes
+        elif t.kind == "kv":
+            for d in cfg.devices:
+                out[d][ShardKey(t.name, cfg.dp_rank(d) * cfg.tp
+                                + cfg.tp_rank(d))] = t.nbytes
+        else:
+            raise ValueError(t.kind)
+    return out
+
+
+# ------------------------------------------------------------------ planner
+
+def plan_elastic(tensors: Sequence[TensorDesc],
+                 old: Optional[ElasticConfig],
+                 new: ElasticConfig,
+                 expert_assignment_old=None,
+                 expert_assignment_new=None) -> ScalingPlan:
+    """ElasticMoE's planner: zero-copy > P2P > disk; KV reused or INIT'd.
+
+    Pass page-table assignments (min-move) for the paper-faithful expert
+    remap; default is the contiguous layout of the dense execution path."""
+    assert old is None or old.tp == new.tp, \
+        "ElasticMoE scales via DP/EP only; TP is fixed (paper §4.1)"
+    new_place = placement(tensors, new, expert_assignment_new)
+    old_place = placement(tensors, old, expert_assignment_old) if old else {}
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+
+    # content -> devices holding it under the old config
+    holders: Dict[ShardKey, List[int]] = defaultdict(list)
+    for d, shards in old_place.items():
+        for key in shards:
+            holders[key].append(d)
+
+    steps: List[PlanStep] = []
+    rr: Dict[ShardKey, int] = defaultdict(int)  # round-robin source pick
+    for d, shards in new_place.items():
+        for key, nbytes in shards.items():
+            if d in old_place and key in old_place[d]:
+                steps.append(PlanStep(Op.ZERO_COPY, key, nbytes, dst=d))
+            elif key.tensor in kv_names:
+                steps.append(PlanStep(Op.INIT, key, nbytes, dst=d))
+            elif holders.get(key):
+                srcs = holders[key]
+                src = srcs[rr[key] % len(srcs)]
+                rr[key] += 1
+                steps.append(PlanStep(Op.P2P, key, nbytes, dst=d, src=src))
+            else:
+                steps.append(PlanStep(Op.DISK, key, nbytes, dst=d))
+
+    # frees: anything held before but not needed after (applied post-switch)
+    for d, shards in old_place.items():
+        for key, nbytes in shards.items():
+            if d not in new_place or key not in new_place[d]:
+                steps.append(PlanStep(Op.FREE, key, nbytes, dst=d))
+    return ScalingPlan(steps, old, new)
+
+
+# ------------------------------------------------------- baseline strategies
+
+def plan_cold_restart(tensors, old, new) -> ScalingPlan:
+    """Tear down, then disk-load everything (downtime = full boot)."""
+    steps: List[PlanStep] = []
+    if old:
+        for d, shards in placement(tensors, old).items():
+            for key, nbytes in shards.items():
+                steps.append(PlanStep(Op.FREE, key, nbytes, dst=d))
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+    for d, shards in placement(tensors, new).items():
+        for key, nbytes in shards.items():
+            op = Op.INIT if key.tensor in kv_names else Op.DISK
+            steps.append(PlanStep(op, key, nbytes, dst=d))
+    return ScalingPlan(steps, old, new)
+
+
+def plan_extravagant(tensors, old, new) -> ScalingPlan:
+    """New instance on *fresh* devices, old keeps running until ready.
+
+    ``new.devices`` must be disjoint from ``old.devices``."""
+    assert old is None or not set(old.devices) & set(new.devices)
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+    steps: List[PlanStep] = []
+    for d, shards in placement(tensors, new).items():
+        for key, nbytes in shards.items():
+            op = Op.INIT if key.tensor in kv_names else Op.DISK
+            steps.append(PlanStep(op, key, nbytes, dst=d))
+    if old:
+        for d, shards in placement(tensors, old).items():
+            for key, nbytes in shards.items():
+                steps.append(PlanStep(Op.FREE, key, nbytes, dst=d))
+    return ScalingPlan(steps, old, new)
+
+
+def plan_colocated(tensors, old, new) -> ScalingPlan:
+    """New instance disk-loads onto (a superset of) the same devices while
+    the old copy stays resident -> double weights on shared devices."""
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+    steps: List[PlanStep] = []
+    for d, shards in placement(tensors, new).items():
+        for key, nbytes in shards.items():
+            op = Op.INIT if key.tensor in kv_names else Op.DISK
+            steps.append(PlanStep(op, key, nbytes, dst=d))
+    if old:
+        for d, shards in placement(tensors, old).items():
+            for key, nbytes in shards.items():
+                steps.append(PlanStep(Op.FREE, key, nbytes, dst=d))
+    return ScalingPlan(steps, old, new)
+
+
+def plan_horizontal(tensors, old, new_replica: ElasticConfig) -> ScalingPlan:
+    """Add an independent full replica on fresh devices (old untouched)."""
+    assert old is None or not set(old.devices) & set(new_replica.devices)
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+    steps = []
+    for d, shards in placement(tensors, new_replica).items():
+        for key, nbytes in shards.items():
+            op = Op.INIT if key.tensor in kv_names else Op.DISK
+            steps.append(PlanStep(op, key, nbytes, dst=d))
+    return ScalingPlan(steps, old, new_replica)
+
+
+STRATEGIES = {
+    "elastic": plan_elastic,
+    "cold_restart": plan_cold_restart,
+    "extravagant": plan_extravagant,
+    "colocated": plan_colocated,
+    "horizontal": plan_horizontal,
+}
+
+
+def plan_elastic_paged(tensors, old, new, page_table,
+                       first_k_dense: int = 0) -> ScalingPlan:
+    """Paper-faithful elastic plan using the virtual page table's min-move
+    expert placement.  Stages the remap on ``page_table`` (caller commits or
+    aborts after executing the plan)."""
+    a_old = {(l + first_k_dense, e): ref.device
+             for (l, e), ref in page_table.active.items()}
+    page_table.stage_remap(new)
+    a_new = {(l + first_k_dense, e): ref.device
+             for (l, e), ref in page_table.staged.items()}
+    return plan_elastic(tensors, old, new,
+                        expert_assignment_old=a_old,
+                        expert_assignment_new=a_new)

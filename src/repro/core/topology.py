@@ -1,0 +1,167 @@
+"""Elastic instance topology: DP-TP-EP configurations and the logical-tensor
+model description the HMM plans over.
+
+Follows the paper's conventions (§2.1, §4.1):
+* an inference instance runs on ``dp * tp`` accelerators,
+* attention/dense weights are TP-sharded (``tp_rank = slot % tp``) and
+  replicated across DP replicas,
+* experts are EP-distributed with ``ep = dp * tp`` (one expert shard per
+  device) — scaling changes DP and EP while **TP stays fixed** (§4.1),
+* the KV cache is per-DP-replica state, TP-sharded within a replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """One serving configuration: which devices, and how they're organized."""
+    dp: int
+    tp: int
+    devices: Tuple[int, ...]           # global device ids, slot order
+
+    def __post_init__(self):
+        assert len(self.devices) == self.dp * self.tp, \
+            f"{self.dp}x{self.tp} != {len(self.devices)} devices"
+
+    @property
+    def ep(self) -> int:
+        return self.dp * self.tp       # paper's EP = TP x DP convention
+
+    @property
+    def ndev(self) -> int:
+        return len(self.devices)
+
+    def slot(self, device: int) -> int:
+        return self.devices.index(device)
+
+    def tp_rank(self, device: int) -> int:
+        return self.slot(device) % self.tp
+
+    def dp_rank(self, device: int) -> int:
+        return self.slot(device) // self.tp
+
+    def ep_rank(self, device: int) -> int:
+        return self.slot(device)       # one EP rank per device
+
+    def describe(self) -> str:
+        return f"DP{self.dp}-TP{self.tp}-EP{self.ep}@{list(self.devices)}"
+
+
+# ----------------------------------------------------------- logical tensors
+
+@dataclasses.dataclass(frozen=True)
+class TensorDesc:
+    """One logical tensor the HMM manages.
+
+    kind:
+      'replicated' — identical on every device (norms, routers, embeddings
+                     when small; here: anything not TP-sharded),
+      'tp'         — sharded over TP ranks; DP replicas hold identical shards,
+      'expert'     — one expert's weight page; owned by exactly one EP rank,
+      'kv'         — KV-cache block of one DP replica (TP-sharded);
+                     *state*, not weights: preserved on shared devices,
+                     freshly initialized on new ones.
+    """
+    name: str
+    kind: str
+    nbytes: int                        # per-shard bytes (after TP split)
+    layer: int = -1
+    expert: int = -1
+
+
+def expert_owner(expert: int, num_experts: int, cfg: ElasticConfig) -> int:
+    """Device owning ``expert`` under round-robin-contiguous EP placement."""
+    per = math.ceil(num_experts / cfg.ep)
+    rank = min(expert // per, cfg.ep - 1)
+    return cfg.devices[rank]
+
+
+def model_tensors(mcfg: ModelConfig, tp: int,
+                  kv_bytes_per_replica: int = 0) -> List[TensorDesc]:
+    """Flatten a ModelConfig into the logical tensors the HMM plans over.
+
+    Sizes are *per TP shard* for 'tp' tensors.  Expert pages are per
+    (layer, expert) — the granularity of vpage-remap migration.
+    """
+    bpe = 2 if mcfg.dtype == "bfloat16" else 4
+    D = mcfg.d_model
+    out: List[TensorDesc] = []
+    out.append(TensorDesc("embed", "tp",
+                          mcfg.vocab_size * D * bpe // tp))
+    out.append(TensorDesc("lm_head", "tp",
+                          mcfg.vocab_size * D * bpe // tp))
+
+    H, KVH, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
+    for l in range(mcfg.num_layers):
+        if mcfg.arch_type not in ("ssm",):
+            if mcfg.use_mla:
+                r = mcfg.kv_lora_rank
+                qk = mcfg.qk_nope_dim + mcfg.qk_rope_dim
+                attn = (D * H * qk + D * (r + mcfg.qk_rope_dim)
+                        + r * H * (mcfg.qk_nope_dim + mcfg.v_head_dim)
+                        + H * mcfg.v_head_dim * D)
+            else:
+                attn = D * H * hd + 2 * D * KVH * hd + H * hd * D
+            out.append(TensorDesc(f"layer{l}/attn", "tp", attn * bpe // tp,
+                                  layer=l))
+        ff_mult = 3 if mcfg.mlp_gated else 2
+        if mcfg.is_moe and l >= mcfg.first_k_dense:
+            page = ff_mult * D * mcfg.moe_d_ff * bpe // tp
+            for e in range(mcfg.num_experts):
+                out.append(TensorDesc(f"layer{l}/expert{e}", "expert", page,
+                                      layer=l, expert=e))
+            if mcfg.num_shared_experts:
+                out.append(TensorDesc(
+                    f"layer{l}/shared_experts", "tp",
+                    mcfg.num_shared_experts * ff_mult * D * mcfg.moe_d_ff
+                    * bpe // tp, layer=l))
+            if mcfg.dense_residual and mcfg.d_ff:
+                out.append(TensorDesc(f"layer{l}/dense_mlp", "tp",
+                                      ff_mult * D * mcfg.d_ff * bpe // tp,
+                                      layer=l))
+            out.append(TensorDesc(f"layer{l}/router", "replicated",
+                                  D * mcfg.num_experts * 4, layer=l))
+        elif mcfg.d_ff:
+            out.append(TensorDesc(f"layer{l}/mlp", "tp",
+                                  ff_mult * D * mcfg.d_ff * bpe // tp,
+                                  layer=l))
+        if mcfg.arch_type in ("ssm", "hybrid"):
+            di, N = mcfg.d_inner, mcfg.ssm_state
+            ssm = D * (2 * di + 2 * N + mcfg.ssm_heads) + di * mcfg.ssm_conv \
+                + di * D
+            out.append(TensorDesc(f"layer{l}/ssm", "tp", ssm * bpe // tp,
+                                  layer=l))
+        out.append(TensorDesc(f"layer{l}/norms", "replicated", 2 * D * bpe,
+                              layer=l))
+    if kv_bytes_per_replica:
+        for l in range(mcfg.num_layers):
+            out.append(TensorDesc(f"layer{l}/kv", "kv",
+                                  kv_bytes_per_replica
+                                  // mcfg.num_layers // tp, layer=l))
+    return out
+
+
+def kv_cache_bytes(mcfg: ModelConfig, batch: int, max_len: int) -> int:
+    """Total KV/state bytes of ONE DP replica (all layers, before TP split)."""
+    bpe = 2 if mcfg.dtype == "bfloat16" else 4
+    L = mcfg.num_layers
+    if mcfg.arch_type in ("ssm", "hybrid"):
+        di, N = mcfg.d_inner, mcfg.ssm_state
+        n = L * batch * ((mcfg.ssm_conv - 1) * (di + 2 * N) * bpe
+                         + mcfg.ssm_heads * N * mcfg.ssm_head_dim * 4)
+        if mcfg.arch_type == "hybrid":
+            ng = L // mcfg.attn_every
+            n += ng * batch * max_len * 2 * mcfg.num_kv_heads \
+                * mcfg.resolved_head_dim * bpe
+        return n
+    if mcfg.use_mla:
+        return L * batch * max_len * (mcfg.kv_lora_rank
+                                      + mcfg.qk_rope_dim) * bpe
+    return L * batch * max_len * 2 * mcfg.num_kv_heads \
+        * mcfg.resolved_head_dim * bpe

@@ -1,0 +1,209 @@
+"""Sharding rules: map parameter/activation pytrees onto the production mesh.
+
+Parallelism mapping (DESIGN.md §5):
+* TP  -> ``model`` axis: attention heads, MLP hidden, vocab.
+* DP  -> ``data`` (+ ``pod``) axes: batch.
+* EP  -> experts over ``data``; expert hidden over ``model``
+         (the ``moe_ep`` shard_map path consumes exactly these specs).
+
+Rules are name-based over flattened tree paths — the same convention MaxText
+uses (logical axis rules), collapsed to the two-three physical axes we have.
+A dim is only sharded if its size divides the axis size; otherwise it is
+replicated (e.g. GQA kv-head projections with 2 kv heads stay replicated on a
+16-way model axis — the TP-correct choice for MQA/GQA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """How the model maps onto a mesh (passed down to MoE/attention code).
+
+    * production mesh: axes ('pod','data','model') or ('data','model');
+      ep_axes=('pod','data'), tp_axis='model', moe_tp=True.
+    * elastic engine mesh: axes ('dp','tp'); ep_axes=('dp','tp'),
+      tp_axis='tp', moe_tp=False (expert FFN dim unsharded — EP spans all
+      devices, matching the paper's EP = DP x TP convention).
+    """
+    mesh: Mesh
+    ep_axes: Tuple[str, ...] = ("pod", "data")
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    moe_tp: bool = True
+    moe_dispatch: str = "expert_slots"   # or "packed" (decode optimization)
+
+    @property
+    def num_ep(self) -> int:
+        n = 1
+        for a in self.ep_axes:
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def act_spec(mesh: Mesh) -> P:
+    """[B, S, D] activations: batch over dp axes, rest replicated."""
+    return P(dp_axes(mesh), None, None)
+
+
+def _axis_size(mesh, name):
+    return mesh.shape.get(name, 1)
+
+
+# (regex on the '/'-joined tree path, per-dim logical axes)
+# logical axes: 'model' (TP), 'expert' (EP -> data), None (replicated)
+_RULES = [
+    # --- MoE expert banks: [E, D, F] / [E, F, D]
+    (r"moe/wi$",  ("expert", None, "model")),
+    (r"moe/wg$",  ("expert", None, "model")),
+    (r"moe/wo$",  ("expert", "model", None)),
+    (r"moe/router/w$", (None, None)),
+    # --- attention projections
+    (r"attn/q/w$", (None, "model")),
+    (r"attn/q/b$", ("model",)),
+    (r"attn/q_up/w$", (None, "model")),
+    (r"attn/(k|v)/w$", (None, "model_kv")),
+    (r"attn/(k|v)/b$", ("model_kv",)),
+    (r"attn/o/w$", ("model", None)),
+    (r"attn/k_up/w$", (None, "model")),
+    (r"attn/v_up/w$", (None, "model")),
+    (r"xattn/q/w$", (None, "model")),
+    (r"xattn/(k|v)/w$", (None, "model_kv")),
+    (r"xattn/o/w$", ("model", None)),
+    # --- MLPs (dense, shared experts): [D, F] / [F, D]
+    (r"(mlp|shared)/(up|gate)/w$", (None, "model")),
+    (r"(mlp|shared)/(up|gate)/b$", ("model",)),
+    (r"(mlp|shared)/down/w$", ("model", None)),
+    # --- SSM: head-sharded over model
+    (r"ssm/in_proj/w$", (None, None)),
+    (r"ssm/out_proj/w$", (None, None)),
+    (r"ssm/(A_log|dt_bias|D_skip)$", ("model_h",)),
+    # --- embeddings / head
+    (r"embed$", ("model", None)),
+    (r"lm_head/w$", (None, "model")),
+]
+
+
+def _spec_for_path(path: str, shape, mesh: Mesh, stacked_dims: int,
+                   kv_heads: Optional[int] = None) -> P:
+    axes: Optional[tuple] = None
+    for pat, a in _RULES:
+        if re.search(pat, path):
+            axes = a
+            break
+    if axes is None:
+        return P()
+    out = [None] * len(shape)
+    base = stacked_dims  # leading scan-stacked dims stay replicated
+    for i, ax in enumerate(axes):
+        dim = base + i
+        if dim >= len(shape) or ax is None:
+            continue
+        size = shape[dim]
+        if ax == "model_kv" and kv_heads is not None                 and kv_heads % _axis_size(mesh, "model") != 0:
+            # GQA with few kv heads: sharding the flattened KVH*hd dim would
+            # split inside a head and force cache-wide all-gathers at every
+            # decode step (measured ~1 TB/step on chatglm3) — replicate.
+            continue
+        if ax in ("model", "model_kv", "model_h"):
+            m = _axis_size(mesh, "model")
+            if size % m == 0 and size >= m:
+                out[dim] = "model"
+        elif ax == "expert":
+            ep = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            e = 1
+            for a in ep:
+                e *= _axis_size(mesh, a)
+            if size % e == 0 and size >= e:
+                out[dim] = ep
+    return P(*out)
+
+
+def _n_stacked(path: str) -> int:
+    """How many leading dims of this leaf are scan-stacking dims."""
+    if re.search(r"(^|/)(blocks|cross_blocks)/", path):
+        return 1
+    return 0
+
+
+def param_specs(params, mesh: Mesh, kv_heads: Optional[int] = None):
+    """pytree of PartitionSpec, matched to ``params`` structure.
+
+    ``kv_heads``: pass cfg.num_kv_heads to enable head-aligned KV sharding
+    (replicates k/v projections when KVH doesn't divide the model axis —
+    the beyond-paper fix for GQA resharding storms; see EXPERIMENTS.md
+    §Perf iteration A)."""
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_tuple)
+        return _spec_for_path(path, leaf.shape, mesh, _n_stacked(path),
+                              kv_heads)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, kv_heads: Optional[int] = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, kv_heads))
+
+
+def cache_specs(cfg, cache, mesh: Mesh, kv_seq_shard: bool = False):
+    """Decode-cache sharding: batch over dp axes when divisible, else the KV
+    sequence dim over 'data' (long-context, batch=1); heads over 'model' when
+    divisible.
+
+    ``kv_seq_shard`` (beyond-paper, EXPERIMENTS.md §Perf iteration A2): when
+    the kv-head dim cannot shard over the model axis (GQA with few heads),
+    shard the KV *sequence* dim over 'model' instead — flash-decoding style.
+    GSPMD turns the softmax over the sharded seq dim into scalar-sized
+    all-reduces and the pv matmul into a partial-sum reduction, so each chip
+    reads S/16 of the cache instead of all of it."""
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model = _axis_size(mesh, "model")
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        shape = leaf.shape
+        # layout: [L, B, S|..., heads?, dim]
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % n_dp == 0 and shape[1] >= n_dp:
+            spec[1] = dp
+        elif len(shape) >= 3 and "state" not in path and "conv" not in path \
+                and shape[2] % n_dp == 0 and shape[2] >= n_dp:
+            spec[2] = dp      # shard KV sequence (batch too small)
+        # heads dim for k/v caches: [L,B,S,KVH,hd]
+        is_kv = bool(re.search(r"(attn_k|attn_v|^k$|^v$|/k$|/v$|img_k|img_v)",
+                               path)) and len(shape) == 5
+        # MLA latent cache [L,B,S,r] / rope-key cache [L,B,S,dr]
+        is_mla = bool(re.search(r"(^|/)(c|kr)$", path)) and len(shape) == 4
+        if is_kv and shape[3] % model == 0 and shape[3] >= model:
+            spec[3] = "model"
+        elif (is_kv or is_mla) and kv_seq_shard and spec[2] is None \
+                and shape[2] % model == 0 and shape[2] >= model:
+            spec[2] = "model"  # flash-decoding seq sharding
+        if "state" in path and len(shape) == 5 and shape[2] % model == 0:
+            spec[2] = "model"  # SSM state heads
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def cache_shardings(cfg, cache, mesh: Mesh, kv_seq_shard: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cfg, cache, mesh, kv_seq_shard))

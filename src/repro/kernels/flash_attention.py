@@ -1,0 +1,107 @@
+"""Blocked (flash-style) causal attention for prefill (Pallas TPU).
+
+Grid (B*H, n_q, n_k) with the kv dimension innermost-sequential; running
+max / sum / accumulator live in VMEM scratch and the output tile is written
+on the final kv step.  Causal masking skips fully-masked tiles via
+``pl.when``.  GQA is handled by mapping q-head -> kv-head in the index map.
+
+Block shapes default to (128, head_dim) — MXU-aligned for hd in
+{64, 80, 128}; VMEM = bq*hd + 2*bk*hd + bq*bk + scratch << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, block_q, block_k, n_k, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        run = qi * block_q + block_q - 1 >= ki * block_k  # any unmasked?
+
+    @pl.when(jnp.asarray(run))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q [B,S,H,hd]; k/v [B,S,KVH,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    n_q, n_k = S // bq, S // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_q=bq, block_k=bk,
+                          n_k=n_k, causal=causal),
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

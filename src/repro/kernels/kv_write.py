@@ -1,0 +1,65 @@
+"""In-place ragged KV-cache write (Pallas TPU, input/output aliasing).
+
+EXPERIMENTS.md §Perf iteration 0 found that the XLA:CPU lowering of the
+per-sequence cache write (`cache.at[b, pos[b]].set(...)`) materializes an
+f32 round-trip copy of the whole cache.  On TPU the correct primitive is an
+*aliased* kernel: ``input_output_aliases={1: 0}`` makes the output buffer
+the cache buffer itself, and the grid touches exactly one (sequence, block)
+tile per batch row — the rest of the cache is never read or written.
+
+The write position arrives via scalar prefetch so the BlockSpec index_map
+selects the single block containing ``pos[b]``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, new_ref, cache_ref, out_ref, *, block_s):
+    b = pl.program_id(0)
+    off = pos_ref[b] % block_s
+    # copy-through then overwrite one row: the block is both read & written,
+    # everything outside this block is untouched (aliased buffer)
+    block = cache_ref[0]
+    row = new_ref[0].astype(out_ref.dtype)              # [KVH, hd]
+    upd = jax.lax.dynamic_update_slice(
+        block, row[None], (off, 0, 0))
+    out_ref[0] = upd
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"),
+                   donate_argnums=(0,))
+def kv_cache_write(cache: jax.Array, new_kv: jax.Array, pos: jax.Array, *,
+                   block_s: int = 128, interpret: bool = False) -> jax.Array:
+    """cache [B,S,KVH,hd]; new_kv [B,KVH,hd]; pos [B] -> updated cache.
+
+    Writes ``new_kv[b]`` at ``cache[b, pos[b]]`` touching one S-block per
+    sequence; the cache buffer is donated + aliased (true in-place on TPU).
+    """
+    B, S, KVH, hd = cache.shape
+    bs = min(block_s, S)
+    assert S % bs == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((1, KVH, hd), lambda b, pos: (b, 0, 0)),
+                pl.BlockSpec((1, bs, KVH, hd),
+                             lambda b, pos: (b, pos[b] // bs, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bs, KVH, hd),
+                                   lambda b, pos: (b, pos[b] // bs, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},   # flat inputs: (pos, new_kv, cache)
+                                       # -> cache (idx 2) aliases output 0
+        interpret=interpret,
+    )(pos, new_kv, cache)

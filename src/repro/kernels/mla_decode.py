@@ -1,0 +1,108 @@
+"""Absorbed MLA decode attention over the latent cache (Pallas TPU).
+
+The hot loop of DeepSeek-V2/V3 decode (the paper's primary models): one
+query token attends over the rank-``r`` latent cache
+
+    s_t   = q_eff . c_t + q_rope . kr_t          (scores)
+    ctx   = softmax(s) . C                        (latent readout)
+
+with q already *absorbed* through W_uk (models/mla.py) so per-step FLOPs
+scale with r, not H*(dn+dv).  Online softmax over sequence blocks with
+per-sequence valid-length masking via scalar prefetch — the same structure
+as kernels/paged_attention.py but contracting the shared latent instead of
+per-head K/V.  Output is the latent context [B, H, r]; the caller applies
+W_uv and o_proj (dense matmuls XLA already handles well).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref, qe_ref, qr_ref, c_ref, kr_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, block_k, n_k):
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+
+    @pl.when(ki * block_k < length)
+    def _step():
+        qe = qe_ref[0].astype(jnp.float32)          # [H, r]
+        qr = qr_ref[0].astype(jnp.float32)          # [H, dr]
+        c = c_ref[0].astype(jnp.float32)            # [bk, r]
+        kr = kr_ref[0].astype(jnp.float32)          # [bk, dr]
+        s = (jax.lax.dot_general(qe, c, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+             ) * scale                               # [H, bk]
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # [H, r]
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
+                         c_cache: jax.Array, kr_cache: jax.Array,
+                         lengths: jax.Array, *, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q_eff [B,H,r]; q_rope [B,H,dr]; c_cache [B,S,r]; kr_cache [B,S,dr];
+    lengths [B] -> latent context [B,H,r]."""
+    B, H, r = q_eff.shape
+    dr = q_rope.shape[-1]
+    S = c_cache.shape[1]
+    bk = min(block_k, S)
+    assert S % bk == 0
+    n_k = S // bk
+    dn = 0  # scale uses the full qk dim of the absorbed form
+    scale = 1.0 / math.sqrt(128 + dr) if r >= 128 else 1.0 / math.sqrt(r + dr)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=bk, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_k),
+            in_specs=[
+                pl.BlockSpec((1, H, r), lambda b, ki, L: (b, 0, 0)),
+                pl.BlockSpec((1, H, dr), lambda b, ki, L: (b, 0, 0)),
+                pl.BlockSpec((1, bk, r), lambda b, ki, L: (b, ki, 0)),
+                pl.BlockSpec((1, bk, dr), lambda b, ki, L: (b, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, r), lambda b, ki, L: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H, r), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, r), q_eff.dtype),
+        interpret=interpret,
+    )(lengths, q_eff, q_rope, c_cache, kr_cache)

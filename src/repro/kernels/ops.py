@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python, validating logic + BlockSpecs); on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gmm import paged_expert_ffn as _ffn
+from repro.kernels.moe_gmm import paged_gmm as _gmm
+from repro.kernels.paged_attention import paged_decode_attention as _paged
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
+    jax.default_backend() == "cpu"
+
+
+def paged_gmm(table, pool, x, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _gmm(table, pool, x, **kw)
+
+
+def paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x,
+                     **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _flash(q, k, v, **kw)
+
+
+def paged_decode_attention(q, k_cache, v_cache, lengths, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _paged(q, k_cache, v_cache, lengths, **kw)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _ssd(x, dt, A, Bm, Cm, **kw)
+
+
+def mla_decode_attention(q_eff, q_rope, c_cache, kr_cache, lengths, **kw):
+    from repro.kernels.mla_decode import mla_decode_attention as _mla
+    kw.setdefault("interpret", _INTERPRET)
+    return _mla(q_eff, q_rope, c_cache, kr_cache, lengths, **kw)
+
+
+def kv_cache_write(cache, new_kv, pos, **kw):
+    from repro.kernels.kv_write import kv_cache_write as _kvw
+    kw.setdefault("interpret", _INTERPRET)
+    return _kvw(cache, new_kv, pos, **kw)

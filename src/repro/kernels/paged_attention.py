@@ -1,0 +1,100 @@
+"""Decode attention over the (slot-contiguous) KV cache (Pallas TPU).
+
+One query token per sequence against a cache of up to ``S_max`` entries,
+masked by per-sequence valid length.  Lengths arrive via scalar prefetch so
+the kernel skips kv tiles entirely beyond a sequence's length — on real
+hardware this is the difference between O(S_max) and O(len) HBM traffic per
+step, which is what makes decode at 32k practical.
+
+Grid (B, KVH, n_k); q block [1, 1, G, hd] (the G=H/KVH grouped query heads
+of one kv head), kv blocks [1, bk, 1, hd]; online softmax in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, block_k, n_k):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+
+    @pl.when(ki * block_k < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def paged_decode_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, lengths: jax.Array, *,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q [B,H,hd]; k/v_cache [B,S_max,KVH,hd]; lengths [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    S_max, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    bk = min(block_k, S_max)
+    assert S_max % bk == 0
+    n_k = S_max // bk
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=bk, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KVH, n_k),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki, L: (b, ki, h, 0)),
+                pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki, L: (b, ki, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, ki, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

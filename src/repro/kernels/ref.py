@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_gmm_ref(table, pool, x):
+    """out[e] = x[e] @ pool[table[e]]."""
+    w = pool[table]                                   # [E_local, D, F]
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def paged_expert_ffn_ref(table_i, table_g, table_o, pool_i, pool_g, pool_o, x):
+    h = paged_gmm_ref(table_i, pool_i, x)
+    g = paged_gmm_ref(table_g, pool_g, x)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return paged_gmm_ref(table_o, pool_o, h)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q [B,S,H,hd]; k/v [B,S,KVH,hd]."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q [B,H,hd]; caches [B,S,KVH,hd]; lengths [B]."""
+    B, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    t = jnp.arange(S)[None, None, None]
+    s = jnp.where(t < lengths[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential (exact) SSD recurrence.  x [B,S,H,P], dt [B,S,H], A [H],
+    Bm/Cm [B,S,N] -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp            # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * A[None])   # [B,H]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bn,bhp,bh->bhnp", bt, xt.astype(jnp.float32), dtt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def mla_decode_attention_ref(q_eff, q_rope, c_cache, kr_cache, lengths):
+    """Absorbed MLA decode: q_eff [B,H,r], q_rope [B,H,dr],
+    c_cache [B,S,r], kr_cache [B,S,dr], lengths [B] -> [B,H,r]."""
+    r, dr = q_eff.shape[-1], q_rope.shape[-1]
+    qk_dim = (128 if r >= 128 else r) + dr
+    s = (jnp.einsum("bhr,btr->bht", q_eff.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) / math.sqrt(qk_dim)
+    t = jnp.arange(c_cache.shape[1])[None, None]
+    s = jnp.where(t < lengths[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p,
+                      c_cache.astype(jnp.float32)).astype(q_eff.dtype)
+
+
+def kv_cache_write_ref(cache, new_kv, pos):
+    b = jnp.arange(cache.shape[0])
+    return cache.at[b, pos].set(new_kv.astype(cache.dtype))

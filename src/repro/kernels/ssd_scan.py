@@ -1,0 +1,105 @@
+"""Mamba2 SSD chunk scan (Pallas TPU).
+
+TPU adaptation of the Triton SSD kernel (DESIGN.md §2): the chunk dimension
+is a *sequential* grid axis with the carried SSM state living in VMEM
+scratch across grid steps; the intra-chunk quadratic part is a pair of MXU
+matmuls.  One (batch, head) per grid row.
+
+Inputs per (b, h): x [S, P], dt [S], B/C [S, N], A scalar (via [H] array).
+Output y [S, P] plus the final state [N, P] (for decode handoff).
+
+Grid (B*H, n_chunks); chunk Q is the block; VMEM = O(Q*(N+P) + N*P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q]
+    A = a_ref[0].astype(jnp.float32)          # scalar (this head)
+    Bm = b_ref[0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [Q, N]
+
+    a = dt * A                                # [Q] log-decays
+    acs = jnp.cumsum(a)                       # inclusive
+    # off-diagonal: carried state decayed to each position
+    y_off = jax.lax.dot_general(
+        Cm, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(acs)[:, None]
+    # intra-chunk quadratic
+    seg = acs[:, None] - acs[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], x.shape[0]), 0)
+    kq = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], x.shape[0]), 1)
+    L = jnp.exp(jnp.where(iq >= kq, seg, -jnp.inf))
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L * dt[None, :]
+    y_diag = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_ref[0] = (y_off + y_diag).astype(y_ref.dtype)
+    # state update
+    decay_out = jnp.exp(acs[-1] - acs) * dt                  # [Q]
+    state_new = jax.lax.dot_general(
+        Bm * decay_out[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # [N, P]
+    state_ref[...] = state_ref[...] * jnp.exp(acs[-1]) + state_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _done():
+        state_out_ref[0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 64, interpret: bool = False):
+    """x [B,S,H,P]; dt [B,S,H]; A [H]; Bm/Cm [B,S,N]
+    -> (y [B,S,H,P] f32, final_state [B,H,N,P] f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xh = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dth = dt.transpose(0, 2, 1).reshape(B * H, S)
+    ah = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
+    bh = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    ch = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=Q, n_chunks=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, Q), lambda bh_, ci: (bh_, ci)),
+            pl.BlockSpec((1,), lambda bh_, ci: (bh_,)),
+            pl.BlockSpec((1, Q, N), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh_, ci: (bh_, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, N, P), lambda bh_, ci: (bh_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, ah, bh, ch)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, state.reshape(B, H, N, P)

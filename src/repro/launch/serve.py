@@ -1,0 +1,77 @@
+"""Elastic serving launcher:
+``python -m repro.launch.serve --arch <id> --devices 8 [--autoscale]``.
+
+Boots the ElasticServer on host devices with the reduced config, replays a
+bursty synthetic workload, and (optionally) lets the SLO-aware coordinator
+drive scale-up/scale-down across the device ladder.
+"""
+import os
+
+_N = int(os.environ.get("REPRO_SERVE_DEVICES", "8"))
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_N}"
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.coordinator import ScalingPolicy
+from repro.core.elastic_engine import ElasticServer
+from repro.core.topology import ElasticConfig
+from repro.serving.metrics import SLO, summarize
+from repro.serving.workload import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b",
+                    choices=sorted(ASSIGNED))
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--autoscale", action="store_true")
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = dataclasses.replace(get_config(args.arch + "-smoke"),
+                              capacity_factor=100.0)
+    if not cfg.has_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no serving decode")
+    if cfg.is_moe and cfg.num_experts % (2 * args.tp):
+        raise SystemExit("num_experts must divide the EP ladder")
+
+    slo = SLO(ttft_s=2.0, tpot_s=1.0)
+    policy = ScalingPolicy(slo=slo, window=8, cooldown_s=2.0,
+                           queue_scale_up=3) if args.autoscale else None
+    srv = ElasticServer(cfg, tp=args.tp, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), policy=policy, seed=0)
+    ladder = [ElasticConfig(dp=d, tp=args.tp,
+                            devices=tuple(range(args.tp * d)))
+              for d in (1, 2, 3, 4) if args.tp * d <= _N]
+    level = 1
+    srv.boot(ladder[level])
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.15 * i, 16, int(rng.integers(8, 20)),
+                    prompt=rng.integers(0, cfg.vocab_size, 16))
+            for i in range(args.requests)]
+    t, i = 0.0, 0
+    while any(r.finish_s is None for r in reqs):
+        while i < len(reqs) and reqs[i].arrival_s <= t:
+            srv.submit(reqs[i]); i += 1
+        if args.autoscale:
+            d = srv.autoscale_decision(t)
+            if d == "up" and level + 1 < len(ladder):
+                level += 1
+                srv.scale_to(ladder[level])
+                print(f"[t={t:.2f}] scaled up -> "
+                      f"{srv.hmm.active_cfg.describe()}")
+        srv.tick(t)
+        t += 0.05
+        if t > 300:
+            raise SystemExit("stalled")
+    print(summarize(reqs, slo))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the *reduced* (smoke) variant of the chosen
+architecture; on a real cluster the same step function is what the dry-run
+lowers for the production mesh.
+"""
+import argparse
+
+from repro.configs import ASSIGNED, get_config
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ASSIGNED))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (requires a real cluster)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch if args.full else args.arch + "-smoke")
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    out = train(cfg, steps=args.steps, batch=args.batch, seq_len=args.seq,
+                opt=AdamWConfig(lr=args.lr, total_steps=args.steps),
+                log_every=max(args.steps // 10, 1))
+    print(f"done: loss {out['history'][0][1]:.4f} -> "
+          f"{out['history'][-1][1]:.4f} in {out['wall_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Core transformer layers as pure functions over parameter pytrees.
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; init fns take an rng and return them.
+* activations: [B, S, D]; attention heads materialized as [B, S, H, hd].
+* KV caches: {'k': [B, S_max, KVH, hd], 'v': ...}; the valid length / write
+  index is passed explicitly (the serving engine owns it).
+* all matmuls accumulate in float32 (``preferred_element_type``) — bf16 params
+  with f32 accumulation is the TPU-native convention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- utils
+
+def dot(x, w):
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def linear_init(rng, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(rng, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = dot(x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------- norms
+
+def norm_init(d, norm_type, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, norm_type, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_tables(positions, rot_dim, base=10000.0):
+    """positions [..., S] -> cos,sin [..., S, rot_dim/2]."""
+    inv = 1.0 / (base ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rot_dim):
+    """x [B,S,H,hd]; rotary applied to the first ``rot_dim`` dims (pairwise)."""
+    if rot_dim == 0:
+        return x
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    xr = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr, xp], axis=-1).astype(x.dtype) if rot_dim < x.shape[-1] else xr.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def _mha_block(q, k, v, *, q_pos, kv_pos, causal, window, kv_valid_len):
+    """One dense attention block.
+
+    q [B,Sq,KVH,G,hd], k/v [B,Skv,KVH,hd]; positions are int arrays [B,Sq]/[B,Skv].
+    Returns [B,Sq,KVH,G,hd].
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones(scores.shape[-2:], bool)[None, None, None]
+    dq = q_pos[:, None, None, :, None]
+    dk = kv_pos[:, None, None, None, :]
+    if causal:
+        mask = mask & (dk <= dq)
+    if window is not None:
+        mask = mask & (dq - dk < window)
+    if kv_valid_len is not None:
+        mask = mask & (dk < kv_valid_len[:, None, None, None, None])
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqt,btkh->bqkgh", p, v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def mha(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+        kv_valid_len=None, q_chunk=1024):
+    """Grouped-query attention with q-chunking (keeps the [Sq,Skv] score
+    matrix bounded — the memory-roofline-friendly formulation).
+
+    q [B,Sq,H,hd], k/v [B,Skv,KVH,hd] -> [B,Sq,H,hd]
+    """
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    if Sq <= q_chunk:
+        out = _mha_block(qg, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                         window=window, kv_valid_len=kv_valid_len)
+        return out.reshape(B, Sq, H, hd)
+
+    n = Sq // q_chunk
+    assert Sq % q_chunk == 0, f"Sq={Sq} not divisible by q_chunk={q_chunk}"
+    qs = qg.reshape(B, n, q_chunk, KVH, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ps = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        o = _mha_block(qc, k, v, q_pos=pc, kv_pos=kv_pos, causal=causal,
+                       window=window, kv_valid_len=kv_valid_len)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KVH, G, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_init(rng, cfg, dtype):
+    D = cfg.d_model
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "q": linear_init(ks[0], D, H * hd, dtype, bias=cfg.qkv_bias),
+        "k": linear_init(ks[1], D, KVH * hd, dtype, bias=cfg.qkv_bias),
+        "v": linear_init(ks[2], D, KVH * hd, dtype, bias=cfg.qkv_bias),
+        "o": linear_init(ks[3], H * hd, D, dtype),
+    }
+
+
+def attention_apply(cfg, p, x, positions, *, cache=None, write_pos=None,
+                    kv_valid_len=None, kv_x=None, causal=None, window=None,
+                    rope=True):
+    """Self- or cross-attention with optional KV cache.
+
+    * forward/prefill: cache=None -> uses computed k/v; returns (y, (k, v)).
+    * decode: cache=(k_cache, v_cache), write_pos [B] int32 -> writes the new
+      kv of each sequence at its own slot and attends over the cache;
+      returns (y, cache').
+    * cross-attention: kv_x = encoder states (no rope on kv, not causal).
+    """
+    B, Sq, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    causal = cfg.causal if causal is None else causal
+    window = cfg.attn_window if window is None else window
+
+    q = linear(p["q"], x).reshape(B, Sq, H, hd)
+    src = x if kv_x is None else kv_x
+    k = linear(p["k"], src).reshape(B, src.shape[1], KVH, hd)
+    v = linear(p["v"], src).reshape(B, src.shape[1], KVH, hd)
+
+    rot_dim = int(cfg.resolved_head_dim * cfg.rope_fraction) // 2 * 2
+    if rope and rot_dim and kv_x is None:
+        cos_q, sin_q = rope_tables(positions, rot_dim)
+        q = apply_rope(q, cos_q, sin_q, rot_dim)
+        k = apply_rope(k, cos_q, sin_q, rot_dim)
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        if write_pos is not None:
+            b_idx = jnp.arange(B)
+            k_cache = k_cache.at[b_idx, write_pos].set(
+                k[:, 0].astype(k_cache.dtype), mode="drop")
+            v_cache = v_cache.at[b_idx, write_pos].set(
+                v[:, 0].astype(v_cache.dtype), mode="drop")
+        k, v = k_cache, v_cache
+        kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        new_cache = (k_cache, v_cache)
+    else:
+        kv_pos = (positions if kv_x is None else
+                  jnp.broadcast_to(jnp.arange(src.shape[1])[None],
+                                   (B, src.shape[1])))
+        new_cache = (k, v)
+
+    y = mha(q, k, v, q_pos=positions, kv_pos=kv_pos, causal=causal,
+            window=window, kv_valid_len=kv_valid_len)
+    return linear(p["o"], y.reshape(B, Sq, H * hd)), new_cache
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_init(rng, d_model, d_ff, dtype, gated=True):
+    ks = jax.random.split(rng, 3)
+    p = {"up": linear_init(ks[0], d_model, d_ff, dtype),
+         "down": linear_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = linear_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, gated=True):
+    h = linear(p["up"], x)
+    if gated:
+        h = h * jax.nn.silu(linear(p["gate"], x))
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["down"], h)

@@ -1,0 +1,164 @@
+"""Mamba2 / SSD (state-space duality) block.  [arXiv:2405.21060]
+
+TPU adaptation note (DESIGN.md §2): the CUDA reference implements SSD with a
+fused Triton kernel over (chunk-diagonal matmul + inter-chunk recurrence).
+Here the *chunked* formulation is kept — it is exactly the matmul-dominant
+decomposition the MXU wants — expressed as a `lax.scan` over chunks with
+dense intra-chunk einsums; the intra-chunk part is also provided as a Pallas
+kernel (`kernels/ssd_scan.py`).  Decode is the O(1) recurrent update.
+
+Shapes: x [B,S,D]; d_inner = expand*D; heads H = d_inner/head_dim (P);
+state N = ssm_state; single B/C group (G=1).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, linear, linear_init, norm_init
+
+
+def mamba2_init(rng, cfg, dtype):
+    D = cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": linear_init(ks[0], D, 2 * di + 2 * N + H, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype)
+                  * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": norm_init(di, "rmsnorm", dtype),
+        "out_proj": linear_init(ks[2], di, D, dtype),
+    }
+
+
+def _split_in_proj(cfg, h):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = h[..., :di]
+    xBC = h[..., di:di + di + 2 * N]
+    dt = h[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K: xBC [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None] for i in range(K))
+    return jax.nn.silu(y + b[None, None])
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk, init_state=None):
+    """Chunked SSD scan.
+
+    xh [B,S,H,P], dt [B,S,H] (>0), A [H] (<0), Bm/Cm [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"S={S} not divisible by chunk={Q}"
+    nc = S // Q
+
+    def r(t):  # [B,S,...] -> [nc, B, Q, ...]
+        return t.reshape(Bsz, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xh_c, dt_c, B_c, C_c = r(xh), r(dt.astype(jnp.float32)), r(Bm), r(Cm)
+    a_c = dt_c * A[None, None]                        # [nc,B,Q,H] log-decays
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def body(state, inp):
+        xq, dq, aq, bq, cq = inp                      # [B,Q,...]
+        acs = jnp.cumsum(aq, axis=1)                  # [B,Q,H]
+        # ---- off-diagonal: contribution of the carried state
+        decay_in = jnp.exp(acs)                       # decay from chunk start
+        y_off = jnp.einsum("bqn,bhnp,bqh->bqhp", cq, state, decay_in,
+                           preferred_element_type=jnp.float32)
+        # ---- intra-chunk (quadratic in Q — the MXU-friendly part)
+        seg = acs[:, :, None, :] - acs[:, None, :, :]       # [B,Q,Q,H]
+        iq = jnp.arange(Q)
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        # mask in log-space BEFORE exp: masked entries have seg > 0 and would
+        # overflow, poisoning gradients through the 0*inf product
+        L = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq,
+                            preferred_element_type=jnp.float32)
+        M = scores[..., None] * L * dq[:, None]             # [B,Q,K,H]
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", M, xq.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        # ---- new carried state
+        decay_out = jnp.exp(acs[:, -1:, :] - acs)           # [B,Q,H]
+        state_new = jnp.einsum("bkn,bkhp,bkh->bhnp", bq, xq.astype(jnp.float32),
+                               decay_out * dq,
+                               preferred_element_type=jnp.float32)
+        state = state * jnp.exp(acs[:, -1])[:, :, None, None] + state_new
+        return state, (y_off + y_diag)
+
+    state, ys = jax.lax.scan(body, init_state, (xh_c, dt_c, a_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, state
+
+
+def mamba2_forward(cfg, p, x, init_cache=None, return_cache=False):
+    """Full-sequence SSD.  x [B,S,D] -> y [B,S,D] (and optionally the decode
+    cache {'conv': [B,K-1,convdim], 'state': [B,H,N,P]})."""
+    Bsz, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = linear(p["in_proj"], x)
+    z, xBC_raw, dt = _split_in_proj(cfg, h)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xh = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, state = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + (p["D_skip"][None, None, :, None]
+             * xh.astype(jnp.float32))
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = linear(p["out_proj"], y)
+    if not return_cache:
+        return out
+    K = cfg.ssm_conv
+    conv_tail = xBC_raw[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+        xBC_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_tail, "state": state}
+
+
+def mamba2_decode(cfg, p, x, cache):
+    """Single-token recurrent update.  x [B,1,D]."""
+    Bsz = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    h = linear(p["in_proj"], x)
+    z, xBC_new, dt = _split_in_proj(cfg, h)
+
+    conv_buf = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # [B,K,C]
+    xBC = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)[:, None, :]
+    new_conv = conv_buf[:, 1:, :]
+
+    xh = xBC[..., :di].reshape(Bsz, H, P)
+    Bm = xBC[:, 0, di:di + N]
+    Cm = xBC[:, 0, di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None])                                       # [B,H]
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bm, xh.astype(jnp.float32), dt,
+        preferred_element_type=jnp.float32)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state,
+                   preferred_element_type=jnp.float32)
+    y = y + p["D_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return linear(p["out_proj"], y), {"conv": new_conv, "state": state}

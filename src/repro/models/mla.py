@@ -1,0 +1,128 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+The KV cache stores only the rank-``kv_lora_rank`` latent ``c_kv`` plus the
+shared rope key — this is the cache the ElasticMoE HMM reuses zero-copy
+across scaling events.
+
+Two compute paths:
+* prefill/forward — expand k/v from the latent (clear, matches the paper's
+  formulation),
+* decode — the *absorbed* formulation (q absorbed into W_uk, output read out
+  through W_uv) so per-step FLOPs scale with the latent rank, not with
+  H*(d_nope+d_v).  This is the TPU-friendly form (two skinny matmuls feeding
+  the MXU instead of a cache-wide expansion).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_norm, apply_rope, linear, linear_init,
+                                 mha, norm_init, rope_tables)
+
+
+def mla_init(rng, cfg, dtype):
+    D, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(rng, 7)
+    p = {}
+    if cfg.q_lora_rank:
+        p["q_down"] = linear_init(ks[0], D, cfg.q_lora_rank, dtype)
+        p["q_norm"] = norm_init(cfg.q_lora_rank, "rmsnorm", dtype)
+        p["q_up"] = linear_init(ks[1], cfg.q_lora_rank, H * (dn + dr), dtype)
+    else:
+        p["q"] = linear_init(ks[0], D, H * (dn + dr), dtype)
+    p["kv_down"] = linear_init(ks[2], D, r + dr, dtype)
+    p["kv_norm"] = norm_init(r, "rmsnorm", dtype)
+    p["k_up"] = linear_init(ks[3], r, H * dn, dtype)
+    p["v_up"] = linear_init(ks[4], r, H * dv, dtype)
+    p["o"] = linear_init(ks[5], H * dv, D, dtype)
+    return p
+
+
+def _queries(cfg, p, x):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = linear(p["q_up"], apply_norm(p["q_norm"], linear(p["q_down"], x),
+                                         "rmsnorm"))
+    else:
+        q = linear(p["q"], x)
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def mla_prefill(cfg, p, x, positions):
+    """Returns (y, cache) where cache = (c_kv [B,S,r], k_rope [B,S,dr])."""
+    B, S, _ = x.shape
+    H, dn, dr, dv, r = (cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope = _queries(cfg, p, x)
+    ckr = linear(p["kv_down"], x)
+    c_kv = apply_norm(p["kv_norm"], ckr[..., :r], "rmsnorm")
+    k_rope = ckr[..., r:]
+
+    cos, sin = rope_tables(positions, dr)
+    q_rope = apply_rope(q_rope, cos, sin, dr)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin, dr)[:, :, 0]
+
+    k_nope = linear(p["k_up"], c_kv).reshape(B, S, H, dn)
+    v = linear(p["v_up"], c_kv).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+    # pad v's head dim up to qk dim so we can reuse the generic mha, then trim
+    y = mha(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+            q_pos=positions, kv_pos=positions, causal=True)[..., :dv]
+    out = linear(p["o"], y.reshape(B, S, H * dv))
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(cfg, p, x, positions, cache, write_pos, kv_valid_len):
+    """Absorbed-form single-token decode.
+
+    cache = (c_kv [B,Smax,r], k_rope [B,Smax,dr]); x [B,1,D];
+    write_pos [B] int32 per-sequence slot.
+    """
+    B, S, _ = x.shape
+    H, dn, dr, dv, r = (cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    c_cache, kr_cache = cache
+
+    q_nope, q_rope = _queries(cfg, p, x)
+    ckr = linear(p["kv_down"], x)
+    c_new = apply_norm(p["kv_norm"], ckr[..., :r], "rmsnorm")
+    kr_new = ckr[..., r:]
+    cos, sin = rope_tables(positions, dr)
+    q_rope = apply_rope(q_rope, cos, sin, dr)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin, dr)[:, :, 0]
+
+    b_idx = jnp.arange(B)
+    c_cache = c_cache.at[b_idx, write_pos].set(
+        c_new[:, 0].astype(c_cache.dtype), mode="drop")
+    kr_cache = kr_cache.at[b_idx, write_pos].set(
+        kr_new[:, 0].astype(kr_cache.dtype), mode="drop")
+
+    # absorb: q_eff[b,s,h,r] = q_nope · W_uk[h]   (W_uk: [r, H*dn])
+    w_uk = p["k_up"]["w"].reshape(r, H, dn)
+    q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (jnp.einsum("bshr,btr->bhst", q_eff, c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, kr_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    t = jnp.arange(c_cache.shape[1])[None, None, None]
+    mask = t < kv_valid_len[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    prob = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", prob, c_cache,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # read out through W_uv: [r, H*dv]
+    w_uv = p["v_up"]["w"].reshape(r, H, dv)
+    y = jnp.einsum("bshr,rhd->bshd", ctx, w_uv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = linear(p["o"], y.reshape(B, S, H * dv))
+    return out, (c_cache, kr_cache)

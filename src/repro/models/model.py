@@ -1,0 +1,574 @@
+"""Composable model definition: build train/prefill/decode functions from a
+:class:`ModelConfig`.
+
+Layer stacks are ``lax.scan``-rolled (stacked parameter pytrees) so the HLO
+stays small at any depth — essential for the 80-way multi-pod dry-run compile
+matrix.  Architecturally non-uniform layers are factored into separate stacks:
+
+* moe archs with ``first_k_dense``: a small unstacked prefix + a scanned MoE
+  stack,
+* vlm: superblocks of ``cross_attn_every`` self-attn layers with one
+  cross-attn block at the head of each superblock,
+* hybrid (zamba2): groups of ``attn_every`` SSM blocks with one *shared*
+  attention block (weights shared across all applications) at the head of
+  each group.
+
+Public entry points
+-------------------
+``init_params``, ``forward`` (training), ``loss_fn``, ``prefill``,
+``decode_step``, ``init_cache``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models import mla as mla_mod
+from repro.models.layers import (apply_norm, attention_init, attention_apply,
+                                 linear, linear_init, mlp_apply, mlp_init,
+                                 norm_init)
+from repro.models.moe import moe_ep, moe_init, moe_local
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ builders
+
+def _block_init(rng, cfg: ModelConfig, dtype, *, moe: bool, cross: bool = False):
+    ks = jax.random.split(rng, 6)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm_type, dtype),
+         "ln2": norm_init(cfg.d_model, cfg.norm_type, dtype)}
+    if cfg.use_mla:
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attention_init(ks[0], cfg, dtype)
+    if cross:
+        p["xattn"] = attention_init(ks[1], cfg, dtype)
+        p["lnx"] = norm_init(cfg.d_model, cfg.norm_type, dtype)
+        p["xgate"] = jnp.zeros((1,), dtype)
+    if moe:
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype,
+                                cfg.mlp_gated)
+    else:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype, cfg.mlp_gated)
+    return p
+
+
+def _ssm_block_init(rng, cfg, dtype):
+    return {"ln": norm_init(cfg.d_model, cfg.norm_type, dtype),
+            "ssm": m2.mamba2_init(rng, cfg, dtype)}
+
+
+def _stack_init(rng, n, one_init):
+    return jax.vmap(one_init)(jax.random.split(rng, n))
+
+
+def init_params(cfg: ModelConfig, rng, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    p: Params = {"final_norm": norm_init(cfg.d_model, cfg.norm_type, dtype)}
+    if cfg.arch_type != "encoder":
+        p["embed"] = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        dtype) * 0.02)
+    p["lm_head"] = linear_init(ks[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    if cfg.arch_type == "ssm":
+        p["blocks"] = _stack_init(
+            ks[2], cfg.num_layers, lambda k: _ssm_block_init(k, cfg, dtype))
+    elif cfg.arch_type == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        p["blocks"] = _stack_init(
+            ks[2], cfg.num_layers, lambda k: _ssm_block_init(k, cfg, dtype))
+        p["shared_attn"] = _block_init(ks[3], cfg, dtype, moe=False)
+    elif cfg.arch_type == "vlm":
+        # num_layers total = ncross cross-attn layers (one leading each
+        # superblock) + the remaining self-attn layers.
+        ncross = cfg.num_layers // cfg.cross_attn_every
+        p["blocks"] = _stack_init(
+            ks[2], cfg.num_layers - ncross,
+            lambda k: _block_init(k, cfg, dtype, moe=False))
+        p["cross_blocks"] = _stack_init(
+            ks[3], ncross,
+            lambda k: _block_init(k, cfg, dtype, moe=False, cross=True))
+    elif cfg.is_moe:
+        nk = cfg.first_k_dense
+        if nk:
+            p["dense_prefix"] = [
+                _block_init(k, cfg, dtype, moe=False)
+                for k in jax.random.split(ks[2], nk)]
+        p["blocks"] = _stack_init(
+            ks[3], cfg.num_layers - nk,
+            lambda k: _block_init(k, cfg, dtype, moe=True))
+    else:  # dense / encoder
+        p["blocks"] = _stack_init(
+            ks[2], cfg.num_layers,
+            lambda k: _block_init(k, cfg, dtype, moe=False))
+    return p
+
+
+# -------------------------------------------------------------- block apply
+
+def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None):
+    """Post-attention feed-forward (+MoE).  Returns (y, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if moe:
+        if parallel is not None:
+            y, aux = moe_ep(cfg, bp["moe"], h, parallel, capacity=moe_capacity)
+        else:
+            B, S, D = h.shape
+            yf, aux = moe_local(cfg, bp["moe"], h.reshape(B * S, D),
+                                capacity=moe_capacity)
+            y = yf.reshape(B, S, D)
+        if cfg.dense_residual:
+            y = y + mlp_apply(bp["mlp"], h, cfg.mlp_gated)
+    else:
+        y = mlp_apply(bp["mlp"], h, cfg.mlp_gated)
+    return y, aux
+
+
+def _attn_block(cfg, bp, x, positions, *, cache=None, write_pos=None,
+                kv_valid_len=None, image_kv=None, image_x=None,
+                parallel=None, moe=False, moe_capacity=None):
+    """Generic (self-attn [+cross-attn] + ffn/moe) block.
+
+    Returns (x', new_kv_cache, new_image_kv, aux).
+    """
+    h = apply_norm(bp["ln1"], x, cfg.norm_type)
+    if cfg.use_mla:
+        if cache is None:
+            a, new_kv = mla_mod.mla_prefill(cfg, bp["attn"], h, positions)
+        else:
+            a, new_kv = mla_mod.mla_decode(cfg, bp["attn"], h, positions,
+                                           cache, write_pos, kv_valid_len)
+    else:
+        a, new_kv = attention_apply(cfg, bp["attn"], h, positions,
+                                    cache=cache, write_pos=write_pos,
+                                    kv_valid_len=kv_valid_len)
+    x = x + a
+    new_image_kv = image_kv
+    if "xattn" in bp:
+        hx = apply_norm(bp["lnx"], x, cfg.norm_type)
+        if image_kv is not None:          # decode: attend over cached image kv
+            cx, _ = attention_apply(cfg, bp["xattn"], hx, positions,
+                                    cache=image_kv, causal=False, rope=False)
+        else:                             # prefill: compute image kv
+            cx, new_image_kv = attention_apply(
+                cfg, bp["xattn"], hx, positions, kv_x=image_x,
+                causal=False, rope=False)
+        x = x + jnp.tanh(bp["xgate"]) * cx
+    h = apply_norm(bp["ln2"], x, cfg.norm_type)
+    y, aux = _ffn_part(cfg, bp, h, parallel=parallel, moe=moe,
+                       moe_capacity=moe_capacity)
+    return x + y, new_kv, new_image_kv, aux
+
+
+def _ssm_block(cfg, bp, x, *, cache=None):
+    h = apply_norm(bp["ln"], x, cfg.norm_type)
+    if cache is None:
+        y, new_cache = m2.mamba2_forward(cfg, bp["ssm"], h, return_cache=True)
+    else:
+        y, new_cache = m2.mamba2_decode(cfg, bp["ssm"], h, cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------- forward
+
+def _embed(cfg, params, batch):
+    if cfg.arch_type == "encoder":
+        return batch["frames"]
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, parallel=None, remat: bool = True):
+    """Full-sequence forward (training / evaluation).
+
+    batch: tokens [B,S] (or frames [B,S,D] for encoder archs),
+           image_embeds [B,T_img,D] for vlm.
+    Returns (logits [B,S,V], aux_loss scalar).
+    """
+    x = _embed(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def maybe_remat(f):
+        return jax.checkpoint(f) if remat else f
+
+    if cfg.arch_type == "ssm":
+        def body(x, bp):
+            x, _ = _ssm_block(cfg, bp, x)
+            return x, None
+        x, _ = jax.lax.scan(maybe_remat(body), x, params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        blocks = jax.tree.map(
+            lambda t: t.reshape(ng, cfg.attn_every, *t.shape[1:]),
+            params["blocks"])
+        shared = params["shared_attn"]
+
+        def group(x, bps):
+            x, _, _, _ = _attn_block(cfg, shared, x, positions)
+            def inner(x, bp):
+                x, _ = _ssm_block(cfg, bp, x)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, bps)
+            return x, None
+        x, _ = jax.lax.scan(maybe_remat(group), x, blocks)
+
+    elif cfg.arch_type == "vlm":
+        every = cfg.cross_attn_every
+        ng = cfg.num_layers // every
+        blocks = jax.tree.map(
+            lambda t: t.reshape(ng, every - 1, *t.shape[1:]), params["blocks"])
+        img = batch["image_embeds"]
+
+        def group(x, bps):
+            bcross, bselfs = bps
+            x, _, _, _ = _attn_block(cfg, bcross, x, positions, image_x=img)
+            def inner(x, bp):
+                x, _, _, _ = _attn_block(cfg, bp, x, positions)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, bselfs)
+            return x, None
+        x, _ = jax.lax.scan(maybe_remat(group), x,
+                            (params["cross_blocks"], blocks))
+
+    else:
+        moe = cfg.is_moe
+        if moe and cfg.first_k_dense:
+            for bp in params["dense_prefix"]:
+                x, _, _, _ = _attn_block(cfg, bp, x, positions)
+
+        def body(carry, bp):
+            x, aux = carry
+            x, _, _, a = _attn_block(cfg, bp, x, positions, parallel=parallel,
+                                     moe=moe)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(maybe_remat(body),
+                                         (x, aux_total), params["blocks"])
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = linear(params["lm_head"], x)
+    return logits, aux_total
+
+
+def loss_fn(cfg, params, batch, *, parallel=None, remat=True):
+    logits, aux = forward(cfg, params, batch, parallel=parallel, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + cfg.router_aux_coef * aux
+
+
+# ------------------------------------------------------------------- caches
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Decode cache pytree sized for ``max_len`` tokens."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    if cfg.arch_type == "ssm" or cfg.arch_type == "hybrid":
+        di, N = cfg.d_inner, cfg.ssm_state
+        H, P = cfg.ssm_heads, cfg.ssm_head_dim
+        cache = {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+            "state": jnp.zeros((L, batch, H, N, P), jnp.float32),
+        }
+        if cfg.arch_type == "hybrid":
+            ng = cfg.num_layers // cfg.attn_every
+            KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            cache["attn_k"] = jnp.zeros((ng, batch, max_len, KVH, hd), dtype)
+            cache["attn_v"] = jnp.zeros((ng, batch, max_len, KVH, hd), dtype)
+        return cache
+    if cfg.use_mla:
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+        return {"c": jnp.zeros((L, batch, max_len, r), dtype),
+                "kr": jnp.zeros((L, batch, max_len, dr), dtype)}
+    KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    eff = max_len if cfg.attn_window is None else min(max_len, cfg.attn_window)
+    cache = {"k": jnp.zeros((L, batch, eff, KVH, hd), dtype),
+             "v": jnp.zeros((L, batch, eff, KVH, hd), dtype)}
+    if cfg.arch_type == "vlm":
+        ncross = cfg.num_layers // cfg.cross_attn_every
+        cache["img_k"] = jnp.zeros((ncross, batch, cfg.num_image_tokens,
+                                    KVH, hd), dtype)
+        cache["img_v"] = jnp.zeros_like(cache["img_k"])
+    return cache
+
+
+def _cache_slot(cfg, lengths):
+    """KV write slot for each sequence (ring-buffered under attn_window)."""
+    if cfg.attn_window is None:
+        return lengths
+    return lengths % cfg.attn_window
+
+
+# ---------------------------------------------------------------- prefill
+
+def prefill(cfg: ModelConfig, params: Params, batch, max_len: int,
+            *, parallel=None):
+    """Process the full prompt; returns (last-token logits [B,V], cache).
+
+    All sequences are assumed left-aligned; ``batch['lengths']`` [B] gives the
+    true prompt lengths (padding tokens attend causally but their kv entries
+    beyond length are masked at decode time via valid-length masking).
+    """
+    assert cfg.has_decode, f"{cfg.name} is encoder-only (no decode)"
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache = init_cache(cfg, B, max_len, jnp.dtype(cfg.dtype))
+
+    def pad_to(t, length, axis):
+        pads = [(0, 0)] * t.ndim
+        pads[axis] = (0, length - t.shape[axis])
+        return jnp.pad(t, pads)
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        if cfg.arch_type == "ssm":
+            def body(x, bp):
+                x, c = _ssm_block(cfg, bp, x)
+                return x, c
+            x, caches = jax.lax.scan(body, x, params["blocks"])
+            cache = {"conv": caches["conv"], "state": caches["state"]}
+        else:
+            ng = cfg.num_layers // cfg.attn_every
+            blocks = jax.tree.map(
+                lambda t: t.reshape(ng, cfg.attn_every, *t.shape[1:]),
+                params["blocks"])
+            shared = params["shared_attn"]
+            eff = cache["attn_k"].shape[2]
+
+            def group(x, bps):
+                x, kv, _, _ = _attn_block(cfg, shared, x, positions)
+                k, v = kv
+                def inner(x, bp):
+                    x, c = _ssm_block(cfg, bp, x)
+                    return x, c
+                x, cs = jax.lax.scan(inner, x, bps)
+                return x, (cs, pad_to(k[:, -eff:], eff, 1),
+                           pad_to(v[:, -eff:], eff, 1))
+            x, (cs, ks, vs) = jax.lax.scan(group, x, blocks)
+            cache = {
+                "conv": jax.tree.map(lambda t: t.reshape(cfg.num_layers,
+                                                         *t.shape[2:]),
+                                     cs["conv"]),
+                "state": cs["state"].reshape(cfg.num_layers,
+                                             *cs["state"].shape[2:]),
+                "attn_k": ks, "attn_v": vs,
+            }
+    elif cfg.use_mla:
+        moe = cfg.is_moe
+        if moe and cfg.first_k_dense:
+            prefix_caches = []
+            for bp in params["dense_prefix"]:
+                x, kv, _, _ = _attn_block(cfg, bp, x, positions)
+                prefix_caches.append(kv)
+        def body(carry, bp):
+            x = carry
+            x, kv, _, _ = _attn_block(cfg, bp, x, positions,
+                                      parallel=parallel, moe=moe)
+            c, kr = kv
+            return x, (pad_to(c, max_len, 1), pad_to(kr, max_len, 1))
+        x, (cs, krs) = jax.lax.scan(body, x, params["blocks"])
+        if cfg.first_k_dense:
+            pc = jnp.stack([pad_to(c, max_len, 1) for c, _ in prefix_caches])
+            pk = jnp.stack([pad_to(kr, max_len, 1) for _, kr in prefix_caches])
+            cs = jnp.concatenate([pc, cs], axis=0)
+            krs = jnp.concatenate([pk, krs], axis=0)
+        cache = {"c": cs, "kr": krs}
+    else:
+        moe = cfg.is_moe
+        img = batch.get("image_embeds")
+        eff = cache["k"].shape[2]
+
+        def body(carry, bp):
+            x, aux = carry
+            x, kv, _, a = _attn_block(cfg, bp, x, positions,
+                                      parallel=parallel, moe=moe)
+            k, v = kv
+            return (x, aux + a), (pad_to(k[:, -eff:], eff, 1),
+                                  pad_to(v[:, -eff:], eff, 1))
+        if cfg.arch_type == "vlm":
+            every = cfg.cross_attn_every
+            ng = cfg.num_layers // every
+            blocks = jax.tree.map(
+                lambda t: t.reshape(ng, every - 1, *t.shape[1:]),
+                params["blocks"])
+
+            def group(carry, bps):
+                x = carry
+                bcross, bselfs = bps
+                x, kvc, imgkv, _ = _attn_block(cfg, bcross, x, positions,
+                                               image_x=img)
+                kc, vc = kvc
+                def inner(x, bp):
+                    x, kv, _, _ = _attn_block(cfg, bp, x, positions)
+                    return x, kv
+                x, (ks, vs) = jax.lax.scan(inner, x, bselfs)
+                ks = jnp.concatenate([kc[None], ks], 0)   # [every, B, S, ...]
+                vs = jnp.concatenate([vc[None], vs], 0)
+                return x, (pad_to(ks, max_len, 2), pad_to(vs, max_len, 2),
+                           imgkv[0], imgkv[1])
+            x, (ks, vs, imk, imv) = jax.lax.scan(group, x,
+                                                 (params["cross_blocks"],
+                                                  blocks))
+            cache = {"k": ks.reshape(-1, B, max_len, *ks.shape[4:]),
+                     "v": vs.reshape(-1, B, max_len, *vs.shape[4:]),
+                     "img_k": imk, "img_v": imv}
+        else:
+            (x, _), (ks, vs) = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                            params["blocks"])
+            cache = {"k": ks, "v": vs}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(B), lengths - 1]
+    logits = linear(params["lm_head"], last)
+    return logits, cache
+
+
+# ------------------------------------------------------------------- decode
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache, lengths,
+                *, parallel=None):
+    """One decode step.  tokens [B,1]; lengths [B] = number of tokens already
+    in the cache (the new token is written at slot ``lengths``).
+    Returns (logits [B,V], cache')."""
+    assert cfg.has_decode
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = lengths[:, None]
+    write_pos = _cache_slot(cfg, lengths)
+    valid = lengths + 1
+
+    if cfg.arch_type == "ssm":
+        def body(x, inp):
+            bp, c = inp
+            x, c2 = _ssm_block(cfg, bp, x, cache=c)
+            return x, c2
+        x, new = jax.lax.scan(body, x, (params["blocks"], cache))
+        new_cache = new
+    elif cfg.arch_type == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        blocks = jax.tree.map(
+            lambda t: t.reshape(ng, cfg.attn_every, *t.shape[1:]),
+            params["blocks"])
+        ssm_cache = jax.tree.map(
+            lambda t: t.reshape(ng, cfg.attn_every, *t.shape[1:]),
+            {"conv": cache["conv"], "state": cache["state"]})
+        shared = params["shared_attn"]
+        win = cache["attn_k"].shape[2]
+
+        def group(x, inp):
+            bps, sc, k, v = inp
+            wp = lengths % win
+            x, kv, _, _ = _attn_block(cfg, shared, x, positions, cache=(k, v),
+                                      write_pos=wp,
+                                      kv_valid_len=jnp.minimum(valid, win))
+            def inner(x, inp2):
+                bp, c = inp2
+                x, c2 = _ssm_block(cfg, bp, x, cache=c)
+                return x, c2
+            x, sc2 = jax.lax.scan(inner, x, (bps, sc))
+            return x, (sc2, kv[0], kv[1])
+        x, (sc2, ks, vs) = jax.lax.scan(
+            group, x, (blocks, ssm_cache, cache["attn_k"], cache["attn_v"]))
+        new_cache = {
+            "conv": sc2["conv"].reshape(cfg.num_layers, *sc2["conv"].shape[2:]),
+            "state": sc2["state"].reshape(cfg.num_layers,
+                                          *sc2["state"].shape[2:]),
+            "attn_k": ks, "attn_v": vs}
+    elif cfg.use_mla:
+        moe = cfg.is_moe
+        nk = cfg.first_k_dense
+        cs, krs = cache["c"], cache["kr"]
+        new_c, new_kr = [], []
+        for i in range(nk):
+            x, kv, _, _ = _attn_block(cfg, params["dense_prefix"][i], x,
+                                      positions, cache=(cs[i], krs[i]),
+                                      write_pos=write_pos, kv_valid_len=valid)
+            new_c.append(kv[0]); new_kr.append(kv[1])
+        def body(carry, inp):
+            x = carry
+            bp, c, kr = inp
+            x, kv, _, _ = _attn_block(cfg, bp, x, positions, cache=(c, kr),
+                                      write_pos=write_pos, kv_valid_len=valid,
+                                      parallel=parallel, moe=moe)
+            return x, (kv[0], kv[1])
+        x, (cs2, krs2) = jax.lax.scan(body, x,
+                                      (params["blocks"], cs[nk:], krs[nk:]))
+        if nk:
+            cs2 = jnp.concatenate([jnp.stack(new_c), cs2], 0)
+            krs2 = jnp.concatenate([jnp.stack(new_kr), krs2], 0)
+        new_cache = {"c": cs2, "kr": krs2}
+    else:
+        moe = cfg.is_moe
+        win = cache["k"].shape[2]
+        wp = write_pos if cfg.attn_window is None else lengths % win
+        vl = valid if cfg.attn_window is None else jnp.minimum(valid, win)
+
+        if cfg.arch_type == "vlm":
+            every = cfg.cross_attn_every
+            ng = cfg.num_layers // every
+            # per group: row 0 = cross layer's self-attn kv, rows 1.. = self
+            ks = cache["k"].reshape(ng, every, *cache["k"].shape[1:])
+            vs = cache["v"].reshape(ng, every, *cache["v"].shape[1:])
+            blocks = jax.tree.map(
+                lambda t: t.reshape(ng, every - 1, *t.shape[1:]),
+                params["blocks"])
+
+            def group(x, inp):
+                bcross, bselfs, kg, vg, ik, iv = inp
+                x, kv0, _, _ = _attn_block(cfg, bcross, x, positions,
+                                           cache=(kg[0], vg[0]), write_pos=wp,
+                                           kv_valid_len=vl, image_kv=(ik, iv))
+                def inner(carry, inp2):
+                    x = carry
+                    bp, k, v = inp2
+                    x, kv, _, _ = _attn_block(cfg, bp, x, positions,
+                                              cache=(k, v), write_pos=wp,
+                                              kv_valid_len=vl)
+                    return x, (kv[0], kv[1])
+                x, (ks2, vs2) = jax.lax.scan(inner, x, (bselfs, kg[1:], vg[1:]))
+                return x, (jnp.concatenate([kv0[0][None], ks2], 0),
+                           jnp.concatenate([kv0[1][None], vs2], 0))
+            x, (ks2, vs2) = jax.lax.scan(
+                group, x, (params["cross_blocks"], blocks, ks, vs,
+                           cache["img_k"], cache["img_v"]))
+            new_cache = {"k": ks2.reshape(-1, *ks2.shape[2:]),
+                         "v": vs2.reshape(-1, *vs2.shape[2:]),
+                         "img_k": cache["img_k"], "img_v": cache["img_v"]}
+        else:
+            def body(carry, inp):
+                x = carry
+                bp, k, v = inp
+                x, kv, _, _ = _attn_block(cfg, bp, x, positions, cache=(k, v),
+                                          write_pos=wp, kv_valid_len=vl,
+                                          parallel=parallel, moe=moe)
+                return x, (kv[0], kv[1])
+            x, (ks2, vs2) = jax.lax.scan(body, x,
+                                         (params["blocks"], cache["k"],
+                                          cache["v"]))
+            new_cache = {"k": ks2, "v": vs2}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = linear(params["lm_head"], x[:, 0])
+    return logits, new_cache

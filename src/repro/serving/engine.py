@@ -1,0 +1,226 @@
+"""Inference engine: continuous batching over an elastic instance.
+
+The engine executes *real* JAX on the instance's mesh.  Decode slots are
+rows of the HMM-owned global KV cache; scaling grows the slot count and the
+surviving slots' state is reused zero-copy (the paper's "seamless handoff,
+same KV cache", §5.2) — the determinism test asserts that tokens generated
+across a scale-up event are identical to an unscaled run.
+
+Step functions are AOT-compiled per (ElasticConfig, shape bucket); the IMM
+caches them — compilation is the JAX analogue of instance pre-initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.topology import ElasticConfig
+from repro.distributed.sharding import ParallelCtx
+from repro.models import model as M
+
+
+def engine_parallel_ctx(mesh) -> ParallelCtx:
+    return ParallelCtx(mesh=mesh, ep_axes=("dp", "tp"), tp_axis="tp",
+                       dp_axes=("dp",), moe_tp=False)
+
+
+def _decode_fn(mcfg: ModelConfig, parallel, temperature, params, cache,
+               tokens, lengths, active, rng):
+    logits, cache = M.decode_step(mcfg, params, tokens[:, None], cache,
+                                  lengths, parallel=parallel)
+    if temperature and temperature > 0:
+        nxt = jax.random.categorical(
+            rng, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+    else:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    nxt = jnp.where(active, nxt, tokens)
+    return nxt, cache
+
+
+def _prefill_fn(mcfg: ModelConfig, parallel, max_len, params, cache, tokens,
+                length, slot):
+    """Prefill one request (padded to a bucket) into cache row ``slot``."""
+    logits, small = M.prefill(mcfg, params,
+                              {"tokens": tokens, "lengths": length[None]},
+                              max_len=max_len, parallel=parallel)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+
+    def put(big, new):
+        # big: [L, B, ...]; new: [L, 1, ...] -> overwrite row `slot`
+        idx = (0, slot) + (0,) * (big.ndim - 2)
+        return jax.lax.dynamic_update_slice(big, new.astype(big.dtype), idx)
+
+    cache = jax.tree.map(put, cache, small)
+    return first, cache
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int = -1
+    remaining: int = 0
+    active: bool = False
+
+
+class InferenceEngine:
+    """Continuous-batching engine bound to one (cfg, mesh, compiled steps).
+
+    The engine object survives scaling: ``rebind`` swaps in the new
+    instance's mesh/cache/compiled functions while preserving slot states.
+    """
+
+    def __init__(self, mcfg: ModelConfig, *, batch_per_replica: int,
+                 max_len: int, prefill_bucket: int = 64):
+        self.mcfg = mcfg
+        self.batch_per_replica = batch_per_replica
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.cfg: Optional[ElasticConfig] = None
+        self.params = None
+        self.cache = None
+        self.compiled: Dict[str, Any] = {}
+        self.slots: List[SlotState] = []
+        self.lengths: Optional[np.ndarray] = None
+        self.tokens: Optional[np.ndarray] = None
+        self.generated: Dict[int, List[int]] = {}
+        self.admit_limit: Optional[int] = None  # scale-down drain barrier
+
+    # ------------------------------------------------------------- binding
+    @property
+    def num_slots(self) -> int:
+        return 0 if self.cfg is None else self.cfg.dp * self.batch_per_replica
+
+    def bind(self, cfg: ElasticConfig, mesh, params, cache, compiled):
+        old_slots = self.slots
+        old_lengths = self.lengths
+        old_tokens = self.tokens
+        self.cfg, self.mesh = cfg, mesh
+        self.params, self.cache = params, cache
+        self.compiled = compiled
+        n = self.num_slots
+        self.slots = [SlotState() for _ in range(n)]
+        self.lengths = np.zeros((n,), np.int32)
+        self.tokens = np.zeros((n,), np.int32)
+        # surviving slots keep their requests (zero-copy KV reuse)
+        for i in range(min(len(old_slots), n)):
+            self.slots[i] = old_slots[i]
+            self.lengths[i] = old_lengths[i]
+            self.tokens[i] = old_tokens[i]
+
+    def free_slots(self) -> List[int]:
+        lim = self.admit_limit if self.admit_limit is not None else len(self.slots)
+        return [i for i, s in enumerate(self.slots) if not s.active and i < lim]
+
+    def drained(self, keep: int) -> bool:
+        """True when all slots >= keep are inactive (scale-down ready)."""
+        return all(not s.active for s in self.slots[keep:])
+
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if s.active)
+
+    # ------------------------------------------------------------- serving
+    def start_request(self, req, prompt: np.ndarray, slot: int):
+        S = len(prompt)
+        bucket = self.prefill_bucket
+        S_pad = max(bucket, -(-S // bucket) * bucket)
+        toks = np.zeros((1, S_pad), np.int32)
+        toks[0, :S] = prompt
+        key = f"prefill_{S_pad}"
+        first, self.cache = self.compiled[key](
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(S, jnp.int32), jnp.asarray(slot, jnp.int32))
+        self.slots[slot] = SlotState(rid=req.rid, remaining=req.output_len - 1,
+                                     active=req.output_len > 1)
+        self.lengths[slot] = S
+        first = int(first)
+        self.tokens[slot] = first
+        self.generated[req.rid] = [first]
+        if req.output_len <= 1:
+            self.slots[slot].active = False
+        return first
+
+    def decode_tick(self) -> List[Tuple[int, int, bool]]:
+        """One decode step for all active slots.
+        Returns [(rid, token, finished)] for slots that produced a token."""
+        if self.active_count() == 0:
+            return []
+        active = np.array([s.active for s in self.slots])
+        self._step_count = getattr(self, "_step_count", 0) + 1
+        rng = jax.random.key_data(jax.random.PRNGKey(self._step_count))
+        nxt, self.cache = self.compiled["decode"](
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.lengths), jnp.asarray(active), rng)
+        nxt = np.asarray(nxt)
+        out = []
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            self.lengths[i] += 1
+            self.tokens[i] = nxt[i]
+            self.generated[s.rid].append(int(nxt[i]))
+            s.remaining -= 1
+            fin = s.remaining <= 0 or self.lengths[i] >= self.max_len - 1
+            if fin:
+                s.active = False
+            out.append((s.rid, int(nxt[i]), fin))
+        return out
+
+
+# ------------------------------------------------------------- compilation
+
+def as_sds(tree):
+    """pytree of arrays (or SDS) -> pytree of sharded ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=x.sharding),
+        tree)
+
+
+def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
+                           params_sds, cache_sds, *,
+                           batch_per_replica: int, max_len: int,
+                           prefill_buckets=(64,),
+                           temperature: float = 0.0
+                           ) -> Tuple[Dict[str, Any], float]:
+    """AOT-compile decode + prefill executables for an instance.
+
+    ``params_sds``/``cache_sds``: pytrees of sharded ShapeDtypeStructs (no
+    weights needed — pre-initialization works without the HMM, exactly the
+    paper's CPU-standby instances, §4.5).  Returns (executables, seconds).
+    """
+    t0 = time.perf_counter()
+    parallel = engine_parallel_ctx(mesh)
+    B = cfg.dp * batch_per_replica
+    repl = NamedSharding(mesh, P())
+
+    out: Dict[str, Any] = {}
+    cache_out = jax.tree.map(lambda s: s.sharding, cache_sds)
+    dec = jax.jit(
+        partial(_decode_fn, mcfg, parallel, temperature),
+        donate_argnums=(1,),
+        out_shardings=(repl, cache_out),
+    )
+    tok_sd = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=repl)
+    rng_sd = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl)
+    out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
+                              jax.ShapeDtypeStruct((B,), jnp.bool_,
+                                                   sharding=repl),
+                              rng_sd).compile()
+    for S_pad in prefill_buckets:
+        pf = jax.jit(partial(_prefill_fn, mcfg, parallel, max_len),
+                     donate_argnums=(1,),
+                     out_shardings=(repl, cache_out))
+        toks = jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl)
+        out[f"prefill_{S_pad}"] = pf.lower(
+            params_sds, cache_sds, toks,
+            jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
+            jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)).compile()
+    return out, time.perf_counter() - t0

@@ -1,0 +1,69 @@
+"""Serving metrics (paper §7.3): TTFT, TPOT, SLO attainment, SLO/XPU."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    ttft_s: float
+    tpot_s: float
+
+
+def meets_slo(r: Request, slo: SLO) -> Optional[bool]:
+    if r.ttft is None or r.finish_s is None:
+        return None
+    ok = r.ttft <= slo.ttft_s
+    if r.tpot is not None:
+        ok = ok and r.tpot <= slo.tpot_s
+    return ok
+
+
+def slo_attainment(reqs: Sequence[Request], slo: SLO) -> float:
+    done = [meets_slo(r, slo) for r in reqs]
+    done = [d for d in done if d is not None]
+    if not done:
+        return float("nan")
+    return sum(done) / len(done)
+
+
+def slo_attainment_timeline(reqs: Sequence[Request], slo: SLO,
+                            window_s: float = 10.0, dt: float = 1.0):
+    """(times, attainment) over sliding windows keyed by finish time."""
+    finished = [r for r in reqs if r.finish_s is not None]
+    if not finished:
+        return np.array([]), np.array([])
+    t_end = max(r.finish_s for r in finished)
+    ts = np.arange(0.0, t_end + dt, dt)
+    att = []
+    for t in ts:
+        win = [r for r in finished if t - window_s <= r.finish_s <= t]
+        oks = [meets_slo(r, slo) for r in win]
+        oks = [o for o in oks if o is not None]
+        att.append(sum(oks) / len(oks) if oks else np.nan)
+    return ts, np.array(att)
+
+
+def throughput_rps(reqs: Sequence[Request], t0: float, t1: float) -> float:
+    n = sum(1 for r in reqs if r.finish_s is not None and t0 <= r.finish_s < t1)
+    return n / max(t1 - t0, 1e-9)
+
+
+def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None) -> dict:
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    tpots = [r.tpot for r in reqs if r.tpot is not None]
+    out = {
+        "n": len(reqs),
+        "finished": sum(1 for r in reqs if r.finish_s is not None),
+        "ttft_p50": float(np.median(ttfts)) if ttfts else float("nan"),
+        "ttft_p99": float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        "tpot_p50": float(np.median(tpots)) if tpots else float("nan"),
+    }
+    if slo:
+        out["slo_attainment"] = slo_attainment(reqs, slo)
+    return out

@@ -1,0 +1,75 @@
+"""Synthetic workloads (paper §7.1): fixed-length IO sequences under fixed,
+variable (ramp), and patterned (burst) request-rate profiles."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+    prompt: Optional[np.ndarray] = None      # token ids (engine runs)
+
+    # filled by the engine/simulator
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    token_times: Optional[List[float]] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_s is None or self.first_token_s is None \
+                or self.output_len <= 1:
+            return None
+        return (self.finish_s - self.first_token_s) / (self.output_len - 1)
+
+
+def make_workload(*, duration_s: float, rps_fn: Callable[[float], float],
+                  prompt_len: int = 2000, output_range=(500, 750),
+                  seed: int = 0, vocab_size: int = 0,
+                  dt: float = 0.05) -> List[Request]:
+    """Poisson-ish arrivals with time-varying rate ``rps_fn(t)``."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    t, rid = 0.0, 0
+    while t < duration_s:
+        lam = max(rps_fn(t), 0.0) * dt
+        n = rng.poisson(lam)
+        for _ in range(n):
+            out = int(rng.integers(output_range[0], output_range[1] + 1))
+            prompt = (rng.integers(0, vocab_size, prompt_len)
+                      if vocab_size else None)
+            reqs.append(Request(rid, t + rng.uniform(0, dt), prompt_len, out,
+                                prompt=prompt))
+            rid += 1
+        t += dt
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs
+
+
+# rate profiles used across the benchmarks
+def fixed_rate(rps: float):
+    return lambda t: rps
+
+
+def ramp(rps0: float, rps1: float, duration: float):
+    return lambda t: rps0 + (rps1 - rps0) * min(t / duration, 1.0)
+
+
+def step_up(rps0: float, rps1: float, at: float):
+    return lambda t: rps0 if t < at else rps1
+
+
+def burst(base: float, peak: float, start: float, width: float):
+    return lambda t: peak if start <= t < start + width else base

@@ -1,0 +1,61 @@
+"""pjit training step + loop.
+
+``make_train_step`` is shared by the real training examples (CPU, small
+models) and the multi-pod dry-run (lower/compile only, production mesh).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (ParallelCtx, act_spec, dp_axes,
+                                        param_shardings)
+from repro.models.model import init_params, loss_fn
+from repro.training.optimizer import (AdamWConfig, AdamWState, apply_updates,
+                                      init_state)
+
+
+def make_train_step(mcfg: ModelConfig, opt: AdamWConfig,
+                    parallel: Optional[ParallelCtx] = None,
+                    remat: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(mcfg, p, batch, parallel=parallel, remat=remat)
+        )(params)
+        params, opt_state, info = apply_updates(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **info}
+
+    return step
+
+
+def train(mcfg: ModelConfig, *, steps: int, batch: int, seq_len: int,
+          opt: Optional[AdamWConfig] = None, seed: int = 0,
+          log_every: int = 10, mesh=None) -> Dict[str, Any]:
+    """Single-host training loop (examples / smoke tests)."""
+    from repro.training.data import synthetic_batches
+    opt = opt or AdamWConfig(total_steps=steps)
+    params = init_params(mcfg, jax.random.PRNGKey(seed))
+    opt_state = init_state(opt, params)
+    parallel = None
+    step_fn = jax.jit(make_train_step(mcfg, opt, parallel))
+    it = synthetic_batches(mcfg, batch, seq_len, seed)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, b)
+        if i % log_every == 0 or i == steps - 1:
+            loss = float(m["loss"])
+            history.append((i, loss))
+            print(f"step {i:5d}  loss {loss:.4f}  lr {float(m['lr']):.2e}")
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "wall_s": time.perf_counter() - t0}

@@ -1,0 +1,79 @@
+"""Property tests on the cost model and topology helpers."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core.costmodel import plan_cost
+from repro.core.scaling_plan import STRATEGIES, Op, plan_elastic
+from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
+
+MCFG = get_config("qwen3-30b-a3b")
+TENSORS = model_tensors(MCFG, tp=2,
+                        kv_bytes_per_replica=kv_cache_bytes(MCFG, 8, 4096))
+
+sizes = st.sampled_from([2, 4, 8, 16])
+
+
+def cfg_of(n, base=0):
+    return ElasticConfig(dp=n // 2, tp=2,
+                         devices=tuple(range(base, base + n)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n0=sizes, n1=sizes)
+def test_elastic_fastest_and_never_downtime(n0, n1):
+    """Elastic has the lowest projected latency of all feasible strategies
+    and zero downtime; cold restart always has downtime."""
+    from repro.core.scaling_plan import placement
+    old, new = cfg_of(n0), cfg_of(n1)
+    resident = {d: sum(s.values())
+                for d, s in placement(TENSORS, old).items()}
+    ce = plan_cost(plan_elastic(TENSORS, old, new),
+                   resident_bytes_per_device=resident)
+    assert ce.downtime_s == 0
+    cc = plan_cost(STRATEGIES["cold_restart"](TENSORS, old, new),
+                   strategy="cold_restart", resident_bytes_per_device=resident)
+    assert cc.downtime_s > 0
+    assert ce.scale_time_s < cc.scale_time_s
+    cv = plan_cost(STRATEGIES["colocated"](TENSORS, old, new),
+                   strategy="colocated", resident_bytes_per_device=resident)
+    assert ce.scale_time_s < cv.scale_time_s
+    # colocated doubles weights on shared devices -> strictly higher peak
+    assert cv.peak_mem_gb > ce.peak_mem_gb
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=sizes)
+def test_peak_memory_monotone_in_resident(n):
+    old, new = cfg_of(n), cfg_of(min(n * 2, 32))
+    plan = plan_elastic(TENSORS, old, new)
+    c0 = plan_cost(plan)
+    c1 = plan_cost(plan, resident_bytes_per_device={d: 10 ** 9
+                                                    for d in old.devices})
+    assert c1.peak_mem_gb >= c0.peak_mem_gb
+
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.integers(1, 64), length=st.sampled_from([512, 4096, 32768]))
+def test_kv_bytes_linear_in_batch_and_length(batch, length):
+    one = kv_cache_bytes(MCFG, 1, length)
+    assert kv_cache_bytes(MCFG, batch, length) == batch * one
+    assert kv_cache_bytes(MCFG, batch, 2 * length) \
+        == 2 * kv_cache_bytes(MCFG, batch, length)
+
+
+def test_ssm_kv_bytes_constant_in_length():
+    ssm = get_config("mamba2-1.3b")
+    assert kv_cache_bytes(ssm, 4, 1024) == kv_cache_bytes(ssm, 4, 524288)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=sizes)
+def test_elastic_config_ranks(n):
+    cfg = cfg_of(n)
+    assert cfg.ep == n
+    for d in cfg.devices:
+        assert cfg.slot(d) == cfg.dp_rank(d) * cfg.tp + cfg.tp_rank(d)

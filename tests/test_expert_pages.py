@@ -1,0 +1,98 @@
+"""Property tests on the virtual expert page table (vpage-remap analogue)."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.expert_pages import ExpertPageTable
+from repro.core.topology import ElasticConfig, expert_owner
+
+sizes = st.sampled_from([2, 4, 6, 8, 12])
+
+
+def cfg_of(n):
+    return ElasticConfig(dp=n // 2, tp=2, devices=tuple(range(n)))
+
+
+def make_table(L=3, E=24, n0=4):
+    t = ExpertPageTable(L, E)
+    t.initial_place(cfg_of(n0))
+    return t
+
+
+@settings(max_examples=30, deadline=None)
+@given(n0=sizes, seq=st.lists(sizes, min_size=1, max_size=4))
+def test_remap_sequence_invariants(n0, seq):
+    L, E = 3, 24
+    t = make_table(L, E, n0)
+    for n in seq:
+        cfg = cfg_of(n)
+        old_active = dict(t.active)
+        migrations = t.stage_remap(cfg)
+        # staged table: every expert mapped exactly once, onto new devices
+        assert set(t.staged) == {(l, e) for l in range(L) for e in range(E)}
+        assert all(ref.device in cfg.devices for ref in t.staged.values())
+        # balanced placement: per layer, each device owns floor/ceil(E/n)
+        base, extra = divmod(E, n)
+        for l in range(L):
+            counts = {}
+            for e in range(E):
+                d = t.staged[(l, e)].device
+                counts[d] = counts.get(d, 0) + 1
+            assert sorted(counts.values()) == sorted(
+                [base + 1] * extra + [base] * (n - extra))
+        # migrations cover exactly the experts whose device changed
+        moved = {(m.layer, m.expert) for m in migrations}
+        want = {k for k, ref in old_active.items()
+                if t.staged[k].device != ref.device}
+        assert moved == want
+        # min-move optimality: per layer, moves == E - sum(min(held, cap))
+        for l in range(L):
+            held = {}
+            for e in range(E):
+                d = old_active[(l, e)].device
+                held[d] = held.get(d, 0) + 1
+            caps = {d: base + (1 if i < extra else 0)
+                    for i, d in enumerate(cfg.devices)}
+            stay_max = sum(min(held.get(d, 0), caps[d]) for d in cfg.devices)
+            n_moves = sum(1 for (ll, _) in moved if ll == l)
+            assert n_moves == E - stay_max
+        # zero-copy experts keep their page (no reallocation)
+        for k, ref in old_active.items():
+            if k not in moved:
+                assert t.staged[k] == ref
+        t.commit()
+        # pool conservation: pages in use == experts owned per device
+        for d in cfg.devices:
+            owned = sum(1 for ref in t.active.values() if ref.device == d)
+            assert t.pages_in_use(d) == owned
+
+
+@settings(max_examples=20, deadline=None)
+@given(n0=sizes, n1=sizes)
+def test_abort_restores_pool(n0, n1):
+    t = make_table(n0=n0)
+    in_use_before = {d: t.pages_in_use(d) for d in cfg_of(12).devices}
+    t.stage_remap(cfg_of(n1))
+    t.abort()
+    for d, n in in_use_before.items():
+        assert t.pages_in_use(d) == n
+    assert t.staged is None
+
+
+def test_double_buffering_keeps_old_mapping_active():
+    """'Old mappings remain active on source devices until the new instance
+    takes over' (§5.2): the active table is untouched by staging."""
+    t = make_table()
+    before = dict(t.active)
+    t.stage_remap(cfg_of(8))
+    assert t.active == before
+    t.commit()
+    assert t.active != before
+
+
+def test_device_table_sorted_logical_order():
+    t = make_table()
+    cfg = cfg_of(4)
+    for d in cfg.devices:
+        pages = t.device_table(cfg, layer=0, device=d)
+        owners = t.owners(0)[d]
+        assert len(pages) == len(owners)

@@ -1,0 +1,166 @@
+"""Per-kernel allclose vs pure-jnp oracles, sweeping shapes and dtypes
+(interpret=True on CPU) — deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,P", [
+    (2, 128, 64, 128, 4),
+    (4, 256, 128, 256, 9),
+    (1, 128, 32, 128, 2),
+])
+def test_paged_gmm(E, C, D, F, P, dtype):
+    table = jnp.asarray(RNG.permutation(P)[:E].astype(np.int32))
+    pool = jnp.asarray(RNG.standard_normal((P, D, F)), dtype)
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), dtype)
+    got = ops.paged_gmm(table, pool, x)
+    want = ref.paged_gmm_ref(table, pool, x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_paged_expert_ffn():
+    E, C, D, F, P = 3, 128, 64, 128, 6
+    ti, tg, to = (jnp.asarray(RNG.permutation(P)[:E].astype(np.int32))
+                  for _ in range(3))
+    pi = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    pg = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    po = jnp.asarray(RNG.standard_normal((P, F, D)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
+    got = ops.paged_expert_ffn(ti, tg, to, pi, pg, po, x)
+    want = ref.paged_expert_ffn_ref(ti, tg, to, pi, pg, po, x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_paged_gmm_remap_invariance():
+    """Permuting pages + updating the table must not change results — the
+    vpage-remap guarantee at kernel level."""
+    E, C, D, F, P = 4, 128, 32, 128, 8
+    table = jnp.arange(E, dtype=jnp.int32)
+    pool = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
+    base = ops.paged_gmm(table, pool, x)
+    perm = RNG.permutation(P)
+    pool2 = pool[jnp.asarray(np.argsort(perm))]          # pages physically moved
+    table2 = jnp.asarray(perm[np.asarray(table)], np.int32)
+    got = ops.paged_gmm(table2, pool2, x)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KVH,hd,bq,bk", [
+    (2, 256, 4, 2, 64, 128, 128),
+    (1, 512, 8, 8, 128, 128, 256),
+    (2, 128, 4, 1, 80, 64, 64),
+])
+def test_flash_attention(B, S, H, KVH, hd, bq, bk, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, KVH, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, KVH, hd)), dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    B, S, H, hd = 1, 256, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,S", [
+    (3, 8, 2, 64, 256),
+    (2, 4, 4, 128, 512),
+    (1, 16, 2, 80, 128),
+])
+def test_paged_decode_attention(B, H, KVH, hd, S, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, H, hd)), dtype)
+    kc = jnp.asarray(RNG.standard_normal((B, S, KVH, hd)), dtype)
+    vc = jnp.asarray(RNG.standard_normal((B, S, KVH, hd)), dtype)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+    got = ops.paged_decode_attention(q, kc, vc, lengths)
+    want = ref.paged_decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 64, 64),
+    (2, 64, 8, 16, 8, 16),
+])
+def test_ssd_scan(B, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((B, S, H)) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.random(H) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, S, N)), jnp.float32)
+    y1, s1 = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, s2 = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_model_ssd():
+    """Kernel agrees with the model's chunked SSD (used in mamba2_forward)."""
+    from repro.models.mamba2 import _ssd_chunked
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = jnp.asarray(RNG.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((B, S, H)) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.random(H) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, S, N)), jnp.float32)
+    y1, s1 = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32)
+    y2, s2 = _ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,r,dr,S", [
+    (2, 4, 128, 16, 256),
+    (1, 16, 512, 64, 512),
+    (3, 8, 256, 32, 128),
+])
+def test_mla_decode_attention(B, H, r, dr, S, dtype):
+    qe = jnp.asarray(RNG.standard_normal((B, H, r)), dtype)
+    qr = jnp.asarray(RNG.standard_normal((B, H, dr)), dtype)
+    cc = jnp.asarray(RNG.standard_normal((B, S, r)), dtype)
+    kr = jnp.asarray(RNG.standard_normal((B, S, dr)), dtype)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+    got = ops.mla_decode_attention(qe, qr, cc, kr, lengths)
+    want = ref.mla_decode_attention_ref(qe, qr, cc, kr, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,KVH,hd,block", [
+    (3, 256, 2, 64, 128),
+    (2, 512, 4, 128, 256),
+    (1, 128, 1, 80, 64),
+])
+def test_kv_cache_write_inplace(B, S, KVH, hd, block):
+    cache = jnp.asarray(RNG.standard_normal((B, S, KVH, hd)), jnp.float32)
+    new = jnp.asarray(RNG.standard_normal((B, KVH, hd)), jnp.float32)
+    pos = jnp.asarray(RNG.integers(0, S, B), jnp.int32)
+    want = ref.kv_cache_write_ref(cache, new, pos)
+    got = ops.kv_cache_write(cache, new, pos, block_s=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,54 @@
+"""Smoke tests for the paper's own evaluation models (qwen3-30b-a3b and
+deepseek-v3 reduced variants) + config registry sanity."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, PAPER_MODELS, REGISTRY, get_config
+from repro.models import model as M
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    assert set(PAPER_MODELS) == {"deepseek-v2-lite-16b", "qwen3-30b-a3b",
+                                 "deepseek-v3"}
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")
+
+
+@pytest.mark.parametrize("name", ["qwen3-30b-a3b", "deepseek-v3"])
+def test_paper_model_smoke(name):
+    cfg = get_config(name + "-smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    logits, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs land near their nameplate sizes."""
+    approx = {
+        "yi-6b": (5e9, 8e9),
+        "chatglm3-6b": (5e9, 8e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "qwen3-30b-a3b": (25e9, 34e9),
+        "arctic-480b": (380e9, 520e9),
+        "mamba2-1.3b": (0.9e9, 1.7e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+        "qwen1.5-0.5b": (0.4e9, 0.8e9),
+        "stablelm-3b": (2.0e9, 3.5e9),
+        "hubert-xlarge": (0.7e9, 1.3e9),
+        "deepseek-v3": (550e9, 750e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_param_counts_much_smaller_for_moe():
+    for name in ["arctic-480b", "deepseek-v3", "qwen3-30b-a3b"]:
+        cfg = get_config(name)
+        assert cfg.param_count(active_only=True) < 0.25 * cfg.param_count()

@@ -1,0 +1,190 @@
+"""Unit + property tests on the scaling planner (the paper's §4.4 logic)."""
+import math
+import re
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core.scaling_plan import (Op, STRATEGIES, placement, plan_cold_restart,
+                                     plan_colocated, plan_elastic,
+                                     plan_extravagant)
+from repro.core.topology import (ElasticConfig, expert_owner, kv_cache_bytes,
+                                 model_tensors)
+
+MCFG = get_config("deepseek-v2-lite-16b")
+KV = kv_cache_bytes(MCFG, batch=8, max_len=4096)
+TENSORS = model_tensors(MCFG, tp=2, kv_bytes_per_replica=KV)
+
+
+def cfg_of(n, tp=2, base=0):
+    return ElasticConfig(dp=n // tp, tp=tp,
+                         devices=tuple(range(base, base + n)))
+
+
+# ------------------------------------------------------------------- units
+
+def test_paper_example_4_to_6():
+    """Paper §5.2: DP2-TP2-EP4 on NPUs 0-3 -> DP3-TP2-EP6 on NPUs 0-5,
+    with the min-move page-table expert placement (paper-faithful)."""
+    from repro.core.expert_pages import ExpertPageTable
+    from repro.core.scaling_plan import plan_elastic_paged
+    old, new = cfg_of(4), cfg_of(6)
+    table = ExpertPageTable(MCFG.num_layers - MCFG.first_k_dense,
+                            MCFG.num_experts)
+    table.initial_place(old)
+    plan = plan_elastic_paged(TENSORS, old, new, table,
+                              first_k_dense=MCFG.first_k_dense)
+    by = plan.bytes_by_op()
+    # zero-copy dominates on shared devices; no disk at all
+    assert Op.DISK not in by
+    assert by[Op.ZERO_COPY] > by.get(Op.P2P, 0)
+    # new devices get attention weights via P2P and fresh KV via INIT
+    p2p_dst = {s.dst for s in plan.steps if s.op == Op.P2P}
+    assert p2p_dst <= {4, 5}   # min-move: only new devices receive bytes
+    init_dst = {s.dst for s in plan.steps if s.op == Op.INIT}
+    assert init_dst == {4, 5}
+    # KV on surviving devices is reused (zero-copy), never re-initialized
+    kv_steps = [s for s in plan.steps if "kv" in s.key.tensor and s.dst < 4]
+    assert all(s.op == Op.ZERO_COPY for s in kv_steps)
+
+
+def test_min_move_beats_contiguous():
+    """The page-table (min-move) remap transfers strictly fewer bytes than
+    the contiguous dense-layout remap for an uneven transition."""
+    from repro.core.expert_pages import ExpertPageTable
+    from repro.core.scaling_plan import plan_elastic_paged
+    old, new = cfg_of(4), cfg_of(6)
+    table = ExpertPageTable(MCFG.num_layers - MCFG.first_k_dense,
+                            MCFG.num_experts)
+    table.initial_place(old)
+    paged = plan_elastic_paged(TENSORS, old, new, table,
+                               first_k_dense=MCFG.first_k_dense)
+    contiguous = plan_elastic(TENSORS, old, new)
+    assert paged.bytes_by_op().get(Op.P2P, 0) < \
+        contiguous.bytes_by_op().get(Op.P2P, 0)
+
+
+def test_scale_down_is_mostly_free():
+    old, new = cfg_of(6), cfg_of(4)
+    plan = plan_elastic(TENSORS, old, new)
+    by = plan.bytes_by_op()
+    assert Op.DISK not in by
+    # only expert migration moves bytes
+    for s in plan.steps:
+        if s.op == Op.P2P:
+            assert "expert" in s.key.tensor
+
+
+def test_tp_fixed_enforced():
+    with pytest.raises(AssertionError):
+        plan_elastic(TENSORS, cfg_of(4, tp=2),
+                     ElasticConfig(dp=2, tp=4, devices=tuple(range(8))))
+
+
+def test_cold_restart_reloads_everything():
+    old, new = cfg_of(4), cfg_of(6)
+    plan = plan_cold_restart(TENSORS, old, new)
+    by = plan.bytes_by_op()
+    assert Op.ZERO_COPY not in by and Op.P2P not in by
+    place = placement(TENSORS, new)
+    want_disk = sum(b for shards in place.values()
+                    for key, b in shards.items() if "kv" not in key.tensor)
+    assert by[Op.DISK] == want_disk
+
+
+def test_extravagant_needs_disjoint_devices():
+    old = cfg_of(4)
+    new = cfg_of(6, base=4)
+    plan = plan_extravagant(TENSORS, old, new)
+    assert Op.ZERO_COPY not in plan.bytes_by_op()
+    with pytest.raises(AssertionError):
+        plan_extravagant(TENSORS, old, cfg_of(6))
+
+
+# -------------------------------------------------------------- properties
+
+sizes = st.sampled_from([2, 4, 6, 8, 12, 16])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_old=sizes, n_new=sizes)
+def test_plan_covers_target_placement_exactly(n_old, n_new):
+    """Every (device, shard) of the target placement is produced by exactly
+    one non-FREE step; FREEs cover exactly the dropped shards."""
+    old, new = cfg_of(n_old), cfg_of(n_new)
+    plan = plan_elastic(TENSORS, old, new)
+    produced = {}
+    for s in plan.steps:
+        if s.op == Op.FREE:
+            continue
+        key = (s.dst, s.key)
+        assert key not in produced, f"duplicate step for {key}"
+        produced[key] = s
+    want = {(d, k) for d, shards in placement(TENSORS, new).items()
+            for k in shards}
+    assert set(produced) == want
+
+    old_place = placement(TENSORS, old)
+    freed = {(s.dst, s.key) for s in plan.steps if s.op == Op.FREE}
+    want_freed = {(d, k) for d, shards in old_place.items() for k in shards
+                  if (d, k) not in want}
+    assert freed == want_freed
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_old=sizes, n_new=sizes)
+def test_p2p_sources_hold_content_and_no_disk(n_old, n_new):
+    """P2P steps always read from a device that holds identical content under
+    the old config; elastic scaling never touches disk."""
+    old, new = cfg_of(n_old), cfg_of(n_new)
+    plan = plan_elastic(TENSORS, old, new)
+    old_place = placement(TENSORS, old)
+    for s in plan.steps:
+        assert s.op != Op.DISK
+        if s.op == Op.P2P:
+            assert s.src in old_place and s.key in old_place[s.src]
+        if s.op == Op.ZERO_COPY:
+            assert s.key in old_place[s.dst]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_old=sizes, n_new=sizes)
+def test_elastic_moves_fewest_bytes(n_old, n_new):
+    """The elastic plan's (p2p + disk) bytes never exceed any baseline's."""
+    old, new = cfg_of(n_old), cfg_of(n_new)
+    pe = plan_elastic(TENSORS, old, new).bytes_by_op()
+    moved_e = pe.get(Op.P2P, 0) + pe.get(Op.DISK, 0)
+    pc = plan_cold_restart(TENSORS, old, new).bytes_by_op()
+    moved_c = pc.get(Op.P2P, 0) + pc.get(Op.DISK, 0)
+    assert moved_e <= moved_c
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, grow=st.integers(1, 3))
+def test_identity_and_growth_monotonicity(n, grow):
+    """Scaling to the same config is 100% zero-copy; growing only adds
+    transfer for new devices."""
+    old = cfg_of(n)
+    same = plan_elastic(TENSORS, old, cfg_of(n))
+    by = same.bytes_by_op()
+    assert set(by) == {Op.ZERO_COPY}
+    bigger = cfg_of(n + 2 * grow)
+    plan = plan_elastic(TENSORS, old, bigger)
+    for s in plan.steps:
+        if s.op in (Op.P2P, Op.INIT):
+            assert s.dst >= n or "expert" in s.key.tensor
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_old=sizes, n_new=sizes)
+def test_expert_ownership_matches_plan(n_old, n_new):
+    old, new = cfg_of(n_old), cfg_of(n_new)
+    plan = plan_elastic(TENSORS, old, new)
+    E = MCFG.num_experts
+    for s in plan.steps:
+        m = re.search(r"/expert(\d+)$", s.key.tensor)
+        if not m or s.op == Op.FREE:
+            continue
+        assert s.dst == expert_owner(int(m.group(1)), E, new)
