@@ -1,16 +1,30 @@
 """Benchmark harness: one module per paper table/figure.
 
-``python -m benchmarks.run`` runs everything and prints both human-readable
-tables and a machine-readable CSV block (name,<row...>).
+``PYTHONPATH=src python -m benchmarks.run`` runs everything and prints both
+human-readable tables and a machine-readable CSV block (name,<row...>).
+``--json PATH`` additionally writes every table to one JSON document — the
+schema is documented in benchmarks/README.md:
+
+    {"tables": [{"name": str, "cols": [str], "rows": [[cell, ...]]}],
+     "failures": [[benchmark_name, error_str]]}
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write all tables as one JSON document")
+    ap.add_argument("--only", metavar="NAME", default=None,
+                    help="run a single benchmark by name (e.g. fig9, table2)")
+    args = ap.parse_args()
+
     from benchmarks import (ablation, bootup_breakdown, engine_measured,
                             granularity, latency_breakdown, memory_vs_ep,
                             peak_memory, scaledown_latency, scaleup_latency,
@@ -29,6 +43,10 @@ def main() -> None:
         ("table2", throughput_windows),
         ("measured", engine_measured),
     ]
+    if args.only:
+        modules = [(n, m) for n, m in modules if n == args.only]
+        if not modules:
+            raise SystemExit(f"unknown benchmark {args.only!r}")
     tables = []
     failures = []
     for name, mod in modules:
@@ -36,7 +54,7 @@ def main() -> None:
         print(f"\n{'=' * 72}\n[{name}] {mod.__doc__.splitlines()[0]}")
         try:
             if mod is slo_dynamics:
-                outs = [mod.run(True), mod.run(False)]
+                outs = [mod.run(True), mod.run(False), mod.run_closed_loop()]
             else:
                 out = mod.run()
                 outs = out if isinstance(out, list) else [out]
@@ -53,6 +71,13 @@ def main() -> None:
     for t in tables:
         for line in t.csv_rows():
             print(line)
+    if args.json:
+        doc = {"tables": [{"name": t.name, "cols": t.cols, "rows": t.rows}
+                          for t in tables],
+               "failures": [list(f) for f in failures]}
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=1, default=str)
+        print(f"\nwrote {len(tables)} tables -> {args.json}")
     if failures:
         print(f"\n{len(failures)} benchmark(s) FAILED: {failures}")
         raise SystemExit(1)

@@ -1,9 +1,17 @@
 """Fig. 9 — SLO attainment dynamics around a scaling event
-(DeepSeek-V2-Lite; scale-up 4->6 and scale-down 6->4; discrete-event sim)."""
+(DeepSeek-V2-Lite; scale-up 4->6 and scale-down 6->4; discrete-event sim).
+
+``run_closed_loop`` additionally replays the scale-up scenario with *no
+scripted command*: the ClusterDriver's SLO-aware loop decides when and how
+far to scale (the paper's §4.3 coordinator, closed over the simulator)."""
+import functools
+
 import numpy as np
 
 from benchmarks.common import Table
 from repro.configs import get_config
+from repro.core.coordinator import ScalingPolicy
+from repro.serving.driver import ClusterDriver, DriverConfig
 from repro.serving.metrics import SLO, slo_attainment_timeline
 from repro.serving.simulator import ServingSimulator
 from repro.serving.workload import make_workload, step_up
@@ -12,6 +20,7 @@ MODEL = "deepseek-v2-lite-16b"
 STRATS = ["elastic", "cold_restart", "colocated"]
 
 
+@functools.lru_cache(maxsize=None)  # run_closed_loop reuses run(True)'s sims
 def _run(strategy: str, up: bool):
     mcfg = get_config(MODEL)
     n0, n1 = (4, 6) if up else (6, 4)
@@ -55,12 +64,51 @@ def run(up=True) -> Table:
     return t
 
 
+def run_closed_loop() -> Table:
+    """Same load shift as fig9a, but the driver decides: scripted scale-up
+    at t=75 vs the closed loop reacting to backlog/attainment on its own."""
+    mcfg = get_config(MODEL)
+    slo = SLO(ttft_s=5.0, tpot_s=1.5)
+    scripted_reqs, scripted_sim = _run("elastic", True)
+
+    sim = ServingSimulator(mcfg, tp=2, ndev=4, strategy="elastic")
+    rps0 = 0.7 * _sustainable_rps(sim, 4)
+    rps1 = 1.3 * _sustainable_rps(sim, 4)
+    reqs = make_workload(duration_s=240.0, rps_fn=step_up(rps0, rps1, 60.0),
+                         prompt_len=2000, output_range=(500, 750), seed=0)
+    policy = ScalingPolicy(slo=slo, window=16, cooldown_s=20.0,
+                           queue_scale_up=8, confirm_s=2.0)
+    driver = ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                           device_pool=range(8),
+                           config=DriverConfig(dt=0.05, settle_s=15.0,
+                                               min_dp=2))
+    driver.run(reqs, until=240.0)
+
+    t = Table("fig9c_closed_loop_slo_timeline",
+              ["t_s", "scripted", "closed_loop", "driver_ndev"])
+    grids = {}
+    for name, (rr, ss) in (("scripted", (scripted_reqs, scripted_sim)),
+                           ("closed_loop", (reqs, sim))):
+        ts, att = slo_attainment_timeline(rr, slo, window_s=20.0, dt=5.0)
+        grids[name] = dict(zip(np.round(ts, 1), att))
+    ndev_at = sorted((e.t_command, e.new_ndev) for e in sim.events)
+    for tt in np.arange(50.0, 240.0, 10.0):
+        ndev = 4
+        for tc, nd in ndev_at:
+            if tc <= tt:
+                ndev = nd
+        t.add(tt, grids["scripted"].get(tt, float("nan")),
+              grids["closed_loop"].get(tt, float("nan")), ndev)
+    return t
+
+
 def main():
     for up in (True, False):
         t = run(up)
         t.show()
         # summary: post-event recovery time to >=0.9
         print()
+    run_closed_loop().show()
 
 
 if __name__ == "__main__":

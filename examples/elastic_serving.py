@@ -1,8 +1,14 @@
-"""End-to-end elastic serving driver: bursty traffic + SLO-aware autoscaler.
+"""Closed-loop elastic serving: bursty traffic + the ClusterDriver.
 
-The Coordinator's load estimator watches windowed SLO attainment and queue
-depth; on violations it scales up (4->6->8 devices), on idle it scales down —
-the full paper §5 lifecycle, on real JAX host devices.
+Unlike the scripted quickstart, nothing here issues a scale command: the
+SLO-aware LoadEstimator watches windowed attainment and queue depth, the
+ClusterDriver picks the next config with the cost model and executes it as a
+resumable ScalingTask — one per-tensor weight-staging increment per engine
+tick, so tokens keep flowing through the whole reconfiguration (paper §4.3 +
+§5, on real JAX host devices).
+
+The same ``ClusterDriver.run`` loop drives the paper-scale discrete-event
+simulator — see benchmarks/slo_dynamics.py.
 
 Run:  PYTHONPATH=src python examples/elastic_serving.py
 """
@@ -11,14 +17,13 @@ import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import numpy as np
-
 from repro.configs.base import ModelConfig
 from repro.core.coordinator import ScalingPolicy
 from repro.core.elastic_engine import ElasticServer
 from repro.core.topology import ElasticConfig
+from repro.serving.driver import ClusterDriver, DriverConfig
 from repro.serving.metrics import SLO, summarize
-from repro.serving.workload import Request
+from repro.serving.workload import scripted_burst
 
 
 def main():
@@ -31,54 +36,36 @@ def main():
     policy = ScalingPolicy(slo=slo, window=8, cooldown_s=3.0,
                            queue_scale_up=3)
     srv = ElasticServer(mcfg, tp=2, batch_per_replica=2, max_len=128,
-                        prefill_buckets=(32,), policy=policy, seed=0)
-    ladder = [ElasticConfig(dp=d, tp=2, devices=tuple(range(2 * d)))
-              for d in (2, 3, 4)]
-    srv.boot(ladder[0])
-    for cfg in ladder[1:]:
-        srv.preinitialize(cfg)     # standby instances (IMM LRU)
-    level = 0
+                        prefill_buckets=(32,), seed=0)
+    srv.boot(ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3)))
+    # standby instance for the anticipated next rung (IMM LRU)
+    srv.preinitialize(ElasticConfig(dp=3, tp=2, devices=(0, 1, 2, 3, 4, 5)))
+
+    driver = ClusterDriver(
+        srv, policy, mcfg=mcfg, tp=2, device_pool=range(8),
+        config=DriverConfig(dt=0.05, settle_s=2.0, min_dp=2))
 
     # bursty arrivals: calm -> burst -> calm
-    rng = np.random.default_rng(1)
-    reqs = []
-    rid = 0
-    for t_arr, n in [(0.0, 2), (1.0, 1), (2.0, 8), (2.3, 6), (6.0, 1)]:
-        for _ in range(n):
-            reqs.append(Request(rid, t_arr, 16, int(rng.integers(10, 24)),
-                                prompt=rng.integers(0, 256, 16)))
-            rid += 1
-
-    t, i, done = 0.0, 0, 0
-    while done < len(reqs):
-        while i < len(reqs) and reqs[i].arrival_s <= t:
-            srv.submit(reqs[i]); i += 1
-        decision = srv.autoscale_decision(t)
-        if decision == "up" and level + 1 < len(ladder):
-            level += 1
-            print(f"[t={t:5.2f}] SCALE UP -> {ladder[level].describe()}")
-            srv.stage_scale(ladder[level])
-            srv.tick(t); t += 0.05          # keep serving while staging
-            srv.switchover()
-        elif decision == "down" and level > 0:
-            tgt = ladder[level - 1]
-            keep = tgt.dp * srv.engine.batch_per_replica
-            srv.stage_scale(tgt)
-            while not srv.engine.drained(keep):
-                done += len(srv.tick(t)); t += 0.05
-            srv.switchover()
-            level -= 1
-            print(f"[t={t:5.2f}] SCALE DOWN -> {ladder[level].describe()}")
-        done += len(srv.tick(t))
-        t += 0.05
-        if t > 120:
+    reqs = scripted_burst([(0.0, 2), (1.0, 1), (2.0, 8), (2.3, 6), (6.0, 1)],
+                          prompt_len=16, output_range=(10, 24),
+                          vocab_size=256, seed=1)
+    until = 0.0
+    while any(r.finish_s is None for r in reqs):
+        until += 5.0
+        driver.run(reqs if until == 5.0 else [], until=until)
+        if until > 120:
             raise RuntimeError("stalled")
 
-    print("\nscale events:")
+    print("driver decisions:")
+    for de in driver.events:
+        print(f"  [t={de.t:5.2f}] {de.direction.upper():4s} {de.src} -> "
+              f"{de.dst} (projected {de.projected_scale_s:.2f}s at scale)")
+    print("\nexecuted scale events:")
     for ev in srv.events:
         print(f"  {ev.src} -> {ev.dst}: zero-copy "
               f"{ev.stats.zero_copy_bytes/1e6:.1f}MB, p2p "
-              f"{ev.stats.p2p_bytes/1e6:.1f}MB, stage {ev.stage_s:.2f}s")
+              f"{ev.stats.p2p_bytes/1e6:.1f}MB, stage {ev.stage_s:.2f}s, "
+              f"compile hit: {ev.compile_hit}")
     print("\nsummary:", summarize(reqs, slo))
     print("final config:", srv.hmm.active_cfg.describe())
 

@@ -14,13 +14,24 @@ from repro.serving.workload import Request
 class ScalingPolicy:
     """SLO-aware load estimator (§4.3): scale up when windowed attainment
     drops below ``low_watermark``; scale down when it stays above
-    ``high_watermark`` with slack capacity."""
+    ``high_watermark`` with slack capacity.
+
+    ``confirm_s``: the raw up/down signal must persist *continuously* for
+    this many seconds before a direction is emitted (0 = act immediately,
+    the pre-driver behaviour).  The closed-loop driver polls ``decide``
+    every tick, so a count of consecutive calls would be satisfied by a
+    momentary blip; wall-clock persistence is the actual anti-flapping
+    control (DESIGN.md §6), together with ``cooldown_s``.
+    ``idle_utilization``: utilization below which scale-down is considered.
+    """
     slo: SLO
     low_watermark: float = 0.90
     high_watermark: float = 0.98
     window: int = 32                  # requests per decision window
     cooldown_s: float = 20.0
     queue_scale_up: int = 8           # also scale up on queue backlog
+    confirm_s: float = 0.0
+    idle_utilization: float = 0.4
 
 
 class LoadEstimator:
@@ -28,6 +39,8 @@ class LoadEstimator:
         self.policy = policy
         self.recent: Deque[bool] = deque(maxlen=policy.window)
         self.last_action_t: float = -1e9
+        self._sig_dir: Optional[str] = None
+        self._sig_t0: float = 0.0
 
     def record(self, req: Request):
         ok = meets_slo(req, self.policy.slo)
@@ -39,20 +52,33 @@ class LoadEstimator:
             return None
         return sum(self.recent) / len(self.recent)
 
-    def decide(self, now: float, queue_depth: int,
-               utilization: float) -> Optional[str]:
-        """Returns 'up' | 'down' | None."""
-        if now - self.last_action_t < self.policy.cooldown_s:
-            return None
+    def _raw_signal(self, queue_depth: int,
+                    utilization: float) -> Optional[str]:
         att = self.attainment()
         if queue_depth >= self.policy.queue_scale_up or \
                 (att is not None and att < self.policy.low_watermark):
-            self.last_action_t = now
-            self.recent.clear()
             return "up"
         if att is not None and att >= self.policy.high_watermark \
-                and utilization < 0.4 and queue_depth == 0:
-            self.last_action_t = now
-            self.recent.clear()
+                and utilization < self.policy.idle_utilization \
+                and queue_depth == 0:
             return "down"
         return None
+
+    def decide(self, now: float, queue_depth: int,
+               utilization: float) -> Optional[str]:
+        """Returns 'up' | 'down' | None.  A non-None return commits the
+        decision: the cooldown starts and the attainment window resets."""
+        if now - self.last_action_t < self.policy.cooldown_s:
+            return None
+        sig = self._raw_signal(queue_depth, utilization)
+        if sig is None:
+            self._sig_dir = None
+            return None
+        if sig != self._sig_dir:
+            self._sig_dir, self._sig_t0 = sig, now
+        if now - self._sig_t0 < self.policy.confirm_s:
+            return None
+        self.last_action_t = now
+        self.recent.clear()
+        self._sig_dir = None
+        return sig

@@ -10,6 +10,12 @@ The serving lifecycle (paper §5):
   surviving decode slots continue on the *same* KV cache rows — zero
   downtime, zero token divergence (asserted in tests).
 * ``scale_down`` drains only the slots being evicted.
+
+For closed-loop operation, ``ElasticServer`` implements the
+``ServingBackend`` protocol (serving/driver.py): ``start_scale`` returns an
+``EngineScalingTask`` that performs the same transition as ``scale_to`` but
+as resumable increments — one per-tensor HMM reshard per ``advance`` call —
+so a ``ClusterDriver`` interleaves real decode ticks with staging work.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from repro.core.coordinator import LoadEstimator, ScalingPolicy
 from repro.core.hmm import HMM, TransferStats
 from repro.core.imm import IMM
 from repro.core.topology import ElasticConfig
+from repro.serving.driver import ScalePhase, admission_during_scale
 from repro.serving.engine import InferenceEngine
 from repro.serving.workload import Request
 
@@ -37,6 +44,76 @@ class ScaleEvent:
     compile_hit: bool
     stage_s: float
     switch_s: float
+
+
+class EngineScalingTask:
+    """Resumable scale transition over the real JAX engine (driver.ScalingTask).
+
+    Phases: STAGING (one per-tensor HMM reshard per ``advance``) ->
+    COMPILING (IMM pre-init; LRU hit makes this ~free) -> DRAINING
+    (scale-down only) -> COMMITTING (switchover) -> DONE.  The engine's
+    ``tick()`` is legal — and expected — between every ``advance`` call.
+    """
+
+    def __init__(self, server: "ElasticServer", target: ElasticConfig):
+        self.server = server
+        self.target = target
+        self.phase = ScalePhase.STAGING
+        self.increments_total = server.hmm.begin_scale(target) + 1  # +compile
+        self.increments_done = 0
+        self.stats: TransferStats = server.hmm._stage_stats
+        # staging-only snapshot, frozen when STAGING completes (``stats``
+        # keeps accumulating: commit merges the KV handover bytes into it)
+        self.stage_stats: Optional[TransferStats] = None
+        self.event: Optional[ScaleEvent] = None
+        self._down = target.ndev < server.engine.cfg.ndev
+        self._keep = target.dp * server.engine.batch_per_replica
+        if self._down:
+            # stop admitting into doomed slots right away so the drain
+            # overlaps the staging increments instead of following them
+            server.engine.admit_limit = self._keep
+        server._active_task = self
+
+    @property
+    def done(self) -> bool:
+        return self.phase.terminal
+
+    def advance(self, now: float) -> ScalePhase:
+        ph = self.phase
+        if ph is ScalePhase.STAGING:
+            more = self.server.hmm.stage_increment()
+            self.increments_done += 1
+            if not more:
+                self.stage_stats = dataclasses.replace(self.stats)
+                self.phase = ScalePhase.COMPILING
+        elif ph is ScalePhase.COMPILING:
+            self.increments_done += 1
+            # staging time = the HMM's tracked staging work, NOT wall time
+            # since task creation (which would count the decode ticks that
+            # ran between increments); _record_stage adds the compile time
+            self.event = self.server._record_stage(
+                self.target, self.stats.wall_s)
+            self.phase = (ScalePhase.DRAINING if self._down
+                          else ScalePhase.COMMITTING)
+        elif ph is ScalePhase.DRAINING:
+            if self.server.engine.drained(self._keep):
+                self.phase = ScalePhase.COMMITTING
+        elif ph is ScalePhase.COMMITTING:
+            self.server.switchover()
+            self.phase = ScalePhase.DONE
+            self.server._active_task = None
+        return self.phase
+
+    def abort(self):
+        assert self.phase in (ScalePhase.STAGING, ScalePhase.COMPILING,
+                              ScalePhase.DRAINING)
+        self.server.hmm.abort()
+        if self._down:
+            # re-open the slots we stopped admitting into in __init__
+            self.server.engine.admit_limit = None
+        self.server._staged_cfg = None
+        self.server._active_task = None
+        self.phase = ScalePhase.ABORTED
 
 
 class ElasticServer:
@@ -56,6 +133,7 @@ class ElasticServer:
         self.requests: Dict[int, Request] = {}
         self.events: List[ScaleEvent] = []
         self._staged_cfg: Optional[ElasticConfig] = None
+        self._active_task: Optional[EngineScalingTask] = None
 
     # ------------------------------------------------------------ lifecycle
     def boot(self, cfg: ElasticConfig):
@@ -76,18 +154,28 @@ class ElasticServer:
         return ev
 
     def stage_scale(self, new_cfg: ElasticConfig) -> ScaleEvent:
+        """Monolithic staging (all increments back-to-back).  The
+        incremental path is ``start_scale`` + ``task.advance``; both funnel
+        into the same ``_record_stage`` bookkeeping."""
         t0 = time.perf_counter()
-        stats = self.hmm.scale(new_cfg)          # weights only; serving free
-        inst = self.imm.preinitialize(new_cfg)   # no-op if pre-initialized
+        self.hmm.scale(new_cfg)                  # weights only; serving free
+        return self._record_stage(new_cfg, time.perf_counter() - t0)
+
+    def _record_stage(self, new_cfg: ElasticConfig, stage_s: float
+                      ) -> ScaleEvent:
+        hit = self.imm.has(new_cfg)
+        t0 = time.perf_counter()
+        self.imm.preinitialize(new_cfg)          # no-op if pre-initialized
+        stage_s += time.perf_counter() - t0      # cold compile counts as stage
         self._staged_cfg = new_cfg
         if new_cfg.ndev < self.engine.cfg.ndev:
             # scale-down: stop admitting into slots that will be evicted
             self.engine.admit_limit = new_cfg.dp * self.engine.batch_per_replica
         ev = ScaleEvent(t=time.time(),
                         src=self.hmm.active_cfg.describe(),
-                        dst=new_cfg.describe(), stats=stats,
-                        compile_hit=inst.compile_s == 0 or inst.activations > 0,
-                        stage_s=time.perf_counter() - t0, switch_s=0.0)
+                        dst=new_cfg.describe(), stats=self.hmm.last_stats,
+                        compile_hit=hit,
+                        stage_s=stage_s, switch_s=0.0)
         self.events.append(ev)
         return ev
 
@@ -112,9 +200,18 @@ class ElasticServer:
 
     def tick(self, now: float) -> List[int]:
         """One engine tick: admit queued requests into free slots, then one
-        decode step.  Returns rids finished this tick."""
+        decode step.  Returns rids finished this tick.
+
+        While a ScalingTask is in flight the shared gating policy applies —
+        the SAME ``admission_during_scale`` the simulator uses — so elastic
+        transitions pause *new* admissions until switchover (paper §C)
+        while in-flight decodes continue."""
+        admitting = True
+        if self._active_task is not None \
+                and not self._active_task.phase.terminal:
+            _, admitting = admission_during_scale("elastic")
         for slot in self.engine.free_slots():
-            if not self.queue:
+            if not admitting or not self.queue:
                 break
             req = self.queue.pop(0)
             self.engine.start_request(req, req.prompt, slot)
@@ -136,5 +233,29 @@ class ElasticServer:
     def autoscale_decision(self, now: float) -> Optional[str]:
         if not self.estimator:
             return None
-        util = (self.engine.active_count() / max(self.engine.num_slots, 1))
-        return self.estimator.decide(now, len(self.queue), util)
+        return self.estimator.decide(now, len(self.queue), self.utilization())
+
+    # --------------------------------------------- ServingBackend protocol
+    def step(self, now: float) -> List[Request]:
+        """One driver quantum == one engine tick; returns finished Requests."""
+        return [self.requests[rid] for rid in self.tick(now)]
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def utilization(self) -> float:
+        return self.engine.utilization()
+
+    def current_config(self) -> ElasticConfig:
+        return self.hmm.active_cfg
+
+    def start_scale(self, target: ElasticConfig) -> EngineScalingTask:
+        """Open a resumable scaling task (the driver advances it one
+        increment per tick; ``scale_to`` remains the blocking equivalent)."""
+        return EngineScalingTask(self, target)
+
+    def prewarm(self, target: ElasticConfig) -> None:
+        self.preinitialize(target)
+
+    def capacity(self, cfg: ElasticConfig) -> int:
+        return cfg.dp * self.engine.batch_per_replica

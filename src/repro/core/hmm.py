@@ -159,6 +159,13 @@ class HMM:
         else:
             self.page_table = None
         self.last_stats: Optional[TransferStats] = None
+        # incremental staging session (begin_scale / stage_increment)
+        self._stage_work: Optional[List[Tuple]] = None
+        self._stage_cursor = 0
+        self._stage_out: List[Any] = []
+        self._stage_treedef = None
+        self._stage_target: Optional[Tuple] = None
+        self._stage_stats: Optional[TransferStats] = None
 
     # ----------------------------------------------------------- shardings
     def param_shardings(self, params, mesh: Mesh):
@@ -239,35 +246,102 @@ class HMM:
         ``commit`` — the cache keeps being written by the live instance and,
         per the paper (§5.2), is handed over *shared*, never copied.
 
+        Monolithic wrapper over the incremental API (``begin_scale`` /
+        ``stage_increment``): runs every increment back-to-back.  Byte
+        accounting is identical either way — the increments are the same
+        reshard calls in the same order (asserted in tests).
+
         Returns transfer stats; staged params are attached by the IMM via
         ``attach_staged`` and made active by ``commit``."""
+        self.begin_scale(new_cfg)
+        while self.stage_increment():
+            pass
+        return self.last_stats
+
+    def begin_scale(self, new_cfg: ElasticConfig) -> int:
+        """Open an incremental staging session toward ``new_cfg``.
+
+        Builds the per-tensor work list (one unit per parameter leaf — the
+        per-layer chunk analogue under this repo's stacked-block layout) but
+        moves no bytes yet.  Returns the number of increments; drive them
+        with ``stage_increment`` — the engine may run decode ticks between
+        calls, which is what makes "throughput during scaling" measurable.
+        """
         assert self.active_cfg is not None
+        assert self._stage_work is None, "staging already in progress"
         assert new_cfg.tp == self.tp, "TP is fixed during scaling (§4.1)"
+        import re
         t0 = time.perf_counter()
-        stats = TransferStats()
         mesh = make_instance_mesh(new_cfg, self.all_devices)
         shardings = self.param_shardings(self.params, mesh)
-
-        def reshard(path_tuple, leaf, sh):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.params)
+        shard_leaves = jax.tree.leaves(shardings)
+        work = []
+        for (path_tuple, leaf), sh in zip(flat, shard_leaves):
             path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                             for k in path_tuple)
-            import re
             expert_dim = None
             if re.search(r"moe/w[igo]$", path):
                 stacked = 1 if "blocks/" in path else 0
                 expert_dim = stacked  # regroup experts at page granularity
-            return reshard_with_reuse(leaf, sh, stats, expert_dim=expert_dim)
+            work.append((path, leaf, sh, expert_dim))
+        self._stage_work = work
+        self._stage_cursor = 0
+        self._stage_out = []
+        self._stage_treedef = treedef
+        self._stage_target = (new_cfg, mesh)
+        # prep (mesh + shardings + tree walk) counts toward staged wall time,
+        # matching the pre-incremental scale() accounting
+        self._stage_stats = TransferStats(wall_s=time.perf_counter() - t0)
+        return len(work)
 
-        new_params = jax.tree_util.tree_map_with_path(
-            reshard, self.params, shardings)
+    @property
+    def staging_remaining(self) -> int:
+        if self._stage_work is None:
+            return 0
+        return len(self._stage_work) - self._stage_cursor
 
-        migrations = []
+    def stage_increment(self, max_tensors: int = 1) -> bool:
+        """Reshard up to ``max_tensors`` parameter tensors toward the target
+        opened by ``begin_scale``.  Safe to interleave with serving: staging
+        only *reads* live params (weights are immutable during serving; the
+        KV cache is not touched until ``commit``).
+
+        Returns True while more increments remain; on the last increment the
+        staged tree is assembled, the expert-page remap is staged, and
+        ``attach_staged``/``commit`` become legal."""
+        assert self._stage_work is not None, "no staging session open"
+        t0 = time.perf_counter()
+        stats = self._stage_stats
+        end = min(self._stage_cursor + max(1, max_tensors),
+                  len(self._stage_work))
+        for path, leaf, sh, expert_dim in self._stage_work[
+                self._stage_cursor:end]:
+            self._stage_out.append(
+                reshard_with_reuse(leaf, sh, stats, expert_dim=expert_dim))
+        self._stage_cursor = end
+        stats.wall_s += time.perf_counter() - t0
+        if self._stage_cursor < len(self._stage_work):
+            return True
+        # final increment: assemble the staged tree + stage the page remap
+        t0 = time.perf_counter()
+        new_cfg, mesh = self._stage_target
+        new_params = jax.tree_util.tree_unflatten(
+            self._stage_treedef, self._stage_out)
         if self.page_table is not None:
-            migrations = self.page_table.stage_remap(new_cfg)
+            self.page_table.stage_remap(new_cfg)
         self.staged = (new_cfg, mesh, new_params)
-        stats.wall_s = time.perf_counter() - t0
+        stats.wall_s += time.perf_counter() - t0
         self.last_stats = stats
-        return stats
+        self._reset_stage_session()
+        return False
+
+    def _reset_stage_session(self):
+        self._stage_work = None
+        self._stage_cursor = 0
+        self._stage_out = []
+        self._stage_treedef = None
+        self._stage_target = None
 
     def _grow_cache(self, new_cfg: ElasticConfig, mesh: Mesh,
                     stats: TransferStats):
@@ -346,6 +420,7 @@ class HMM:
 
     def abort(self):
         self.staged = None
+        self._reset_stage_session()
         if self.page_table is not None:
             self.page_table.abort()
 

@@ -51,6 +51,12 @@ class IMM:
     def _key(self, cfg: ElasticConfig) -> Tuple:
         return (cfg.dp, cfg.tp, cfg.devices)
 
+    def has(self, cfg: ElasticConfig) -> bool:
+        """True if a standby instance for ``cfg`` is already compiled (an
+        imminent ``preinitialize``/``activate`` will be a metadata-only hit).
+        Does not touch LRU order or hit/miss counters."""
+        return self._key(cfg) in self._cache
+
     # ------------------------------------------------------------ pre-init
     def preinitialize(self, cfg: ElasticConfig) -> StandbyInstance:
         """Build (or fetch) a standby instance for ``cfg`` — compile only,

@@ -25,6 +25,15 @@ import jax.numpy as jnp
 
 from repro.models.layers import dot, linear, linear_init
 
+# jax >= 0.5 exposes shard_map at top level (replication check kw is
+# ``check_vma``); 0.4.x only has the experimental module (``check_rep``).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_NOCHECK = {"check_vma": False}
+else:                                     # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_NOCHECK = {"check_rep": False}
+
 
 # -------------------------------------------------------------------- router
 
@@ -128,13 +137,15 @@ def moe_local(cfg, p, x, capacity=None):
 # ---------------------------------------------------------------- EP path
 
 def _moe_ep_shard(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo, x,
-                  capacity):
+                  capacity, n_ep):
     """Body run per (ep, tp) shard under shard_map.
 
     x        [T_local, D]        (token-sharded over ep_axes)
     wi/wg    [E_local, D, F_tp]  wo [E_local, F_tp, D]
+
+    ``n_ep`` is threaded in statically from the mesh (jax 0.4.x has no
+    ``jax.lax.axis_size``, and buffer shapes need it concrete anyway).
     """
-    n_ep = math.prod(jax.lax.axis_size(a) for a in ep_axes)
     E, k = cfg.num_experts, cfg.top_k
     E_local = E // n_ep
     T, D = x.shape
@@ -169,7 +180,7 @@ def _moe_ep_shard(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo, x,
 
 
 def _moe_ep_shard_packed(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo,
-                         x, capacity):
+                         x, capacity, n_ep):
     """Packed-dispatch variant (beyond-paper, EXPERIMENTS.md §Perf B).
 
     Buffers are sized per (src, dst) shard pair — [n_ep, C2, D] with
@@ -182,7 +193,6 @@ def _moe_ep_shard_packed(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo,
     arithmetic intensity.  Use for decode; keep expert-slot dispatch for
     train/prefill.
     """
-    n_ep = math.prod(jax.lax.axis_size(a) for a in ep_axes)
     E, k = cfg.num_experts, cfg.top_k
     E_local = E // n_ep
     T, D = x.shape
@@ -264,15 +274,16 @@ def moe_ep(cfg, p, x, parallel, capacity=None):
     xf = x.reshape(T, D)
     if T_pad != T:
         xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
-    body = partial(shard_body, cfg, ep_axes, tp_axis, ep_axes, capacity=C)
+    body = partial(shard_body, cfg, ep_axes, tp_axis, ep_axes, capacity=C,
+                   n_ep=n_ep)
     x_spec = P(ep_axes, None)
     w_spec_if = P(ep_axes, None, tp_axis)
     w_spec_of = P(ep_axes, tp_axis, None)
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), w_spec_if, w_spec_if, w_spec_of, x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        **_SM_NOCHECK,
     )(p["router"]["w"], p["wi"], p["wg"], p["wo"], xf)
     if T_pad != T:
         y = y[:T]

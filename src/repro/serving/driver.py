@@ -1,0 +1,330 @@
+"""Closed-loop elastic autoscaling driver (DESIGN.md §3, §6).
+
+This module closes the loop the paper's Coordinator (§4.3) describes: one
+``ClusterDriver`` owns a device pool, watches the SLO-aware ``LoadEstimator``,
+selects the next ``ElasticConfig`` with the cost model, and executes the
+transition as a resumable ``ScalingTask`` — advancing exactly **one**
+increment per serving tick so the engine keeps producing tokens throughout
+the reconfiguration (the paper's concurrent, zero-downtime scaling).
+
+The same driver loop runs unchanged over two backends implementing the
+``ServingBackend`` protocol:
+
+* ``repro.core.elastic_engine.ElasticServer`` — real JAX on host devices;
+  staging increments are real per-tensor HMM reshards (zero-copy + P2P),
+* ``repro.serving.simulator.ServingSimulator`` — the calibrated
+  discrete-event model at paper scale; staging duration comes from
+  ``plan_cost`` and commit happens when modelled time reaches ``t_ready``.
+
+Admission gating during a transition is shared policy code
+(``admission_during_scale``) rather than per-backend logic, so the simulator
+cannot silently diverge from engine semantics.
+
+Lifecycle of a ``ScalingTask`` (state diagram in DESIGN.md §3)::
+
+    IDLE -> STAGING -> COMPILING -> [DRAINING] -> COMMITTING -> DONE
+                \\________________________________________/-> ABORTED
+
+DRAINING only occurs on scale-down (evicted decode slots must finish);
+every arrow is traversed by ``advance(now)`` calls between serving ticks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.configs.base import ModelConfig
+from repro.core.coordinator import LoadEstimator, ScalingPolicy
+from repro.core.costmodel import DEFAULT_HW, HardwareModel, plan_cost
+from repro.core.scaling_plan import STRATEGIES, placement
+from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
+from repro.serving.workload import Request, merge_arrivals
+
+
+class ScalePhase(enum.Enum):
+    STAGING = "staging"        # weights moving; serving continues
+    COMPILING = "compiling"    # IMM pre-init (AOT compile) for the target
+    DRAINING = "draining"      # scale-down: evicted slots run to completion
+    COMMITTING = "committing"  # switchover: retarget traffic, shared KV
+    DONE = "done"
+    ABORTED = "aborted"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (ScalePhase.DONE, ScalePhase.ABORTED)
+
+
+class ScalingTask(Protocol):
+    """A resumable scaling transition.  ``advance`` performs (at most) one
+    increment of work and returns the current phase; the driver interleaves
+    serving ticks between calls."""
+    target: ElasticConfig
+    phase: ScalePhase
+
+    def advance(self, now: float) -> ScalePhase: ...
+
+
+def admission_during_scale(strategy: str) -> Tuple[str, bool]:
+    """Shared admission/capacity gating while a transition is in flight.
+
+    Returns ``(capacity, admit_new)`` where capacity is one of
+    ``'old'`` (old instance keeps serving) or ``'none'`` (downtime).
+    Used identically by the real engine path and the simulator — the paper's
+    strategy comparison (§3, §7):
+
+    * elastic / colocated — old instance serves, **new admissions pause**
+      until switchover (§C),
+    * extravagant / horizontal — old instance untouched, admissions continue
+      (the new devices are extra),
+    * cold_restart — the old instance is torn down first: downtime.
+    """
+    if strategy == "cold_restart":
+        return "none", False
+    if strategy in ("extravagant", "horizontal"):
+        return "old", True
+    return "old", False
+
+
+def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
+                    new: ElasticConfig, *, strategy: str = "elastic",
+                    hw: Optional[HardwareModel] = None, preinit: bool = True,
+                    kv_seq_len: int = 4096, kv_batch: int = 8):
+    """Plan + cost of one transition — THE shared costing path: the
+    simulator executes its scale events with this and the ClusterDriver
+    selects targets with it, so projection and execution cannot drift.
+    Returns a ``costmodel.ScalingCost``."""
+    kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len)
+    tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
+    plan = STRATEGIES[strategy](tensors, old, new)
+    resident = {d: sum(s.values())
+                for d, s in placement(tensors, old).items()}
+    return plan_cost(plan, hw=hw or DEFAULT_HW, preinit=preinit,
+                     strategy=strategy, resident_bytes_per_device=resident)
+
+
+@runtime_checkable
+class ServingBackend(Protocol):
+    """What the ClusterDriver needs from a serving system.  Implemented by
+    ``ElasticServer`` (real JAX) and ``ServingSimulator`` (discrete-event)."""
+
+    def submit(self, req: Request) -> None: ...
+
+    def step(self, now: float) -> List[Request]:
+        """Serve one tick/quantum ending at ``now``; returns requests that
+        finished during it."""
+        ...
+
+    def queue_depth(self) -> int: ...
+
+    def utilization(self) -> float:
+        """Fraction of serving capacity currently occupied, in [0, 1]."""
+        ...
+
+    def current_config(self) -> ElasticConfig: ...
+
+    def start_scale(self, target: ElasticConfig) -> ScalingTask: ...
+
+    def prewarm(self, target: ElasticConfig) -> None:
+        """Optional: pre-initialize a standby instance for ``target``."""
+        ...
+
+    def capacity(self, cfg: ElasticConfig) -> int:
+        """Concurrent-request capacity of ``cfg`` on this backend."""
+        ...
+
+
+# ------------------------------------------------------------------ driver
+
+@dataclasses.dataclass
+class DriverConfig:
+    """Target-selection and pacing knobs for the ClusterDriver."""
+    dt: float = 0.05               # driver tick quantum, seconds
+    step_dp: int = 1               # ladder granularity, DP replicas per rung
+    max_step_dp: int = 2           # furthest rung considered per decision
+    min_dp: int = 1
+    settle_s: float = 0.0          # extra hysteresis after a completed scale
+    scale_budget_s: float = math.inf   # veto candidates costlier than this
+    prewarm_next: bool = True      # keep a standby instance one rung up
+    # strategy/hw: None (default) = adopt the backend's own settings so
+    # projections match what it will execute; set explicitly to override.
+    strategy: Optional[str] = None
+    hw: Optional[HardwareModel] = None
+
+
+@dataclasses.dataclass
+class DriverEvent:
+    t: float
+    direction: str                 # 'up' | 'down'
+    src: str
+    dst: str
+    projected_scale_s: float       # cost-model projection used for selection
+
+
+class ClusterDriver:
+    """SLO-aware closed loop: estimator decision -> cost-model target
+    selection -> incremental ScalingTask execution, one increment per tick.
+
+    The driver owns the device pool and the LoadEstimator; the backend owns
+    serving.  ``run()`` is the paper's §5 lifecycle as a loop you can call
+    repeatedly with more arrivals (state persists across calls).
+    """
+
+    def __init__(self, backend: ServingBackend, policy: ScalingPolicy, *,
+                 mcfg: ModelConfig, tp: int, device_pool: Sequence[int],
+                 config: Optional[DriverConfig] = None):
+        self.backend = backend
+        self.estimator = LoadEstimator(policy)
+        self.mcfg = mcfg
+        self.tp = tp
+        self.pool: Tuple[int, ...] = tuple(device_pool)
+        self.config = config or DriverConfig()
+        self.task: Optional[ScalingTask] = None
+        self.events: List[DriverEvent] = []
+        self.finished: List[Request] = []
+        self.t = 0.0
+        self._last_done_t = -math.inf
+        self._pending: List[Request] = []
+        self._pi = 0
+        # Cost-model settings: adopt the backend's own (the simulator costs
+        # its transitions with its kv_seq_len / hw / preinit / strategy)
+        # unless the DriverConfig overrides them explicitly — projections
+        # must match the t_ready the backend will actually execute.
+        self._kv_len = getattr(getattr(backend, "perf", None),
+                               "kv_seq_len", 4096)
+        self._hw = self.config.hw or getattr(backend, "hw", None)
+        self._preinit = bool(getattr(backend, "preinit", True))
+        self._strategy = (self.config.strategy
+                          or getattr(backend, "strategy", "elastic"))
+
+    # ------------------------------------------------------ target selection
+    @property
+    def _disjoint(self) -> bool:
+        """extravagant/horizontal provision NEW devices next to the old."""
+        return self._strategy in ("extravagant", "horizontal")
+
+    def _target_for_dp(self, dp: int,
+                       cur: Optional[ElasticConfig] = None) -> ElasticConfig:
+        if self._disjoint and cur is not None:
+            base = max(cur.devices) + 1
+            return ElasticConfig(dp=dp, tp=self.tp,
+                                 devices=tuple(range(base,
+                                                     base + dp * self.tp)))
+        return ElasticConfig(dp=dp, tp=self.tp,
+                             devices=tuple(self.pool[:dp * self.tp]))
+
+    def _fits_pool(self, dp: int, cur: ElasticConfig) -> bool:
+        need = dp * self.tp + (cur.ndev if self._disjoint else 0)
+        return need <= len(self.pool)
+
+    def ladder(self) -> List[ElasticConfig]:
+        max_dp = len(self.pool) // self.tp
+        return [self._target_for_dp(d)
+                for d in range(self.config.min_dp, max_dp + 1,
+                               self.config.step_dp)]
+
+    def projected_cost_s(self, old: ElasticConfig,
+                         new: ElasticConfig) -> float:
+        """Cost-model projection of the transition's scale time (DESIGN.md
+        §6) via the shared ``transition_cost`` path."""
+        return transition_cost(self.mcfg, self.tp, old, new,
+                               strategy=self._strategy, hw=self._hw,
+                               preinit=self._preinit,
+                               kv_seq_len=self._kv_len).scale_time_s
+
+    def select_target(self, direction: str
+                      ) -> Optional[Tuple[ElasticConfig, float]]:
+        """Pick the next config at step granularity; returns
+        ``(target, projected_scale_s)`` or None.
+
+        Up: the smallest rung (within ``max_step_dp``) whose backend capacity
+        covers current demand (active + queued), falling back to the largest
+        affordable rung; candidates whose projected scale time exceeds
+        ``scale_budget_s`` are vetoed.  Down: one rung, only if the remaining
+        capacity still covers the active load with headroom (not supported
+        for the disjoint-provisioning strategies).
+        """
+        cur = self.backend.current_config()
+        cfg = self.config
+        if direction == "up":
+            rungs = [d for d in range(cur.dp + cfg.step_dp,
+                                      cur.dp + cfg.max_step_dp * cfg.step_dp
+                                      + 1, cfg.step_dp)
+                     if self._fits_pool(d, cur)]
+            if not rungs:
+                return None
+            demand = (self.backend.utilization()
+                      * self.backend.capacity(cur)
+                      + self.backend.queue_depth())
+            affordable = []
+            for d in rungs:
+                cand = self._target_for_dp(d, cur)
+                proj = self.projected_cost_s(cur, cand)
+                if proj <= cfg.scale_budget_s:
+                    affordable.append((cand, proj))
+            if not affordable:
+                return None
+            for cand, proj in affordable:
+                if self.backend.capacity(cand) >= demand:
+                    return cand, proj
+            return affordable[-1]
+        # down: one rung, with capacity headroom for what's still running
+        if self._disjoint:
+            return None
+        d = cur.dp - cfg.step_dp
+        if d < cfg.min_dp:
+            return None
+        cand = self._target_for_dp(d, None)
+        active = self.backend.utilization() * self.backend.capacity(cur)
+        if self.backend.capacity(cand) < active * 1.25 \
+                or self.backend.queue_depth():
+            return None
+        return cand, self.projected_cost_s(cur, cand)
+
+    # -------------------------------------------------------------- the loop
+    def run(self, requests: Sequence[Request], until: float) -> List[Request]:
+        """Advance the closed loop to ``until``.  ``requests`` are *added* to
+        the pending arrival set; call again with more to continue."""
+        if requests:
+            self._pending = merge_arrivals(self._pending, self._pi, requests)
+            self._pi = 0
+        cfgd = self.config
+        while self.t < until:
+            t = self.t
+            while self._pi < len(self._pending) \
+                    and self._pending[self._pi].arrival_s <= t:
+                self.backend.submit(self._pending[self._pi])
+                self._pi += 1
+            # serve one tick, then (at most) one scaling increment — this
+            # interleaving is what makes ticks land *between* increments
+            finished = self.backend.step(t)
+            for r in finished:
+                self.estimator.record(r)
+            self.finished.extend(finished)
+            if self.task is not None:
+                phase = self.task.advance(t)
+                if phase.terminal:
+                    self.task = None
+                    self._last_done_t = t
+            elif t - self._last_done_t >= cfgd.settle_s:
+                decision = self.estimator.decide(
+                    t, self.backend.queue_depth(),
+                    self.backend.utilization())
+                if decision:
+                    picked = self.select_target(decision)
+                    if picked is not None:
+                        target, proj = picked
+                        cur = self.backend.current_config()
+                        self.events.append(DriverEvent(
+                            t=t, direction=decision, src=cur.describe(),
+                            dst=target.describe(), projected_scale_s=proj))
+                        self.task = self.backend.start_scale(target)
+                        if cfgd.prewarm_next and decision == "up" \
+                                and not self._disjoint:
+                            nxt = target.dp + cfgd.step_dp
+                            if self._fits_pool(nxt, target):
+                                self.backend.prewarm(
+                                    self._target_for_dp(nxt))
+            self.t += cfgd.dt
+        return self.finished

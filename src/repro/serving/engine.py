@@ -127,6 +127,10 @@ class InferenceEngine:
     def active_count(self) -> int:
         return sum(1 for s in self.slots if s.active)
 
+    def utilization(self) -> float:
+        """Occupied fraction of decode slots (drives the load estimator)."""
+        return self.active_count() / max(self.num_slots, 1)
+
     # ------------------------------------------------------------- serving
     def start_request(self, req, prompt: np.ndarray, slot: int):
         S = len(prompt)

@@ -12,8 +12,21 @@ calibrated discrete-event model.  What is *measured* vs *modelled*:
   "6 rps before scaling on 6 NPUs" for DeepSeek-V2-Lite and reused
   everywhere;
 * engine semantics (continuous batching, drain-free switchover, admission
-  pause during scaling) — identical logic to the real JAX engine
-  (serving/engine.py), which the integration tests validate on host devices.
+  pause during scaling) — *shared* code with the real JAX engine: the
+  admission gate during a transition is ``driver.admission_during_scale``
+  (the same function the ClusterDriver applies to ``ElasticServer``), and
+  scaling runs as a ``SimScalingTask`` implementing the same
+  ``ScalingTask`` phases the engine path uses, so a ``ClusterDriver`` loop
+  runs unchanged over either backend.
+
+Measured vs modelled (the README table is generated from this docstring):
+
+| quantity                         | source                                  |
+|----------------------------------|-----------------------------------------|
+| scaling latency / downtime       | planner bytes x cost model (byte-exact) |
+| peak memory during transition    | planner placement (byte-exact)          |
+| per-step decode/prefill time     | roofline model, one calibrated sys_eff  |
+| engine/scaling semantics         | shared code with serving/engine.py      |
 """
 from __future__ import annotations
 
@@ -23,10 +36,11 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost, plan_cost
-from repro.core.scaling_plan import STRATEGIES, placement
-from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
-from repro.serving.workload import Request
+from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost
+from repro.core.topology import ElasticConfig, kv_cache_bytes
+from repro.serving.driver import (ScalePhase, admission_during_scale,
+                                  transition_cost)
+from repro.serving.workload import Request, merge_arrivals
 
 
 @dataclasses.dataclass
@@ -76,6 +90,34 @@ class SimScaleEvent:
     cost: ScalingCost
 
 
+class SimScalingTask:
+    """driver.ScalingTask over modelled time: STAGING until the cost model's
+    ``t_ready``, then an instantaneous commit.  The same object is advanced
+    by a ClusterDriver (closed loop) or by the simulator itself (scripted
+    ``command_scale`` benchmarks) — whichever observes ``t_ready`` first."""
+
+    def __init__(self, sim: "ServingSimulator", target: ElasticConfig,
+                 event: SimScaleEvent):
+        self.sim = sim
+        self.target = target
+        self.event = event
+        self.phase = ScalePhase.STAGING
+
+    @property
+    def done(self) -> bool:
+        return self.phase.terminal
+
+    def advance(self, now: float) -> ScalePhase:
+        if self.phase is ScalePhase.STAGING and now >= self.event.t_ready:
+            self.phase = ScalePhase.COMMITTING
+        if self.phase is ScalePhase.COMMITTING:
+            self.sim.ndev = self.event.new_ndev
+            self.sim.extra_devices_during_scale = 0
+            self.sim.scale = None
+            self.phase = ScalePhase.DONE
+        return self.phase
+
+
 class ServingSimulator:
     """One logical serving instance with strategy-dependent scaling."""
 
@@ -104,92 +146,119 @@ class ServingSimulator:
         self.queue: List[Request] = []
         self.running: List[Tuple[float, Request]] = []  # (finish_est, req)
         self.finished: List[Request] = []
-        self.scale: Optional[SimScaleEvent] = None
+        self.scale: Optional[SimScalingTask] = None
         self.events: List[SimScaleEvent] = []
         self.extra_devices_during_scale = 0
 
     # ------------------------------------------------------------- scaling
-    def command_scale(self, new_ndev: int):
-        assert self.scale is None
-        kvb = kv_cache_bytes(self.mcfg, 8, self.perf.kv_seq_len)
-        tensors = model_tensors(self.mcfg, self.tp, kv_bytes_per_replica=kvb)
+    def start_scale(self, target: ElasticConfig) -> SimScalingTask:
+        """Open a scaling task toward ``target`` (driver.ServingBackend).
+        Byte counts come from the real planner; durations from the cost
+        model.  The task commits when modelled time reaches ``t_ready``."""
+        assert self.scale is None, "scaling already in flight"
         old = ElasticConfig(self.ndev // self.tp, self.tp,
                             tuple(range(self.ndev)))
         if self.strategy in ("extravagant", "horizontal"):
-            base = self.ndev
-            new = ElasticConfig(new_ndev // self.tp, self.tp,
-                                tuple(range(base, base + new_ndev)))
-            self.extra_devices_during_scale = new_ndev
-        else:
-            new = ElasticConfig(new_ndev // self.tp, self.tp,
-                                tuple(range(new_ndev)))
-        plan = STRATEGIES[self.strategy](tensors, old, new)
-        resident = {d: sum(s.values())
-                    for d, s in placement(tensors, old).items()}
-        cost = plan_cost(plan, hw=self.hw, preinit=self.preinit,
-                         strategy=self.strategy,
-                         resident_bytes_per_device=resident)
-        self.scale = SimScaleEvent(
+            self.extra_devices_during_scale = target.ndev
+        cost = transition_cost(self.mcfg, self.tp, old, target,
+                               strategy=self.strategy, hw=self.hw,
+                               preinit=self.preinit,
+                               kv_seq_len=self.perf.kv_seq_len)
+        event = SimScaleEvent(
             t_command=self.t, t_ready=self.t + cost.scale_time_s,
             downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,
-            old_ndev=self.ndev, new_ndev=new_ndev, cost=cost)
-        self.events.append(self.scale)
+            old_ndev=self.ndev, new_ndev=target.ndev, cost=cost)
+        self.events.append(event)
         if cost.downtime_s:
             # in-flight requests are stalled for the whole outage (§3 L2)
             self.running = [(f + cost.scale_time_s, rid, r)
                             for f, rid, r in self.running]
             heapq.heapify(self.running)
+        self.scale = SimScalingTask(self, target, event)
+        return self.scale
+
+    def command_scale(self, new_ndev: int) -> SimScalingTask:
+        """Scripted-benchmark entry point: scale to ``new_ndev`` devices
+        (extravagant/horizontal get a disjoint device range)."""
+        base = self.ndev if self.strategy in ("extravagant",
+                                              "horizontal") else 0
+        target = ElasticConfig(new_ndev // self.tp, self.tp,
+                               tuple(range(base, base + new_ndev)))
+        return self.start_scale(target)
 
     # -------------------------------------------------------------- engine
     def _serving_capacity(self) -> Tuple[int, bool]:
-        """(effective ndev, admitting_new) given any in-flight scale."""
+        """(effective ndev, admitting_new) given any in-flight scale.
+        Gating policy is the shared ``driver.admission_during_scale`` — the
+        exact code the real-engine driver applies."""
+        if self.scale is not None:
+            self.scale.advance(self.t)        # commits at/after t_ready
         if self.scale is None:
             return self.ndev, True
-        if self.t >= self.scale.t_ready:
-            self.ndev = self.scale.new_ndev
-            self.scale = None
-            self.extra_devices_during_scale = 0
-            return self.ndev, True
-        if self.strategy == "cold_restart":
-            return 0, False                      # downtime
-        if self.strategy in ("extravagant", "horizontal"):
-            return self.ndev, True               # old untouched
-        # elastic / colocated: old serves but pauses NEW admissions (§C)
-        return self.ndev, False
+        mode, admit = admission_during_scale(self.strategy)
+        return (0 if mode == "none" else self.ndev), admit
+
+    def step(self, now: float) -> List[Request]:
+        """One simulation quantum at time ``now`` (driver.ServingBackend):
+        admit from the queue under the shared gating policy, then complete
+        any requests whose modelled finish time has passed."""
+        self.t = now
+        done: List[Request] = []
+        ndev, admit = self._serving_capacity()
+        if ndev > 0:
+            cap = self.perf.max_batch(ndev, self.kv_frac)
+            # admit from queue
+            while admit and self.queue and len(self.running) < cap:
+                req = self.queue.pop(0)
+                t_first = self.t + self.perf.prefill_s(req.prompt_len, ndev)
+                req.first_token_s = t_first
+                dur = req.output_len * self.perf.decode_step_s(
+                    max(len(self.running) + 1, 1), ndev)
+                heapq.heappush(self.running, (t_first + dur, req.rid, req))
+            # complete requests
+            while self.running and self.running[0][0] <= self.t:
+                _, _, req = heapq.heappop(self.running)
+                req.finish_s = self.t
+                done.append(req)
+        self.finished.extend(done)
+        return done
 
     def run(self, requests: List[Request], until: float, dt: float = 0.05):
         """Advance to ``until``; ``requests`` are *added* to the pending set
         (arrivals persist across calls)."""
         if requests:
-            self._pending = sorted(self._pending[self._pi:] + list(requests),
-                                   key=lambda r: r.arrival_s)
+            self._pending = merge_arrivals(self._pending, self._pi, requests)
             self._pi = 0
-        pending, i = self._pending, self._pi
         while self.t < until:
-            ndev, admit = self._serving_capacity()
-            while i < len(pending) and pending[i].arrival_s <= self.t:
-                self.queue.append(pending[i])
-                i += 1
-            self._pi = i
-            if ndev > 0:
-                cap = self.perf.max_batch(ndev, self.kv_frac)
-                # admit from queue
-                while admit and self.queue and len(self.running) < cap:
-                    req = self.queue.pop(0)
-                    t_first = self.t + self.perf.prefill_s(req.prompt_len,
-                                                           ndev)
-                    req.first_token_s = t_first
-                    dur = req.output_len * self.perf.decode_step_s(
-                        max(len(self.running) + 1, 1), ndev)
-                    heapq.heappush(self.running,
-                                   (t_first + dur, req.rid, req))
-                # complete requests
-                while self.running and self.running[0][0] <= self.t:
-                    _, _, req = heapq.heappop(self.running)
-                    req.finish_s = self.t
-                    self.finished.append(req)
-            self.t += dt
+            while self._pi < len(self._pending) \
+                    and self._pending[self._pi].arrival_s <= self.t:
+                self.submit(self._pending[self._pi])
+                self._pi += 1
+            t = self.t
+            self.step(t)
+            self.t = t + dt
         return self.finished
+
+    # --------------------------------------------- ServingBackend protocol
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def utilization(self) -> float:
+        cap = self.perf.max_batch(self.ndev, self.kv_frac)
+        return len(self.running) / max(cap, 1)
+
+    def current_config(self) -> ElasticConfig:
+        return ElasticConfig(self.ndev // self.tp, self.tp,
+                             tuple(range(self.ndev)))
+
+    def prewarm(self, target: ElasticConfig) -> None:
+        pass  # modelled: pre-init cost is already a plan_cost flag
+
+    def capacity(self, cfg: ElasticConfig) -> int:
+        return self.perf.max_batch(cfg.ndev, self.kv_frac)
 
     def throughput(self, t0: float, t1: float) -> float:
         n = sum(1 for r in self.finished

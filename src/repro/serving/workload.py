@@ -58,6 +58,39 @@ def make_workload(*, duration_s: float, rps_fn: Callable[[float], float],
     return reqs
 
 
+def merge_arrivals(pending: List[Request], consumed: int,
+                   new: List[Request]) -> List[Request]:
+    """Resume-with-more-arrivals protocol shared by ClusterDriver.run and
+    ServingSimulator.run: merge ``new`` requests into the unconsumed tail of
+    ``pending`` (``consumed`` = index of the first undelivered request),
+    keeping arrival order.  The caller resets its cursor to 0."""
+    return sorted(pending[consumed:] + list(new), key=lambda r: r.arrival_s)
+
+
+def scripted_burst(schedule, *, prompt_len: int = 16,
+                   output_range=(10, 24), vocab_size: int = 256,
+                   seed: int = 0, rid0: int = 0) -> List[Request]:
+    """Deterministic engine-run workload from an explicit arrival schedule.
+
+    ``schedule`` is ``[(t_arrival, n_requests), ...]``; every request gets a
+    random prompt (token ids) and output length from ``output_range`` —
+    the calm->burst->calm shapes the closed-loop driver tests and examples
+    replay on real host devices.
+    """
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = rid0
+    for t_arr, n in schedule:
+        for _ in range(n):
+            out = int(rng.integers(output_range[0], output_range[1] + 1))
+            reqs.append(Request(rid, float(t_arr), prompt_len, out,
+                                prompt=rng.integers(0, vocab_size,
+                                                    prompt_len)))
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs
+
+
 # rate profiles used across the benchmarks
 def fixed_rate(rps: float):
     return lambda t: rps

@@ -1,0 +1,35 @@
+"""Docs lint as a tier-1 test: the documentation suite exists and every
+``*.md`` file cited from a docstring resolves (same check CI runs via
+tools/check_doc_refs.py)."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_required_docs_exist():
+    for doc in ("README.md", "DESIGN.md", "EXPERIMENTS.md",
+                "benchmarks/README.md", "ROADMAP.md"):
+        assert (REPO / doc).is_file(), f"missing {doc}"
+
+
+def test_design_md_has_cited_sections():
+    """Docstrings cite DESIGN.md §2/§4/§5 and EXPERIMENTS.md §Perf B —
+    the anchors must exist, not just the files."""
+    design = (REPO / "DESIGN.md").read_text()
+    for anchor in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6"):
+        assert anchor in design, f"DESIGN.md lost section {anchor!r}"
+    experiments = (REPO / "EXPERIMENTS.md").read_text()
+    for anchor in ("§Perf iteration 0", "§Perf iteration A",
+                   "§Perf B", "§Dry-run", "§Roofline"):
+        assert anchor in experiments, f"EXPERIMENTS.md lost {anchor!r}"
+
+
+def test_no_dangling_md_references():
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        from check_doc_refs import dangling_refs
+    finally:
+        sys.path.pop(0)
+    missing = dangling_refs(REPO)
+    assert not missing, f"dangling .md references: {missing}"

@@ -1,0 +1,222 @@
+"""Closed-loop autoscaling driver tests — the ISSUE's acceptance criteria:
+
+* ONE driver loop runs unchanged over both backends (real ElasticServer and
+  the discrete-event ServingSimulator),
+* the driver scales up on burst backlog and back down after it,
+* the engine serves real decode ticks BETWEEN staging increments (>= 3
+  mid-stage) with byte-exact TransferStats vs the monolithic path,
+* tokens stay divergence-free across the incremental scale event.
+"""
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+
+# --------------------------------------------------------------- simulator
+
+def _sim_driver(policy_kw=None, driver_kw=None):
+    from repro.configs import get_config
+    from repro.core.coordinator import ScalingPolicy
+    from repro.serving.driver import ClusterDriver, DriverConfig
+    from repro.serving.metrics import SLO
+    from repro.serving.simulator import ServingSimulator
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+    sim = ServingSimulator(mcfg, tp=2, ndev=4, strategy="elastic")
+    policy = ScalingPolicy(slo=SLO(ttft_s=5.0, tpot_s=1.5), window=16,
+                           cooldown_s=15.0, queue_scale_up=6, confirm_s=1.0,
+                           **(policy_kw or {}))
+    driver = ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                           device_pool=range(8),
+                           config=DriverConfig(dt=0.05, settle_s=15.0,
+                                               min_dp=2,
+                                               **(driver_kw or {})))
+    return mcfg, sim, driver
+
+
+def test_sim_backend_scales_up_on_burst_and_down_after():
+    from repro.serving.workload import burst, make_workload
+
+    mcfg, sim, driver = _sim_driver()
+    reqs = make_workload(duration_s=300.0,
+                         rps_fn=burst(2.0, 14.0, 60.0, 60.0),
+                         prompt_len=2000, output_range=(500, 750), seed=0)
+    driver.run(reqs, until=420.0)
+
+    ups = [e for e in driver.events if e.direction == "up"]
+    downs = [e for e in driver.events if e.direction == "down"]
+    assert ups, "driver never scaled up under the burst"
+    assert downs, "driver never scaled back down"
+    # scale-up happens during/after burst onset, not before
+    assert all(e.t >= 60.0 for e in ups)
+    peak = max(ev.new_ndev for ev in sim.events)
+    assert peak > 4
+    assert sim.ndev < peak, "did not come back down after the burst"
+    # the loop kept serving: essentially everything finishes
+    assert len(driver.finished) >= 0.95 * len(reqs)
+
+
+def test_sim_backend_respects_pool_and_cooldown():
+    from repro.serving.workload import fixed_rate, make_workload
+
+    mcfg, sim, driver = _sim_driver()
+    # hopeless overload: driver must cap at the pool, not beyond
+    reqs = make_workload(duration_s=120.0, rps_fn=fixed_rate(80.0),
+                         prompt_len=2000, output_range=(500, 750), seed=1)
+    driver.run(reqs, until=150.0)
+    assert max((ev.new_ndev for ev in sim.events), default=4) <= 8
+    assert sim.ndev <= 8
+    # decisions are cooldown-spaced
+    ts = [e.t for e in driver.events]
+    assert all(b - a >= 15.0 - 1e-6 for a, b in zip(ts, ts[1:]))
+
+
+def test_driver_selects_cost_and_capacity_aware_targets():
+    mcfg, sim, driver = _sim_driver()
+    # force a backlog so 'up' has demand to cover
+    from repro.serving.workload import Request
+    for i in range(40):
+        sim.submit(Request(i, 0.0, 2000, 600))
+    picked = driver.select_target("up")
+    assert picked is not None
+    tgt, proj = picked
+    assert tgt.dp > sim.current_config().dp
+    assert tgt.ndev <= 8
+    # projected cost comes from the real planner + cost model, with the
+    # backend's own settings — it matches what the backend will execute
+    assert proj > 0
+    assert proj == driver.projected_cost_s(sim.current_config(), tgt)
+    task = sim.start_scale(tgt)
+    executed = task.event.t_ready - task.event.t_command
+    assert abs(executed - proj) < 1e-9, (executed, proj)
+
+
+def test_driver_disjoint_strategy_targets():
+    """extravagant/horizontal provision NEW devices: the driver must build
+    disjoint target ranges (not the pool prefix, which overlaps the old
+    instance and trips the planner's disjointness assert)."""
+    from repro.configs import get_config
+    from repro.core.coordinator import ScalingPolicy
+    from repro.serving.driver import ClusterDriver, DriverConfig
+    from repro.serving.metrics import SLO
+    from repro.serving.simulator import ServingSimulator
+    from repro.serving.workload import Request
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+    sim = ServingSimulator(mcfg, tp=2, ndev=4, strategy="extravagant")
+    policy = ScalingPolicy(slo=SLO(ttft_s=5.0, tpot_s=1.5), window=16,
+                           cooldown_s=15.0, queue_scale_up=6)
+    driver = ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                           device_pool=range(12),
+                           config=DriverConfig(dt=0.05))
+    for i in range(40):
+        sim.submit(Request(i, 0.0, 2000, 600))
+    picked = driver.select_target("up")
+    assert picked is not None
+    tgt, _ = picked
+    assert not set(tgt.devices) & set(sim.current_config().devices)
+    sim.start_scale(tgt)                       # planner accepts disjoint set
+    # scale-down is not defined for disjoint provisioning
+    assert driver.select_target("down") is None
+
+
+# ------------------------------------------------------------- real engine
+
+@pytest.mark.slow
+def test_engine_ticks_between_increments_byte_exact_and_divergence_free():
+    """>= 3 real decode ticks land between HMM staging increments; the
+    incremental TransferStats equal the monolithic ones field by field; and
+    tokens match an unscaled reference exactly."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.core.hmm import HMM
+from repro.serving.driver import ScalePhase
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+# monolithic reference byte accounting (no serving, boot only)
+href = HMM(MCFG, tp=2, batch_per_replica=2, max_len=128, seed=0)
+href.boot(c4)
+ref_stats = href.scale(c6)
+
+def run(scale):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0)
+    srv.boot(c4 if scale else c6)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 40, prompt=rng.integers(0,128,16))
+            for i in range(4)]
+    for r in reqs: srv.submit(r)
+    t, n, task, mid_ticks = 0.0, 0, None, 0
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 5 and task is None:
+            task = srv.start_scale(c6)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            if task.phase is ScalePhase.STAGING:
+                mid_ticks += 1          # this tick ran between increments
+            task.advance(t)
+        assert n < 500
+    toks = {r.rid: srv.engine.generated[r.rid] for r in reqs}
+    return toks, task, mid_ticks
+
+ref_toks, _, _ = run(False)
+got_toks, task, mid_ticks = run(True)
+assert task is not None and task.phase is ScalePhase.DONE
+assert mid_ticks >= 3, mid_ticks
+for f in ("zero_copy_bytes", "p2p_bytes", "local_bytes", "init_bytes",
+          "zero_copy_count", "p2p_count"):
+    a, b = getattr(ref_stats, f), getattr(task.stage_stats, f)
+    assert a == b, (f, a, b)
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], (rid, ref_toks[rid], got_toks[rid])
+print(f"INTERLEAVE-OK ticks={mid_ticks} zc={task.stage_stats.zero_copy_bytes}")
+""")
+    assert "INTERLEAVE-OK" in out
+
+
+@pytest.mark.slow
+def test_engine_backend_closed_loop_up_then_down():
+    """The SAME ClusterDriver loop used on the simulator drives the real
+    engine: backlog -> scale up (serving mid-stage), idle -> drain + scale
+    down, everything finishes."""
+    out = run_with_devices(TEST_MOE + """
+from repro.core.coordinator import ScalingPolicy
+from repro.core.elastic_engine import ElasticServer
+from repro.core.topology import ElasticConfig
+from repro.serving.driver import ClusterDriver, DriverConfig
+from repro.serving.metrics import SLO
+from repro.serving.workload import scripted_burst
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+policy = ScalingPolicy(slo=SLO(ttft_s=1.0, tpot_s=1.0), window=8,
+                       cooldown_s=1.0, queue_scale_up=3)
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0)
+srv.boot(c4)
+srv.preinitialize(c6)
+driver = ClusterDriver(srv, policy, mcfg=MCFG, tp=2, device_pool=range(6),
+                       config=DriverConfig(dt=0.05, settle_s=2.0,
+                                           prewarm_next=False))
+reqs = scripted_burst([(0.0, 2), (0.5, 7), (6.0, 1)], vocab_size=128, seed=1)
+until = 0.0
+while any(r.finish_s is None for r in reqs):
+    until += 10.0
+    driver.run(reqs if until == 10.0 else [], until=until)
+    assert until < 200.0, "stalled"
+dirs = [e.direction for e in driver.events]
+assert "up" in dirs, dirs
+assert "down" in dirs, dirs
+assert srv.hmm.active_cfg.ndev == 4, srv.hmm.active_cfg
+assert srv.engine.num_slots == 4
+# every executed event staged + switched with bytes moved or reused
+for ev in srv.events:
+    assert ev.stats.zero_copy_bytes > 0
+print("CLOSED-LOOP-OK", dirs)
+""")
+    assert "CLOSED-LOOP-OK" in out

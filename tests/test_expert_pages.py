@@ -1,4 +1,7 @@
 """Property tests on the virtual expert page table (vpage-remap analogue)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -3,6 +3,7 @@ import math
 import re
 
 import pytest
+pytest.importorskip("hypothesis")  # optional test extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Docs lint: every ``*.md`` file referenced from Python source must exist.
+
+Docstrings across the repo cite documentation files (e.g. "DESIGN.md §2",
+"EXPERIMENTS.md §Perf B", "benchmarks/README.md"); a citation to a missing
+file is a broken promise to the reader.  CI runs this script and fails on
+any dangling reference.
+
+Usage:  python tools/check_doc_refs.py [repo_root]
+Exit status: 0 clean, 1 dangling references (listed on stderr).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# a markdown-file token: path-ish characters ending in ".md" (word boundary
+# keeps ".mdx" etc. out); leading "./" is tolerated.
+MD_REF = re.compile(r"(?<![\w./-])\.?/?([A-Za-z0-9_][A-Za-z0-9_/.-]*\.md)\b")
+
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def dangling_refs(root: Path):
+    missing = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            text = py.read_text(encoding="utf-8", errors="replace")
+            for lineno, line in enumerate(text.splitlines(), 1):
+                for m in MD_REF.finditer(line):
+                    rel = m.group(1)
+                    # resolve against repo root, then the citing file's dir
+                    if (root / rel).is_file() \
+                            or (py.parent / rel).is_file():
+                        continue
+                    missing.append((py.relative_to(root), lineno, rel))
+    return missing
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    missing = dangling_refs(root)
+    if missing:
+        print("dangling .md references:", file=sys.stderr)
+        for path, lineno, ref in missing:
+            print(f"  {path}:{lineno}: {ref}", file=sys.stderr)
+        return 1
+    print("doc references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
