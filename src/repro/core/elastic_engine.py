@@ -119,10 +119,15 @@ class EngineScalingTask:
 class ElasticServer:
     def __init__(self, mcfg: ModelConfig, *, tp: int, batch_per_replica: int,
                  max_len: int, prefill_buckets=(64,), all_devices=None,
-                 policy: Optional[ScalingPolicy] = None, seed: int = 0):
+                 policy: Optional[ScalingPolicy] = None, seed: int = 0,
+                 kv_mode: str = "dense", kv_block_size: int = 16,
+                 kv_blocks_per_replica: Optional[int] = None):
         self.mcfg = mcfg
+        self.kv_mode = kv_mode
         self.hmm = HMM(mcfg, tp, batch_per_replica=batch_per_replica,
-                       max_len=max_len, all_devices=all_devices, seed=seed)
+                       max_len=max_len, all_devices=all_devices, seed=seed,
+                       kv_mode=kv_mode, kv_block_size=kv_block_size,
+                       kv_blocks_per_replica=kv_blocks_per_replica)
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
                        max_len=max_len, prefill_buckets=prefill_buckets)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,
@@ -140,7 +145,8 @@ class ElasticServer:
         self.hmm.boot(cfg)
         inst, params, cache, _ = self.imm.activate(cfg)
         self.hmm.cache = None  # ownership moves to the engine (donated steps)
-        self.engine.bind(cfg, inst.mesh, params, cache, inst.compiled)
+        self.engine.bind(cfg, inst.mesh, params, cache, inst.compiled,
+                         kv=self.hmm.kv_blocks)
 
     def preinitialize(self, cfg: ElasticConfig):
         """Warm the IMM cache for an anticipated configuration."""
@@ -186,7 +192,8 @@ class ElasticServer:
         self.hmm.commit(live_cache=self.engine.cache)
         inst, params, cache, hit = self.imm.activate(new_cfg)
         self.hmm.cache = None
-        self.engine.bind(new_cfg, inst.mesh, params, cache, inst.compiled)
+        self.engine.bind(new_cfg, inst.mesh, params, cache, inst.compiled,
+                         kv=self.hmm.kv_blocks)
         self.engine.admit_limit = None
         self._staged_cfg = None
         if self.events:
@@ -195,6 +202,16 @@ class ElasticServer:
 
     # -------------------------------------------------------------- serving
     def submit(self, req: Request):
+        kv = self.hmm.kv_blocks
+        if kv is not None:
+            # fail fast on a request no partition can EVER hold (its final
+            # footprint is prompt + output tokens): admission is FIFO
+            # head-of-line, so letting it queue would stall serving forever
+            need = kv.blocks_needed(req.prompt_len + req.output_len)
+            if need > kv.blocks_per_partition:
+                raise ValueError(
+                    f"request {req.rid} needs {need} KV blocks at completion"
+                    f" but a partition holds {kv.blocks_per_partition}")
         self.requests[req.rid] = req
         self.queue.append(req)
 
@@ -205,19 +222,38 @@ class ElasticServer:
         While a ScalingTask is in flight the shared gating policy applies —
         the SAME ``admission_during_scale`` the simulator uses — so elastic
         transitions pause *new* admissions until switchover (paper §C)
-        while in-flight decodes continue."""
+        while in-flight decodes continue.
+
+        Paged KV: admission is additionally gated by free blocks in the
+        target slot's partition (FIFO: the head request tries every free
+        slot before admission stalls), and sequences preempted under pool
+        pressure re-enter at the *front* of the queue."""
         admitting = True
         if self._active_task is not None \
                 and not self._active_task.phase.terminal:
             _, admitting = admission_during_scale("elastic")
-        for slot in self.engine.free_slots():
-            if not admitting or not self.queue:
-                break
-            req = self.queue.pop(0)
+        free = self.engine.free_slots()
+        while admitting and self.queue and free:
+            req = self.queue[0]
+            slot = next((s for s in free
+                         if self.engine.can_admit(req, req.prompt, s)), None)
+            if slot is None:
+                break                   # head-of-line blocks; no skipping
+            free.remove(slot)
+            self.queue.pop(0)
             self.engine.start_request(req, req.prompt, slot)
-            req.first_token_s = now
-            req.token_times = [now]
+            if req.first_token_s is None:
+                req.first_token_s = now
+                req.token_times = [now]
+            elif req.token_times is not None:   # preemption resume
+                req.token_times.append(now)
         finished = []
+        for rid in self.engine.drain_finished_at_admission():
+            req = self.requests[rid]
+            req.finish_s = now
+            finished.append(rid)
+            if self.estimator:
+                self.estimator.record(req)
         for rid, tok, fin in self.engine.decode_tick():
             req = self.requests[rid]
             if req.token_times is not None:
@@ -227,6 +263,9 @@ class ElasticServer:
                 finished.append(rid)
                 if self.estimator:
                     self.estimator.record(req)
+        preempted = self.engine.drain_preempted()
+        if preempted:
+            self.queue[:0] = [self.requests[r] for r in preempted]
         return finished
 
     # ------------------------------------------------------------ decisions
@@ -245,6 +284,10 @@ class ElasticServer:
 
     def utilization(self) -> float:
         return self.engine.utilization()
+
+    def kv_stats(self):
+        """Block-pool stats (None in dense mode); serving/metrics.py."""
+        return self.engine.kv_stats()
 
     def current_config(self) -> ElasticConfig:
         return self.hmm.active_cfg

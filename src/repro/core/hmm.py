@@ -138,17 +138,44 @@ def _assemble_rows(arr, index, dim, dev, stats: TransferStats):
 # ---------------------------------------------------------------------- HMM
 
 class HMM:
-    """Holds weights + KV caches; instances attach via zero-copy handles."""
+    """Holds weights + KV caches; instances attach via zero-copy handles.
+
+    ``kv_mode='paged'``: the KV cache is a block pool ``[L, NB, bs, ...]``
+    partitioned per DP replica (block axis sharded over 'dp'), and the HMM
+    also owns the host-side :class:`~repro.serving.kv_blocks.KVBlockManager`.
+    ``commit`` grows/shrinks the pool by whole partitions: surviving
+    partitions' shards are reused zero-copy (same device, same shard index),
+    so every live block table stays valid verbatim across the scale event —
+    the KV-side vpage-remap (DESIGN.md §7).
+    """
 
     def __init__(self, mcfg: ModelConfig, tp: int, *,
                  batch_per_replica: int, max_len: int,
-                 all_devices=None, seed: int = 0):
+                 all_devices=None, seed: int = 0,
+                 kv_mode: str = "dense", kv_block_size: int = 16,
+                 kv_blocks_per_replica: Optional[int] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.batch_per_replica = batch_per_replica
         self.max_len = max_len
         self.all_devices = list(all_devices or jax.devices())
         self.seed = seed
+        assert kv_mode in ("dense", "paged")
+        self.kv_mode = kv_mode
+        self.kv_block_size = kv_block_size
+        if kv_mode == "paged":
+            from repro.models.model import paged_cache_supported
+            assert paged_cache_supported(mcfg), \
+                f"{mcfg.name} does not support the paged KV layout"
+            assert max_len % kv_block_size == 0
+            # dense-equivalent capacity by default; pressure experiments
+            # pass a smaller pool to force preemption
+            self.kv_blocks_per_replica = (
+                kv_blocks_per_replica
+                or batch_per_replica * (max_len // kv_block_size))
+        else:
+            self.kv_blocks_per_replica = 0
+        self.kv_blocks = None  # KVBlockManager, created at boot (paged only)
         self.active_cfg: Optional[ElasticConfig] = None
         self.params: Any = None
         self.cache: Any = None
@@ -213,11 +240,26 @@ class HMM:
         specs = jax.tree_util.tree_map_with_path(spec, cache)
         return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
 
+    def make_cache(self, cfg: ElasticConfig):
+        """Freshly initialized decode cache for ``cfg`` (dense rows or the
+        paged block pool, per ``kv_mode``)."""
+        from repro.models.model import init_cache, init_paged_cache
+        if self.kv_mode == "paged":
+            return init_paged_cache(
+                self.mcfg, cfg.dp * self.kv_blocks_per_replica,
+                self.kv_block_size)
+        return init_cache(self.mcfg, cfg.dp * self.batch_per_replica,
+                          self.max_len)
+
+    def cache_template(self, cfg: ElasticConfig):
+        """Shape/dtype pytree of the cache for ``cfg`` (no allocation)."""
+        return jax.eval_shape(lambda: self.make_cache(cfg))
+
     # ----------------------------------------------------------------- boot
     def boot(self, cfg: ElasticConfig) -> TransferStats:
         """First boot: 'disk load' = host init + device_put (counted as disk
         bytes by the caller's cost model)."""
-        from repro.models.model import init_cache, init_params
+        from repro.models.model import init_params
         t0 = time.perf_counter()
         assert cfg.tp == self.tp
         mesh = make_instance_mesh(cfg, self.all_devices)
@@ -226,14 +268,18 @@ class HMM:
         shardings = self.param_shardings(params, mesh)
         self.params = jax.tree.map(
             lambda x, s: jax.device_put(x, s), params, shardings)
-        cache = init_cache(self.mcfg, cfg.dp * self.batch_per_replica,
-                           self.max_len)
+        cache = self.make_cache(cfg)
         cshard = self.cache_shardings(cache, mesh)
         self.cache = jax.tree.map(lambda x, s: jax.device_put(x, s),
                                   cache, cshard)
         self.active_cfg = cfg
         if self.page_table is not None and not self.page_table.active:
             self.page_table.initial_place(cfg)
+        if self.kv_mode == "paged" and self.kv_blocks is None:
+            from repro.serving.kv_blocks import KVBlockManager
+            self.kv_blocks = KVBlockManager(cfg.dp,
+                                            self.kv_blocks_per_replica,
+                                            self.kv_block_size)
         st = TransferStats(wall_s=time.perf_counter() - t0)
         self.last_stats = st
         return st
@@ -345,12 +391,12 @@ class HMM:
 
     def _grow_cache(self, new_cfg: ElasticConfig, mesh: Mesh,
                     stats: TransferStats):
-        """Reuse surviving replicas' KV shards; zero-init new replicas."""
-        from repro.models.model import init_cache
-        old_cfg = self.active_cfg
-        new_batch = new_cfg.dp * self.batch_per_replica
-        template = jax.eval_shape(
-            lambda: init_cache(self.mcfg, new_batch, self.max_len))
+        """Reuse surviving replicas' KV shards; zero-init new replicas.
+
+        Works unchanged for both layouts: dense rows shard the batch axis,
+        the paged pool shards the block axis — either way surviving shards
+        keep their (index, device) key and are adopted zero-copy."""
+        template = self.cache_template(new_cfg)
         cshard = self.cache_shardings(template, mesh)
 
         def grow(old_leaf, tmpl, sh):
@@ -408,6 +454,13 @@ class HMM:
         if live_cache is not None:
             self.cache = live_cache
         self.cache = self._grow_cache(new_cfg, mesh, stats)
+        if self.kv_blocks is not None:
+            # pool partitions track DP replicas; block ids of survivors are
+            # unchanged, so live block tables need no translation
+            if new_cfg.dp >= self.kv_blocks.num_partitions:
+                self.kv_blocks.grow_partitions(new_cfg.dp)
+            else:
+                self.kv_blocks.shrink_partitions(new_cfg.dp)
         self.active_cfg = new_cfg
         self.params = params
         self.staged = None

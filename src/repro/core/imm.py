@@ -70,7 +70,9 @@ class IMM:
         compiled, dt = compile_step_functions(
             self.mcfg, cfg, mesh, params_sds, cache_sds,
             batch_per_replica=self.batch_per_replica, max_len=self.max_len,
-            prefill_buckets=self.prefill_buckets)
+            prefill_buckets=self.prefill_buckets,
+            kv_mode=self.hmm.kv_mode,
+            kv_block_size=self.hmm.kv_block_size)
         inst = StandbyInstance(cfg, mesh, compiled, dt)
         self._cache[key] = inst
         self.stats["compile_s_total"] += dt
@@ -81,7 +83,7 @@ class IMM:
     def _shape_templates(self, cfg: ElasticConfig, mesh):
         """Sharded ShapeDtypeStructs for params+cache — no allocation."""
         import jax.numpy as jnp
-        from repro.models.model import init_cache, init_params
+        from repro.models.model import init_params
 
         params_shape = jax.eval_shape(
             lambda: init_params(self.mcfg, jax.random.PRNGKey(0),
@@ -90,9 +92,7 @@ class IMM:
         params_sds = jax.tree.map(
             lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
             params_shape, pshard)
-        cache_shape = jax.eval_shape(
-            lambda: init_cache(self.mcfg,
-                               cfg.dp * self.batch_per_replica, self.max_len))
+        cache_shape = self.hmm.cache_template(cfg)
         cshard = self.hmm.cache_shardings(cache_shape, mesh)
         cache_sds = jax.tree.map(
             lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),

@@ -41,6 +41,27 @@ def paged_decode_attention(q, k_cache, v_cache, lengths, **kw):
     return _paged(q, k_cache, v_cache, lengths, **kw)
 
 
+def block_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                                 **kw):
+    """Block-table paged decode (serving hot path; see kv_blocks.py).
+
+    ``impl='kernel'`` forces the Pallas kernel, ``'ref'`` the jnp gather
+    oracle; the default ``'auto'`` (overridable via ``REPRO_PAGED_IMPL``)
+    runs the kernel on accelerators and falls back to the reference on CPU —
+    interpret-mode Pallas inside the per-layer decode scan is far slower
+    than the gather, and the two are parity-tested in test_kernels.py.
+    """
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_PAGED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import block_paged_decode_attention_ref
+        return block_paged_decode_attention_ref(q, k_pool, v_pool,
+                                                block_tables, lengths)
+    from repro.kernels.paged_attention import \
+        block_paged_decode_attention as _block_paged
+    kw.setdefault("interpret", _INTERPRET)
+    return _block_paged(q, k_pool, v_pool, block_tables, lengths, **kw)
+
+
 def ssd_scan(x, dt, A, Bm, Cm, **kw):
     kw.setdefault("interpret", _INTERPRET)
     return _ssd(x, dt, A, Bm, Cm, **kw)

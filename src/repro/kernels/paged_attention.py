@@ -1,13 +1,23 @@
-"""Decode attention over the (slot-contiguous) KV cache (Pallas TPU).
+"""Decode attention over the KV cache (Pallas TPU) — two layouts.
 
-One query token per sequence against a cache of up to ``S_max`` entries,
-masked by per-sequence valid length.  Lengths arrive via scalar prefetch so
-the kernel skips kv tiles entirely beyond a sequence's length — on real
-hardware this is the difference between O(S_max) and O(len) HBM traffic per
-step, which is what makes decode at 32k practical.
+``paged_decode_attention``: slot-contiguous cache ``[B, S_max, KVH, hd]``
+(one dense row per sequence).  One query token per sequence, masked by
+per-sequence valid length.  Lengths arrive via scalar prefetch so the kernel
+skips kv tiles entirely beyond a sequence's length — on real hardware this
+is the difference between O(S_max) and O(len) HBM traffic per step.
+
+``block_paged_decode_attention``: the PagedAttention layout — one shared
+block *pool* ``[NB, bs, KVH, hd]`` plus per-sequence block tables
+``[B, MB]`` (``serving/kv_blocks.py``).  The block table rides the scalar
+prefetch too: each kv BlockSpec index_map dereferences ``table[b, ki]`` to
+pick the physical block, so the kernel reads exactly the blocks a sequence
+owns — non-contiguous pool rows appear contiguous to the softmax, the
+kernel-level zero-copy-remap guarantee (permuting pool rows + tables is a
+no-op, asserted in tests).
 
 Grid (B, KVH, n_k); q block [1, 1, G, hd] (the G=H/KVH grouped query heads
-of one kv head), kv blocks [1, bk, 1, hd]; online softmax in VMEM scratch.
+of one kv head), kv blocks [1, bk, 1, hd] (dense) / [1, bs, 1, hd] (paged);
+online softmax in VMEM scratch.
 """
 from __future__ import annotations
 
@@ -97,4 +107,57 @@ def paged_decode_attention(q: jax.Array, k_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)
+
+
+def _block_kernel(lengths_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, block_k, n_k):
+    # block table is consumed by the BlockSpec index maps; the compute body
+    # is identical to the slot-contiguous kernel
+    del bt_ref
+    _kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            scale=scale, block_k=block_k, n_k=n_k)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_tables: jax.Array,
+                                 lengths: jax.Array, *,
+                                 interpret: bool = False) -> jax.Array:
+    """q [B,H,hd]; k/v_pool [NB,bs,KVH,hd]; block_tables [B,MB] int32;
+    lengths [B] -> [B,H,hd].  kv tile ``ki`` of sequence ``b`` is pool row
+    ``block_tables[b, ki]`` — dereferenced in the BlockSpec index_map via
+    scalar prefetch, so only owned blocks are streamed from HBM (and none at
+    all beyond ``lengths[b]``)."""
+    B, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, scale=scale, block_k=bs, n_k=MB),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KVH, MB),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, ki, L, BT: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, ki, L, BT: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables.astype(jnp.int32), qg, k_pool, v_pool)
     return out.reshape(B, H, hd)

@@ -52,6 +52,23 @@ def paged_decode_attention_ref(q, k_cache, v_cache, lengths):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def block_paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Block-table paged decode: q [B,H,hd]; k/v_pool [NB,bs,KVH,hd];
+    block_tables [B,MB] (pool indices; entries past a sequence's length are
+    don't-care); lengths [B] -> [B,H,hd].
+
+    Gathers each sequence's K/V through its block table into a contiguous
+    [B, MB*bs, KVH, hd] view, then runs the dense masked decode attention —
+    the oracle the Pallas kernel (and the engine's CPU fallback) must match.
+    """
+    B, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, MB * bs, KVH, hd)
+    v = v_pool[block_tables].reshape(B, MB * bs, KVH, hd)
+    return paged_decode_attention_ref(q, k, v, lengths)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Sequential (exact) SSD recurrence.  x [B,S,H,P], dt [B,S,H], A [H],
     Bm/Cm [B,S,N] -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""

@@ -205,6 +205,43 @@ def attention_apply(cfg, p, x, positions, *, cache=None, write_pos=None,
     return linear(p["o"], y.reshape(B, Sq, H * hd)), new_cache
 
 
+def paged_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
+                          block_tables, write_block, lengths):
+    """Decode-step attention over the paged KV pool (serving/kv_blocks.py).
+
+    x [B,1,D]; k/v_pool [NB,bs,KVH,hd] (this layer's pool); block_tables
+    [B,MB]; write_block [B] = pool row receiving this step's k/v (the
+    engine guarantees it is uniquely owned — CoW happened before the step;
+    entries == NB mark inactive slots and are dropped); lengths [B] = tokens
+    already cached (the new token lands at offset ``lengths % bs``).
+    Returns (y [B,1,D], (k_pool', v_pool')).
+    """
+    from repro.kernels import ops
+
+    B, _, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    bs = k_pool.shape[1]
+
+    q = linear(p["q"], x).reshape(B, 1, H, hd)
+    k = linear(p["k"], x).reshape(B, 1, KVH, hd)
+    v = linear(p["v"], x).reshape(B, 1, KVH, hd)
+    rot_dim = int(cfg.resolved_head_dim * cfg.rope_fraction) // 2 * 2
+    if rot_dim:
+        cos, sin = rope_tables(positions, rot_dim)
+        q = apply_rope(q, cos, sin, rot_dim)
+        k = apply_rope(k, cos, sin, rot_dim)
+
+    off = lengths % bs
+    k_pool = k_pool.at[write_block, off].set(k[:, 0].astype(k_pool.dtype),
+                                             mode="drop")
+    v_pool = v_pool.at[write_block, off].set(v[:, 0].astype(v_pool.dtype),
+                                             mode="drop")
+    o = ops.block_paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                         block_tables, lengths + 1)
+    y = linear(p["o"], o.reshape(B, 1, H * hd))
+    return y, (k_pool, v_pool)
+
+
 # ----------------------------------------------------------------------- mlp
 
 def mlp_init(rng, d_model, d_ff, dtype, gated=True):

@@ -309,6 +309,102 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     return cache
 
 
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """The block-managed KV layout covers standard-attention decoders
+    (dense + MoE).  MLA/SSM/hybrid/VLM state and windowed attention keep the
+    dense layout (their caches are not per-token-appendable in the same
+    way); DESIGN.md §7."""
+    return (cfg.has_decode and cfg.arch_type in ("dense", "moe")
+            and not cfg.use_mla and cfg.attn_window is None)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None):
+    """Block-pool decode cache: {'k','v': [L, NB, bs, KVH, hd]}.
+
+    One pool row per (layer, block); ``serving/kv_blocks.py`` owns which
+    sequence maps to which rows.  The block axis is sharded over 'dp'
+    (one partition of ``NB/dp`` rows per replica), so growing the instance
+    appends partitions and surviving rows are reused zero-copy.
+    """
+    assert paged_cache_supported(cfg), \
+        f"{cfg.name}: paged KV requires a standard-attention decoder"
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((L, num_blocks, block_size, KVH, hd), dtype),
+            "v": jnp.zeros((L, num_blocks, block_size, KVH, hd), dtype)}
+
+
+def write_prefill_to_blocks(cache, dense_cache, block_ids):
+    """Scatter one sequence's dense prefill KV ([L, 1, S, KVH, hd]) into its
+    pool blocks.  ``block_ids`` [S/bs] holds the pool row per prompt chunk;
+    entries == NB are dropped — the engine passes the sentinel both for
+    padding chunks beyond the prompt and for CoW-shared prefix blocks, which
+    must NOT be rewritten (they hold another live sequence's identical
+    prefix, plus possibly its tokens beyond this prompt's length)."""
+    bs = cache["k"].shape[2]
+    nb = block_ids.shape[0]
+
+    def put(pool, small):
+        L = pool.shape[0]
+        rows = small[:, 0, :nb * bs].reshape(L, nb, bs, *small.shape[3:])
+        return pool.at[:, block_ids].set(rows.astype(pool.dtype), mode="drop")
+
+    return {"k": put(cache["k"], dense_cache["k"]),
+            "v": put(cache["v"], dense_cache["v"])}
+
+
+def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
+                      lengths, block_tables, write_block, *, parallel=None):
+    """One decode step over the paged KV pool.  tokens [B,1]; lengths [B];
+    block_tables [B,MB] (pool rows per sequence, position-ordered);
+    write_block [B] = row receiving this token's k/v (== NB for inactive
+    slots -> dropped).  Returns (logits [B,V], cache')."""
+    from repro.models.layers import paged_attention_apply
+
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = lengths[:, None]
+    moe = cfg.is_moe
+
+    def block(bp, x, kp, vp):
+        h = apply_norm(bp["ln1"], x, cfg.norm_type)
+        a, (kp, vp) = paged_attention_apply(
+            cfg, bp["attn"], h, positions, k_pool=kp, v_pool=vp,
+            block_tables=block_tables, write_block=write_block,
+            lengths=lengths)
+        x = x + a
+        h = apply_norm(bp["ln2"], x, cfg.norm_type)
+        y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
+                         moe=moe and "moe" in bp)
+        return x + y, kp, vp
+
+    nk = cfg.first_k_dense if moe else 0
+    new_k, new_v = [], []
+    for i in range(nk):
+        x, kp, vp = block(params["dense_prefix"][i], x,
+                          cache["k"][i], cache["v"][i])
+        new_k.append(kp)
+        new_v.append(vp)
+
+    def body(x, inp):
+        bp, kp, vp = inp
+        x, kp, vp = block(bp, x, kp, vp)
+        return x, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                         cache["k"][nk:], cache["v"][nk:]))
+    if nk:
+        ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
+        vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
+    new_cache = {"k": ks, "v": vs}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = linear(params["lm_head"], x[:, 0])
+    return logits, new_cache
+
+
 def _cache_slot(cfg, lengths):
     """KV write slot for each sequence (ring-buffered under attn_window)."""
     if cfg.attn_window is None:

@@ -134,6 +134,14 @@ class ServingBackend(Protocol):
         """Concurrent-request capacity of ``cfg`` on this backend."""
         ...
 
+    def kv_stats(self) -> Optional[dict]:
+        """Paged-KV block-pool stats (num_blocks / used_blocks /
+        utilization / preemptions), or None when the backend serves with
+        the dense layout.  Both backends implement it; with paged KV the
+        driver's ``utilization()`` signal *is* block occupancy, so memory
+        pressure — not just slot occupancy — drives scaling decisions."""
+        ...
+
 
 # ------------------------------------------------------------------ driver
 
@@ -160,6 +168,8 @@ class DriverEvent:
     src: str
     dst: str
     projected_scale_s: float       # cost-model projection used for selection
+    kv_util: Optional[float] = None    # block-pool occupancy at decision
+    preemptions: int = 0               # cumulative, at decision time
 
 
 class ClusterDriver:
@@ -316,9 +326,14 @@ class ClusterDriver:
                     if picked is not None:
                         target, proj = picked
                         cur = self.backend.current_config()
+                        kv = getattr(self.backend, "kv_stats",
+                                     lambda: None)()
                         self.events.append(DriverEvent(
                             t=t, direction=decision, src=cur.describe(),
-                            dst=target.describe(), projected_scale_s=proj))
+                            dst=target.describe(), projected_scale_s=proj,
+                            kv_util=(kv or {}).get("utilization"),
+                            preemptions=int((kv or {}).get(
+                                "preemptions", 0))))
                         self.task = self.backend.start_scale(target)
                         if cfgd.prewarm_next and decision == "up" \
                                 and not self._disjoint:

@@ -1,10 +1,23 @@
 """Inference engine: continuous batching over an elastic instance.
 
-The engine executes *real* JAX on the instance's mesh.  Decode slots are
-rows of the HMM-owned global KV cache; scaling grows the slot count and the
-surviving slots' state is reused zero-copy (the paper's "seamless handoff,
-same KV cache", §5.2) — the determinism test asserts that tokens generated
-across a scale-up event are identical to an unscaled run.
+The engine executes *real* JAX on the instance's mesh.  Two KV layouts:
+
+* **dense** (``kv_mode='dense'``): decode slots are rows of the HMM-owned
+  global ``[L, B, max_len, ...]`` cache; every admitted request reserves a
+  full-length row.
+* **paged** (``kv_mode='paged'``): the cache is a block *pool*
+  ``[L, NB, bs, ...]`` and each slot holds a block table
+  (``serving/kv_blocks.py``).  Admission is gated by free blocks, shared
+  prompt prefixes are copy-on-write, and when a partition's pool runs dry
+  the lowest-priority sequence is preempted (freed + re-queued; recomputed
+  on resume).  Decode attention gathers K/V through the block table
+  (``kernels.ops.block_paged_decode_attention``).
+
+Scaling grows the slot count (dense) or appends pool partitions (paged) and
+the surviving slots' state is reused zero-copy (the paper's "seamless
+handoff, same KV cache", §5.2) — with paged KV the survivors' block tables
+stay valid *verbatim*, and the determinism test asserts that tokens
+generated across a scale-up event are identical to an unscaled run.
 
 Step functions are AOT-compiled per (ElasticConfig, shape bucket); the IMM
 caches them — compilation is the JAX analogue of instance pre-initialization.
@@ -26,6 +39,7 @@ from repro.configs.base import ModelConfig
 from repro.core.topology import ElasticConfig
 from repro.distributed.sharding import ParallelCtx
 from repro.models import model as M
+from repro.serving.kv_blocks import KVBlockManager
 
 
 def engine_parallel_ctx(mesh) -> ParallelCtx:
@@ -33,18 +47,35 @@ def engine_parallel_ctx(mesh) -> ParallelCtx:
                        dp_axes=("dp",), moe_tp=False)
 
 
-def _decode_fn(mcfg: ModelConfig, parallel, temperature, params, cache,
-               tokens, lengths, active, rng):
-    logits, cache = M.decode_step(mcfg, params, tokens[:, None], cache,
-                                  lengths, parallel=parallel)
+def _sample(logits, tokens, active, rng, temperature):
     if temperature and temperature > 0:
         nxt = jax.random.categorical(
             rng, logits.astype(jnp.float32) / temperature, axis=-1
         ).astype(jnp.int32)
     else:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    nxt = jnp.where(active, nxt, tokens)
-    return nxt, cache
+    return jnp.where(active, nxt, tokens)
+
+
+def _decode_fn(mcfg: ModelConfig, parallel, temperature, params, cache,
+               tokens, lengths, active, rng):
+    logits, cache = M.decode_step(mcfg, params, tokens[:, None], cache,
+                                  lengths, parallel=parallel)
+    return _sample(logits, tokens, active, rng, temperature), cache
+
+
+def _paged_decode_fn(mcfg: ModelConfig, parallel, temperature, params, cache,
+                     tokens, lengths, active, block_tables, rng):
+    """Paged decode: block_tables [B, MB]; the write block is derived from
+    each sequence's length; inactive slots write to the NB sentinel row
+    (dropped)."""
+    NB, bs = cache["k"].shape[1], cache["k"].shape[2]
+    wb = jnp.take_along_axis(block_tables, (lengths // bs)[:, None], 1)[:, 0]
+    wb = jnp.where(active, wb, NB)
+    logits, cache = M.paged_decode_step(mcfg, params, tokens[:, None], cache,
+                                        lengths, block_tables, wb,
+                                        parallel=parallel)
+    return _sample(logits, tokens, active, rng, temperature), cache
 
 
 def _prefill_fn(mcfg: ModelConfig, parallel, max_len, params, cache, tokens,
@@ -64,18 +95,48 @@ def _prefill_fn(mcfg: ModelConfig, parallel, max_len, params, cache, tokens,
     return first, cache
 
 
+def _paged_prefill_fn(mcfg: ModelConfig, parallel, params, cache, tokens,
+                      length, block_ids):
+    """Prefill one request and scatter its KV into pool blocks.
+
+    ``block_ids`` [S_pad/bs]: pool row per prompt chunk; the NB sentinel
+    marks both padding chunks and CoW-shared prefix blocks (already resident
+    with identical contents — rewriting them would clobber a co-owner's
+    tokens beyond this prompt's length)."""
+    S_pad = tokens.shape[1]
+    logits, small = M.prefill(mcfg, params,
+                              {"tokens": tokens, "lengths": length[None]},
+                              max_len=S_pad, parallel=parallel)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+    cache = M.write_prefill_to_blocks(cache, small, block_ids)
+    return first, cache
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _cow_copy(cache, src, dst):
+    """Copy pool block row ``src`` -> ``dst`` in every layer of every pool
+    tensor; donation lets XLA alias the buffers (in-place on the pool)."""
+    return jax.tree.map(
+        lambda p: p.at[:, dst].set(
+            jax.lax.dynamic_index_in_dim(p, src, axis=1, keepdims=False)),
+        cache)
+
+
 @dataclasses.dataclass
 class SlotState:
     rid: int = -1
     remaining: int = 0
     active: bool = False
+    priority: int = 0
 
 
 class InferenceEngine:
     """Continuous-batching engine bound to one (cfg, mesh, compiled steps).
 
-    The engine object survives scaling: ``rebind`` swaps in the new
-    instance's mesh/cache/compiled functions while preserving slot states.
+    The engine object survives scaling: ``bind`` swaps in the new
+    instance's mesh/cache/compiled functions while preserving slot states
+    (and, in paged mode, block tables — the pool only grows/shrinks whole
+    partitions, so surviving tables need no translation).
     """
 
     def __init__(self, mcfg: ModelConfig, *, batch_per_replica: int,
@@ -93,28 +154,49 @@ class InferenceEngine:
         self.tokens: Optional[np.ndarray] = None
         self.generated: Dict[int, List[int]] = {}
         self.admit_limit: Optional[int] = None  # scale-down drain barrier
+        # paged-KV state (kv_mode='paged'); see serving/kv_blocks.py
+        self.kv: Optional[KVBlockManager] = None
+        self.block_tables: Optional[np.ndarray] = None
+        self._preempted_pending: List[int] = []   # rids awaiting re-queue
+        self._resume_rids: set = set()            # preempted at least once
+        self._finished_at_admission: List[int] = []
+        self.preemptions = 0
 
     # ------------------------------------------------------------- binding
     @property
     def num_slots(self) -> int:
         return 0 if self.cfg is None else self.cfg.dp * self.batch_per_replica
 
-    def bind(self, cfg: ElasticConfig, mesh, params, cache, compiled):
+    @property
+    def paged(self) -> bool:
+        return self.kv is not None
+
+    def bind(self, cfg: ElasticConfig, mesh, params, cache, compiled,
+             kv: Optional[KVBlockManager] = None):
         old_slots = self.slots
         old_lengths = self.lengths
         old_tokens = self.tokens
+        old_tables = self.block_tables
         self.cfg, self.mesh = cfg, mesh
         self.params, self.cache = params, cache
         self.compiled = compiled
+        self.kv = kv
         n = self.num_slots
         self.slots = [SlotState() for _ in range(n)]
         self.lengths = np.zeros((n,), np.int32)
         self.tokens = np.zeros((n,), np.int32)
+        if self.paged:
+            bs = self.kv.block_size
+            assert self.max_len % bs == 0 and self.prefill_bucket % bs == 0, \
+                "max_len and prefill buckets must be block-size multiples"
+            self.block_tables = np.zeros((n, self.max_len // bs), np.int32)
         # surviving slots keep their requests (zero-copy KV reuse)
         for i in range(min(len(old_slots), n)):
             self.slots[i] = old_slots[i]
             self.lengths[i] = old_lengths[i]
             self.tokens[i] = old_tokens[i]
+            if self.paged and old_tables is not None:
+                self.block_tables[i] = old_tables[i]
 
     def free_slots(self) -> List[int]:
         lim = self.admit_limit if self.admit_limit is not None else len(self.slots)
@@ -128,41 +210,197 @@ class InferenceEngine:
         return sum(1 for s in self.slots if s.active)
 
     def utilization(self) -> float:
-        """Occupied fraction of decode slots (drives the load estimator)."""
+        """Occupied fraction of serving capacity (drives the load
+        estimator): slot occupancy dense, block-pool occupancy paged."""
+        if self.paged:
+            return self.kv.utilization()
         return self.active_count() / max(self.num_slots, 1)
 
+    def kv_stats(self) -> Optional[Dict[str, float]]:
+        if not self.paged:
+            return None
+        st = self.kv.stats()
+        st["preemptions"] = self.preemptions
+        return st
+
     # ------------------------------------------------------------- serving
+    def _partition(self, slot: int) -> int:
+        return slot // self.batch_per_replica
+
+    def _full_prompt(self, req, prompt: np.ndarray) -> np.ndarray:
+        """Preemption resume (recompute mode): the effective prompt is the
+        original prompt plus everything generated before eviction."""
+        if req.rid in self._resume_rids and self.generated.get(req.rid):
+            return np.concatenate(
+                [np.asarray(prompt, np.int32),
+                 np.asarray(self.generated[req.rid], np.int32)])
+        return np.asarray(prompt, np.int32)
+
+    def can_admit(self, req, prompt: np.ndarray, slot: int) -> bool:
+        if not self.paged:
+            return True
+        full = self._full_prompt(req, prompt)
+        # +1: the first decode token must be appendable without preemption
+        return self.kv.can_allocate(len(full) + 1, self._partition(slot),
+                                    tokens=[int(t) for t in full])
+
     def start_request(self, req, prompt: np.ndarray, slot: int):
-        S = len(prompt)
+        resume = req.rid in self._resume_rids
+        full = self._full_prompt(req, prompt)
+        S = len(full)
         bucket = self.prefill_bucket
         S_pad = max(bucket, -(-S // bucket) * bucket)
         toks = np.zeros((1, S_pad), np.int32)
-        toks[0, :S] = prompt
-        key = f"prefill_{S_pad}"
-        first, self.cache = self.compiled[key](
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(S, jnp.int32), jnp.asarray(slot, jnp.int32))
-        self.slots[slot] = SlotState(rid=req.rid, remaining=req.output_len - 1,
-                                     active=req.output_len > 1)
+        toks[0, :S] = full
+        if self.paged:
+            alloc = self.kv.allocate(req.rid, S,
+                                     partition=self._partition(slot),
+                                     priority=getattr(req, "priority", 0),
+                                     tokens=[int(t) for t in full])
+            bs = self.kv.block_size
+            ids = np.full((S_pad // bs,), self.kv.num_blocks, np.int32)
+            for j, b in enumerate(alloc.blocks):
+                if j >= alloc.num_shared:      # shared prefix: don't rewrite
+                    ids[j] = b
+            first, self.cache = self._prefill(S_pad)(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(S, jnp.int32), jnp.asarray(ids))
+            self.block_tables[slot, :] = 0
+            self.block_tables[slot, :len(alloc.blocks)] = alloc.blocks
+        else:
+            first, self.cache = self._prefill(S_pad)(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(S, jnp.int32), jnp.asarray(slot, jnp.int32))
+        produced = len(self.generated.get(req.rid, [])) if resume else 0
+        remaining = req.output_len - produced - 1
+        self.slots[slot] = SlotState(rid=req.rid, remaining=remaining,
+                                     active=remaining > 0,
+                                     priority=getattr(req, "priority", 0))
         self.lengths[slot] = S
         first = int(first)
         self.tokens[slot] = first
-        self.generated[req.rid] = [first]
-        if req.output_len <= 1:
+        if resume:
+            self._resume_rids.discard(req.rid)
+            self.generated[req.rid].append(first)
+        else:
+            self.generated[req.rid] = [first]
+        if remaining <= 0:
+            # the prefill token was the last one (output_len 1, or a
+            # preemption resume that only had its final token left): the
+            # request never reaches decode_tick, so completion must be
+            # reported here or the caller waits on it forever
             self.slots[slot].active = False
+            if self.paged:
+                self.kv.free(req.rid)
+            self._finished_at_admission.append(req.rid)
         return first
+
+    def drain_finished_at_admission(self) -> List[int]:
+        """Requests whose prefill produced their final token this tick."""
+        out, self._finished_at_admission = self._finished_at_admission, []
+        return out
+
+    def _prefill(self, S_pad: int):
+        """Compiled prefill for a bucket; paged mode lazily compiles unseen
+        buckets (preemption resume grows effective prompts past the
+        pre-compiled set)."""
+        key = f"prefill_{S_pad}"
+        if key not in self.compiled:
+            assert self.paged, f"no compiled {key}"
+            parallel = engine_parallel_ctx(self.mesh)
+            repl = NamedSharding(self.mesh, P())
+            cache_out = jax.tree.map(lambda x: x.sharding, self.cache)
+            pf = jax.jit(partial(_paged_prefill_fn, self.mcfg, parallel),
+                         donate_argnums=(1,),
+                         out_shardings=(repl, cache_out))
+            bs = self.kv.block_size
+            self.compiled[key] = pf.lower(
+                as_sds(self.params), as_sds(self.cache),
+                jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl),
+                jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
+                jax.ShapeDtypeStruct((S_pad // bs,), jnp.int32,
+                                     sharding=repl)).compile()
+        return self.compiled[key]
+
+    # -------------------------------------------------- paged bookkeeping
+    def _slot_of(self, rid: int) -> int:
+        for i, s in enumerate(self.slots):
+            if s.rid == rid and s.active:
+                return i
+        raise KeyError(rid)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict a sequence under pool pressure: free its blocks, park the
+        rid for the server to re-queue; it restarts in recompute mode."""
+        s = self.slots[slot]
+        self.kv.preempt(s.rid)
+        self.preemptions += 1
+        self._resume_rids.add(s.rid)
+        self._preempted_pending.append(s.rid)
+        self.slots[slot] = SlotState()
+
+    def drain_preempted(self) -> List[int]:
+        out, self._preempted_pending = self._preempted_pending, []
+        return out
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Physical copy-on-write: duplicate pool row ``src`` into ``dst``
+        across all layers.  Jitted with the cache donated so XLA updates
+        the pool buffers in place (one block row moved, not a pool copy)."""
+        self.cache = _cow_copy(self.cache, jnp.asarray(src, jnp.int32),
+                               jnp.asarray(dst, jnp.int32))
+
+    def _ensure_append(self, slot: int) -> bool:
+        """Reserve the write slot for this sequence's next token, preempting
+        lower-priority sequences in the same partition when the pool is dry.
+        Returns False if the sequence itself was preempted."""
+        rid = self.slots[slot].rid
+        while True:
+            try:
+                r = self.kv.append(rid)
+                break
+            except MemoryError:
+                part = self._partition(slot)
+                cands = [s.rid for i, s in enumerate(self.slots)
+                         if s.active and self._partition(i) == part]
+                victim = self.kv.victim(candidates=cands)
+                if victim is None or victim == rid:
+                    self._preempt_slot(slot)
+                    return False
+                self._preempt_slot(self._slot_of(victim))
+        if r is not None:
+            if r.cow_src is not None:
+                self._copy_block(r.cow_src, r.block)
+            j = int(self.lengths[slot]) // self.kv.block_size
+            self.block_tables[slot, j] = r.block
+        return True
 
     def decode_tick(self) -> List[Tuple[int, int, bool]]:
         """One decode step for all active slots.
         Returns [(rid, token, finished)] for slots that produced a token."""
+        if self.paged:
+            # highest priority first, oldest first on ties: pressure evicts
+            # from the low-priority/young end before it reaches them
+            order = sorted((i for i, s in enumerate(self.slots) if s.active),
+                           key=lambda i: (-self.slots[i].priority,
+                                          self.slots[i].rid))
+            for slot in order:
+                if self.slots[slot].active:
+                    self._ensure_append(slot)
         if self.active_count() == 0:
             return []
         active = np.array([s.active for s in self.slots])
         self._step_count = getattr(self, "_step_count", 0) + 1
         rng = jax.random.key_data(jax.random.PRNGKey(self._step_count))
-        nxt, self.cache = self.compiled["decode"](
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.lengths), jnp.asarray(active), rng)
+        if self.paged:
+            nxt, self.cache = self.compiled["decode"](
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.lengths), jnp.asarray(active),
+                jnp.asarray(self.block_tables), rng)
+        else:
+            nxt, self.cache = self.compiled["decode"](
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.lengths), jnp.asarray(active), rng)
         nxt = np.asarray(nxt)
         out = []
         for i, s in enumerate(self.slots):
@@ -175,6 +413,8 @@ class InferenceEngine:
             fin = s.remaining <= 0 or self.lengths[i] >= self.max_len - 1
             if fin:
                 s.active = False
+                if self.paged:
+                    self.kv.free(s.rid)
             out.append((s.rid, int(nxt[i]), fin))
         return out
 
@@ -192,39 +432,57 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
                            params_sds, cache_sds, *,
                            batch_per_replica: int, max_len: int,
                            prefill_buckets=(64,),
-                           temperature: float = 0.0
+                           temperature: float = 0.0,
+                           kv_mode: str = "dense",
+                           kv_block_size: int = 0
                            ) -> Tuple[Dict[str, Any], float]:
     """AOT-compile decode + prefill executables for an instance.
 
     ``params_sds``/``cache_sds``: pytrees of sharded ShapeDtypeStructs (no
     weights needed — pre-initialization works without the HMM, exactly the
-    paper's CPU-standby instances, §4.5).  Returns (executables, seconds).
+    paper's CPU-standby instances, §4.5).  ``kv_mode='paged'`` compiles the
+    block-table variants (cache_sds is then the pool layout).
+    Returns (executables, seconds).
     """
     t0 = time.perf_counter()
     parallel = engine_parallel_ctx(mesh)
     B = cfg.dp * batch_per_replica
     repl = NamedSharding(mesh, P())
+    paged = kv_mode == "paged"
 
     out: Dict[str, Any] = {}
     cache_out = jax.tree.map(lambda s: s.sharding, cache_sds)
-    dec = jax.jit(
-        partial(_decode_fn, mcfg, parallel, temperature),
-        donate_argnums=(1,),
-        out_shardings=(repl, cache_out),
-    )
     tok_sd = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=repl)
     rng_sd = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl)
-    out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
-                              jax.ShapeDtypeStruct((B,), jnp.bool_,
-                                                   sharding=repl),
-                              rng_sd).compile()
+    act_sd = jax.ShapeDtypeStruct((B,), jnp.bool_, sharding=repl)
+    if paged:
+        assert kv_block_size > 0 and max_len % kv_block_size == 0
+        MB = max_len // kv_block_size
+        dec = jax.jit(partial(_paged_decode_fn, mcfg, parallel, temperature),
+                      donate_argnums=(1,), out_shardings=(repl, cache_out))
+        bt_sd = jax.ShapeDtypeStruct((B, MB), jnp.int32, sharding=repl)
+        out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
+                                  act_sd, bt_sd, rng_sd).compile()
+    else:
+        dec = jax.jit(partial(_decode_fn, mcfg, parallel, temperature),
+                      donate_argnums=(1,), out_shardings=(repl, cache_out))
+        out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
+                                  act_sd, rng_sd).compile()
     for S_pad in prefill_buckets:
-        pf = jax.jit(partial(_prefill_fn, mcfg, parallel, max_len),
-                     donate_argnums=(1,),
-                     out_shardings=(repl, cache_out))
         toks = jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl)
-        out[f"prefill_{S_pad}"] = pf.lower(
-            params_sds, cache_sds, toks,
-            jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
-            jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)).compile()
+        len_sd = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+        if paged:
+            pf = jax.jit(partial(_paged_prefill_fn, mcfg, parallel),
+                         donate_argnums=(1,),
+                         out_shardings=(repl, cache_out))
+            ids_sd = jax.ShapeDtypeStruct((S_pad // kv_block_size,),
+                                          jnp.int32, sharding=repl)
+            out[f"prefill_{S_pad}"] = pf.lower(
+                params_sds, cache_sds, toks, len_sd, ids_sd).compile()
+        else:
+            pf = jax.jit(partial(_prefill_fn, mcfg, parallel, max_len),
+                         donate_argnums=(1,),
+                         out_shardings=(repl, cache_out))
+            out[f"prefill_{S_pad}"] = pf.lower(
+                params_sds, cache_sds, toks, len_sd, len_sd).compile()
     return out, time.perf_counter() - t0

@@ -1,4 +1,6 @@
-"""Serving metrics (paper §7.3): TTFT, TPOT, SLO attainment, SLO/XPU."""
+"""Serving metrics (paper §7.3): TTFT, TPOT, SLO attainment, SLO/XPU —
+plus the paged-KV pressure surface (preemption count, block-pool
+utilization) reported by both serving backends (serving/kv_blocks.py)."""
 from __future__ import annotations
 
 import dataclasses
@@ -54,7 +56,30 @@ def throughput_rps(reqs: Sequence[Request], t0: float, t1: float) -> float:
     return n / max(t1 - t0, 1e-9)
 
 
-def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None) -> dict:
+@dataclasses.dataclass(frozen=True)
+class KVPoolStats:
+    """Paged-KV pressure snapshot of a serving backend."""
+    num_blocks: int
+    used_blocks: int
+    utilization: float
+    preemptions: int
+
+
+def kv_pool_stats(backend) -> Optional[KVPoolStats]:
+    """Normalize a backend's ``kv_stats()`` dict (ElasticServer,
+    ServingSimulator, or the engine itself); None for dense-KV backends."""
+    getter = getattr(backend, "kv_stats", None)
+    raw = getter() if getter is not None else None
+    if not raw:
+        return None
+    return KVPoolStats(num_blocks=int(raw.get("num_blocks", 0)),
+                       used_blocks=int(raw.get("used_blocks", 0)),
+                       utilization=float(raw.get("utilization", 0.0)),
+                       preemptions=int(raw.get("preemptions", 0)))
+
+
+def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
+              backend=None) -> dict:
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
     tpots = [r.tpot for r in reqs if r.tpot is not None]
     out = {
@@ -66,4 +91,9 @@ def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None) -> dict:
     }
     if slo:
         out["slo_attainment"] = slo_attainment(reqs, slo)
+    if backend is not None:
+        kv = kv_pool_stats(backend)
+        if kv is not None:
+            out["preemptions"] = kv.preemptions
+            out["kv_block_utilization"] = kv.utilization
     return out

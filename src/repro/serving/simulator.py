@@ -27,6 +27,9 @@ Measured vs modelled (the README table is generated from this docstring):
 | peak memory during transition    | planner placement (byte-exact)          |
 | per-step decode/prefill time     | roofline model, one calibrated sys_eff  |
 | engine/scaling semantics         | shared code with serving/engine.py      |
+| KV admission (dense vs paged)    | same policies as the engine: full-length|
+|                                  | reservation vs block occupancy with     |
+|                                  | preemption (kv_blocks.py, DESIGN.md §7) |
 """
 from __future__ import annotations
 
@@ -40,6 +43,7 @@ from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost
 from repro.core.topology import ElasticConfig, kv_cache_bytes
 from repro.serving.driver import (ScalePhase, admission_during_scale,
                                   transition_cost)
+from repro.serving.kv_blocks import blocks_for as kv_blocks_for
 from repro.serving.workload import Request, merge_arrivals
 
 
@@ -54,12 +58,14 @@ class PerfModel:
     step_overhead_s: float = 0.004
     max_batch_per_dev: int = 12
     kv_seq_len: int = 4096
+    kv_block_size: int = 256        # paged mode: tokens per KV block
 
     def __post_init__(self):
         bpe = 2
         self._weight_bytes = self.mcfg.param_count() * bpe
         self._active_flops_per_tok = 2 * self.mcfg.param_count(active_only=True)
         self._kv_bytes_per_seq = kv_cache_bytes(self.mcfg, 1, self.kv_seq_len)
+        self._kv_block_bytes = kv_cache_bytes(self.mcfg, 1, self.kv_block_size)
 
     def decode_step_s(self, batch: int, ndev: int) -> float:
         """Memory-bound: every step streams the (sharded) weights."""
@@ -73,11 +79,28 @@ class PerfModel:
             prompt * self._active_flops_per_tok
             / (ndev * self.chip_flops * self.sys_eff * 4))  # prefill batches well
 
+    def _free_kv_bytes(self, ndev: int, kv_frac: float) -> float:
+        return (ndev * DEFAULT_HW.device_hbm * 0.9
+                - self._weight_bytes) * kv_frac
+
     def max_batch(self, ndev: int, kv_frac: float = 1.0) -> int:
-        free = ndev * DEFAULT_HW.device_hbm * 0.9 - self._weight_bytes
-        hbm_limit = int(free * kv_frac / self._kv_bytes_per_seq)
+        """Dense admission: every sequence reserves a full ``kv_seq_len``
+        row up front."""
+        hbm_limit = int(self._free_kv_bytes(ndev, kv_frac)
+                        / self._kv_bytes_per_seq)
         return max(1, min(hbm_limit, int(self.max_batch_per_dev * ndev
                                          * kv_frac)))
+
+    def pool_blocks(self, ndev: int, kv_frac: float = 1.0) -> int:
+        """Paged admission: the same KV budget carved into blocks
+        (serving/kv_blocks.py) — a sequence only occupies blocks for the
+        tokens it currently holds."""
+        return max(1, int(self._free_kv_bytes(ndev, kv_frac)
+                          // self._kv_block_bytes))
+
+    def blocks_for(self, num_tokens: int) -> int:
+        # the engine's exact admission granularity (kv_blocks.blocks_for)
+        return kv_blocks_for(int(num_tokens), self.kv_block_size)
 
 
 @dataclasses.dataclass
@@ -124,13 +147,25 @@ class ServingSimulator:
     def __init__(self, mcfg: ModelConfig, tp: int, ndev: int, *,
                  strategy: str = "elastic", perf: Optional[PerfModel] = None,
                  hw: Optional[HardwareModel] = None, kv_seq_len: int = 4096,
-                 preinit: bool = True):
+                 preinit: bool = True, kv_mode: str = "dense",
+                 pool_blocks: Optional[int] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
         self.strategy = strategy
         self.perf = perf or PerfModel(mcfg, kv_seq_len=kv_seq_len)
         self.hw = hw or DEFAULT_HW
+        # KV admission: 'dense' reserves a full-length row per admitted
+        # request (PerfModel.max_batch); 'paged' admits by block occupancy —
+        # a request holds blocks for its *current* tokens, growing as it
+        # decodes, and the youngest lowest-priority request is preempted
+        # (re-queued, recomputed) when the pool overflows.  Mirrors the real
+        # engine's kv_blocks-gated admission so the closed-loop driver sees
+        # the same memory-pressure signal on both backends.
+        assert kv_mode in ("dense", "paged")
+        self.kv_mode = kv_mode
+        self._pool_blocks_override = pool_blocks
+        self.preemptions = 0
         # note: baselines also run with a warm engine (pre-provisioned
         # instance); the '-PreInit' ablation isolates the cold-boot add-on
         self.preinit = preinit
@@ -144,7 +179,9 @@ class ServingSimulator:
         self._pi = 0
         self.t = 0.0
         self.queue: List[Request] = []
-        self.running: List[Tuple[float, Request]] = []  # (finish_est, req)
+        # (finish_est, rid, req, t_decode_start) — t_decode_start tracks the
+        # *current* attempt (reset when a preempted request is re-admitted)
+        self.running: List[Tuple[float, int, Request, float]] = []
         self.finished: List[Request] = []
         self.scale: Optional[SimScalingTask] = None
         self.events: List[SimScaleEvent] = []
@@ -171,8 +208,9 @@ class ServingSimulator:
         self.events.append(event)
         if cost.downtime_s:
             # in-flight requests are stalled for the whole outage (§3 L2)
-            self.running = [(f + cost.scale_time_s, rid, r)
-                            for f, rid, r in self.running]
+            self.running = [(f + cost.scale_time_s, rid, r,
+                             s + cost.scale_time_s)
+                            for f, rid, r, s in self.running]
             heapq.heapify(self.running)
         self.scale = SimScalingTask(self, target, event)
         return self.scale
@@ -198,26 +236,87 @@ class ServingSimulator:
         mode, admit = admission_during_scale(self.strategy)
         return (0 if mode == "none" else self.ndev), admit
 
+    # ------------------------------------------------- paged KV occupancy
+    def pool_blocks(self, ndev: Optional[int] = None) -> int:
+        if self._pool_blocks_override is not None:
+            return self._pool_blocks_override
+        return self.perf.pool_blocks(ndev if ndev is not None else self.ndev,
+                                     self.kv_frac)
+
+    def _tokens_now(self, finish: float, req: Request, t_start: float) -> int:
+        """Tokens a running request currently holds: prompt + the fraction
+        of its output generated so far (decode progresses linearly between
+        ``t_start`` and its estimated finish)."""
+        if finish <= t_start:
+            return req.prompt_len + req.output_len
+        frac = min(max((self.t - t_start) / (finish - t_start), 0.0), 1.0)
+        return req.prompt_len + int(req.output_len * frac)
+
+    def used_blocks(self) -> int:
+        return sum(self.perf.blocks_for(self._tokens_now(f, r, s))
+                   for f, _, r, s in self.running)
+
+    def _preempt_for_pressure(self, pool: int) -> None:
+        """Evict lowest-priority / youngest running requests until the pool
+        fits (recompute mode: back to the queue front, restarted on
+        re-admission).  The last running request is never evicted — an
+        oversubscribed singleton must be allowed to finish."""
+        while len(self.running) > 1 and self.used_blocks() > pool:
+            victim = min(self.running,
+                         key=lambda e: (e[2].priority, -e[2].rid))
+            self.running.remove(victim)
+            heapq.heapify(self.running)
+            self.queue.insert(0, victim[2])
+            self.preemptions += 1
+
+    def kv_stats(self) -> Optional[Dict[str, float]]:
+        """Block-pool stats (None in dense mode); serving/metrics.py."""
+        if self.kv_mode != "paged":
+            return None
+        pool = self.pool_blocks()
+        used = self.used_blocks()
+        return {"num_blocks": pool, "used_blocks": used,
+                "utilization": used / max(pool, 1),
+                "preemptions": self.preemptions,
+                "live_seqs": len(self.running)}
+
     def step(self, now: float) -> List[Request]:
         """One simulation quantum at time ``now`` (driver.ServingBackend):
         admit from the queue under the shared gating policy, then complete
-        any requests whose modelled finish time has passed."""
+        any requests whose modelled finish time has passed.  Paged mode
+        first resolves pool pressure by preemption, then admits by block
+        occupancy instead of the fixed ``max_batch``."""
         self.t = now
         done: List[Request] = []
         ndev, admit = self._serving_capacity()
         if ndev > 0:
-            cap = self.perf.max_batch(ndev, self.kv_frac)
+            slot_cap = int(self.perf.max_batch_per_dev * ndev * self.kv_frac)
+            if self.kv_mode == "paged":
+                pool = self.pool_blocks(ndev)
+                self._preempt_for_pressure(pool)
+                used = self.used_blocks()
             # admit from queue
-            while admit and self.queue and len(self.running) < cap:
-                req = self.queue.pop(0)
+            while admit and self.queue and len(self.running) < slot_cap:
+                req = self.queue[0]
+                if self.kv_mode == "paged":
+                    need = self.perf.blocks_for(req.prompt_len + 1)
+                    if used + need > pool:
+                        break
+                    used += need
+                elif len(self.running) >= self.perf.max_batch(ndev,
+                                                              self.kv_frac):
+                    break
+                self.queue.pop(0)
                 t_first = self.t + self.perf.prefill_s(req.prompt_len, ndev)
-                req.first_token_s = t_first
+                if req.first_token_s is None:
+                    req.first_token_s = t_first
                 dur = req.output_len * self.perf.decode_step_s(
                     max(len(self.running) + 1, 1), ndev)
-                heapq.heappush(self.running, (t_first + dur, req.rid, req))
+                heapq.heappush(self.running,
+                               (t_first + dur, req.rid, req, t_first))
             # complete requests
             while self.running and self.running[0][0] <= self.t:
-                _, _, req = heapq.heappop(self.running)
+                _, _, req, _ = heapq.heappop(self.running)
                 req.finish_s = self.t
                 done.append(req)
         self.finished.extend(done)
@@ -247,6 +346,8 @@ class ServingSimulator:
         return len(self.queue)
 
     def utilization(self) -> float:
+        if self.kv_mode == "paged":
+            return self.used_blocks() / max(self.pool_blocks(), 1)
         cap = self.perf.max_batch(self.ndev, self.kv_frac)
         return len(self.running) / max(cap, 1)
 
@@ -258,6 +359,13 @@ class ServingSimulator:
         pass  # modelled: pre-init cost is already a plan_cost flag
 
     def capacity(self, cfg: ElasticConfig) -> int:
+        if self.kv_mode == "paged":
+            # conservative: full-length sequences; the real paged win shows
+            # up in admission (occupancy-based) rather than this bound
+            per_seq = self.perf.blocks_for(self.perf.kv_seq_len)
+            return max(1, min(
+                int(self.perf.max_batch_per_dev * cfg.ndev * self.kv_frac),
+                self.pool_blocks(cfg.ndev) // per_seq))
         return self.perf.max_batch(cfg.ndev, self.kv_frac)
 
     def throughput(self, t0: float, t1: float) -> float:

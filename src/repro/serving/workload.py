@@ -1,11 +1,27 @@
-"""Synthetic workloads (paper §7.1): fixed-length IO sequences under fixed,
-variable (ramp), and patterned (burst) request-rate profiles."""
+"""Synthetic workloads (paper §7.1): IO sequences under fixed, variable
+(ramp), and patterned (burst) request-rate profiles.  Prompt lengths may be
+fixed, sampled from a range, or drawn from a custom sampler; the
+shared-prefix generator exercises the paged KV cache's copy-on-write path
+(serving/kv_blocks.py)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
+
+# fixed length | inclusive (lo, hi) range | rng -> length sampler
+PromptLen = Union[int, tuple, Callable[[np.random.Generator], int]]
+
+
+def _prompt_sampler(prompt_len: PromptLen) -> Callable[
+        [np.random.Generator], int]:
+    if callable(prompt_len):
+        return prompt_len
+    if isinstance(prompt_len, tuple):
+        lo, hi = prompt_len
+        return lambda rng: int(rng.integers(lo, hi + 1))
+    return lambda rng: int(prompt_len)
 
 
 @dataclasses.dataclass
@@ -15,6 +31,7 @@ class Request:
     prompt_len: int
     output_len: int
     prompt: Optional[np.ndarray] = None      # token ids (engine runs)
+    priority: int = 0                        # paged KV: preemption order
 
     # filled by the engine/simulator
     first_token_s: Optional[float] = None
@@ -36,11 +53,17 @@ class Request:
 
 
 def make_workload(*, duration_s: float, rps_fn: Callable[[float], float],
-                  prompt_len: int = 2000, output_range=(500, 750),
+                  prompt_len: PromptLen = 2000, output_range=(500, 750),
                   seed: int = 0, vocab_size: int = 0,
                   dt: float = 0.05) -> List[Request]:
-    """Poisson-ish arrivals with time-varying rate ``rps_fn(t)``."""
+    """Poisson-ish arrivals with time-varying rate ``rps_fn(t)``.
+
+    ``prompt_len`` is a fixed int, an inclusive ``(lo, hi)`` range, or a
+    ``rng -> int`` sampler — variable-length prompts are what block-managed
+    KV admission exploits (fixed-length reservation wastes the difference).
+    """
     rng = np.random.default_rng(seed)
+    sample_prompt = _prompt_sampler(prompt_len)
     reqs: List[Request] = []
     t, rid = 0.0, 0
     while t < duration_s:
@@ -48,12 +71,51 @@ def make_workload(*, duration_s: float, rps_fn: Callable[[float], float],
         n = rng.poisson(lam)
         for _ in range(n):
             out = int(rng.integers(output_range[0], output_range[1] + 1))
-            prompt = (rng.integers(0, vocab_size, prompt_len)
+            S = sample_prompt(rng)
+            prompt = (rng.integers(0, vocab_size, S)
                       if vocab_size else None)
-            reqs.append(Request(rid, t + rng.uniform(0, dt), prompt_len, out,
+            reqs.append(Request(rid, t + rng.uniform(0, dt), S, out,
                                 prompt=prompt))
             rid += 1
         t += dt
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs
+
+
+def shared_prefix_workload(schedule, *, prefix_len: int,
+                           suffix_range=(4, 16), num_prefixes: int = 1,
+                           output_range=(10, 24), vocab_size: int = 256,
+                           seed: int = 0, rid0: int = 0) -> List[Request]:
+    """Engine-runnable workload where prompts share long common prefixes —
+    the copy-on-write exerciser (kv_blocks.py): requests in the same prefix
+    group reuse the prefix's KV blocks and only fork at their suffix.
+
+    ``schedule`` is ``[(t_arrival, n_requests), ...]``; each request picks
+    one of ``num_prefixes`` groups (round-robin).  A group is one fixed
+    prefix plus one fixed continuation stream; each request's prompt is the
+    prefix plus the first ``k`` continuation tokens (``k`` drawn from
+    ``suffix_range``) — i.e. the group's prompts are mutual prefixes
+    (branching continuations of one context), so a shorter request arriving
+    after a longer one shares the partially-filled tail block and forks it
+    copy-on-write at its first generated token.
+    """
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab_size, prefix_len)
+                for _ in range(num_prefixes)]
+    streams = [rng.integers(0, vocab_size, suffix_range[1])
+               for _ in range(num_prefixes)]
+    reqs: List[Request] = []
+    rid = rid0
+    for t_arr, n in schedule:
+        for _ in range(n):
+            g = rid % num_prefixes
+            k = int(rng.integers(suffix_range[0], suffix_range[1] + 1))
+            prompt = np.concatenate([prefixes[g],
+                                     streams[g][:k]]).astype(np.int64)
+            out = int(rng.integers(output_range[0], output_range[1] + 1))
+            reqs.append(Request(rid, float(t_arr), len(prompt), out,
+                                prompt=prompt))
+            rid += 1
     reqs.sort(key=lambda r: r.arrival_s)
     return reqs
 

@@ -102,6 +102,57 @@ def test_paged_decode_attention(B, H, KVH, hd, S, dtype):
                                np.asarray(want, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,NB,bs,MB", [
+    (3, 8, 2, 64, 16, 128, 4),
+    (2, 4, 4, 128, 8, 256, 2),
+    (1, 16, 2, 80, 12, 64, 6),
+])
+def test_block_paged_decode_attention(B, H, KVH, hd, NB, bs, MB, dtype):
+    """Pallas block-table kernel vs the jnp gather oracle: per-sequence
+    block tables index a shared [NB, bs, KVH, hd] pool."""
+    from repro.kernels.paged_attention import block_paged_decode_attention
+    q = jnp.asarray(RNG.standard_normal((B, H, hd)), dtype)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), dtype)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB)
+                     .astype(np.int32))
+    lengths = jnp.asarray(RNG.integers(1, MB * bs + 1, B), jnp.int32)
+    want = ref.block_paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    got = block_paged_decode_attention(q, kp, vp, bt, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+    # ops export: ref fallback on CPU must agree too
+    got_ops = ops.block_paged_decode_attention(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(got_ops, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_block_paged_decode_remap_invariance():
+    """Permuting pool rows + rewriting the tables must not change results —
+    the zero-copy-remap guarantee at kernel level (what makes the HMM's
+    commit-time pool growth safe for live sequences)."""
+    from repro.kernels.paged_attention import block_paged_decode_attention
+    B, H, KVH, hd, NB, bs, MB = 2, 4, 2, 64, 12, 128, 3
+    q = jnp.asarray(RNG.standard_normal((B, H, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB)
+                     .astype(np.int32))
+    lengths = jnp.asarray([200, 350], jnp.int32)
+    base = block_paged_decode_attention(q, kp, vp, bt, lengths,
+                                        interpret=True)
+    perm = RNG.permutation(NB)
+    inv = np.argsort(perm)
+    kp2, vp2 = kp[jnp.asarray(inv)], vp[jnp.asarray(inv)]  # rows moved
+    bt2 = jnp.asarray(perm[np.asarray(bt)].astype(np.int32))
+    got = block_paged_decode_attention(q, kp2, vp2, bt2, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [
     (2, 128, 4, 32, 16, 32),
     (1, 256, 2, 64, 64, 64),

@@ -1,0 +1,186 @@
+"""Paged-KV engine tests (real JAX on host devices, subprocess):
+
+* token parity with the dense engine, including shared-prefix CoW runs,
+* bit-identical tokens across a scale-up event with paged KV (the block
+  tables survive the pool growth verbatim — the zero-copy remap claim),
+* preemption under pool pressure: an over-committed burst completes,
+* pool conservation at the end of every run (check_invariants).
+"""
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+PAGED_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request, shared_prefix_workload
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def drive(srv, reqs, tmax=3000):
+    for r in reqs: srv.submit(r)
+    t, n = 0.0, 0
+    while any(r.finish_s is None for r in reqs):
+        srv.tick(t); t += .1; n += 1
+        assert n < tmax, [r.finish_s for r in reqs]
+    return srv
+"""
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_dense_and_shares_blocks():
+    """Same workload, dense vs paged: identical tokens per request, and the
+    shared-prefix workload actually shares blocks + triggers CoW forks."""
+    out = run_with_devices(PAGED_COMMON + """
+def build(kv_mode):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=4, max_len=128,
+                        prefill_buckets=(32, 64), seed=0, kv_mode=kv_mode,
+                        kv_block_size=16)
+    srv.boot(c4)
+    return srv
+
+reqs = lambda: shared_prefix_workload(
+    [(0.0, 3), (0.5, 5)], prefix_len=40, suffix_range=(0, 6),
+    vocab_size=128, seed=2, output_range=(10, 20))
+
+paged = drive(build("paged"), reqs())
+dense = drive(build("dense"), reqs())
+st = paged.engine.kv_stats()
+assert st["shared_block_hits"] > 0, st
+assert st["cow_copies"] > 0, st
+assert st["used_blocks"] == 0, st
+paged.hmm.kv_blocks.check_invariants()
+for rid in dense.engine.generated:
+    assert dense.engine.generated[rid] == paged.engine.generated[rid], rid
+
+# a request whose prefill token is its ONLY token must still be reported
+# finished (it never reaches decode_tick) — regression for the
+# finished-at-admission path, both layouts
+for srv in (paged, dense):
+    r1 = Request(900, 0.0, 16, 1, prompt=np.arange(16) % 128)
+    srv.submit(r1)
+    srv.tick(99.0)
+    assert r1.finish_s == 99.0, r1
+    assert len(srv.engine.generated[900]) == 1
+paged.hmm.kv_blocks.check_invariants()
+print("PAGED-DENSE-PARITY-OK", st["shared_block_hits"], st["cow_copies"])
+""", ndev=4)
+    assert "PAGED-DENSE-PARITY-OK" in out
+
+
+@pytest.mark.slow
+def test_paged_tokens_identical_across_scaleup():
+    """Scale 4->6 devices mid-decode with paged KV: surviving block tables
+    are reused verbatim on the grown pool, so every token matches the
+    unscaled run bit for bit."""
+    out = run_with_devices(PAGED_COMMON + """
+def run(scale):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0, kv_mode="paged",
+                        kv_block_size=16)
+    srv.boot(c4 if scale else c6)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 40, prompt=rng.integers(0, 128, 16))
+            for i in range(4)]
+    for r in reqs: srv.submit(r)
+    t, n, task = 0.0, 0, None
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 5 and task is None:
+            task = srv.start_scale(c6)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+        assert n < 500
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv
+
+ref_toks, _ = run(False)
+got_toks, srv = run(True)
+assert srv.hmm.kv_blocks.num_partitions == 3
+srv.hmm.kv_blocks.check_invariants()
+assert srv.engine.preemptions == 0
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], (rid, ref_toks[rid], got_toks[rid])
+print("PAGED-SCALEUP-DETERMINISM-OK")
+""")
+    assert "PAGED-SCALEUP-DETERMINISM-OK" in out
+
+
+@pytest.mark.slow
+def test_closed_loop_driver_paged_up_down_shrinks_partitions():
+    """The unchanged ClusterDriver loop over a PAGED real engine: burst ->
+    scale up (pool grows a partition), idle -> drain + scale down (doomed
+    partition verified empty, then dropped), CoW sharing active throughout,
+    pool conserves."""
+    out = run_with_devices(PAGED_COMMON + """
+from repro.core.coordinator import ScalingPolicy
+from repro.serving.driver import ClusterDriver, DriverConfig
+from repro.serving.metrics import SLO
+from repro.serving.workload import scripted_burst
+
+policy = ScalingPolicy(slo=SLO(ttft_s=5.0, tpot_s=5.0), window=8,
+                       cooldown_s=1.0, queue_scale_up=3)
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, kv_mode="paged",
+                    kv_block_size=16, kv_blocks_per_replica=10)
+srv.boot(c4)
+srv.preinitialize(c6)
+driver = ClusterDriver(srv, policy, mcfg=MCFG, tp=2, device_pool=range(6),
+                       config=DriverConfig(dt=0.05, settle_s=2.0,
+                                           prewarm_next=False))
+reqs = scripted_burst([(0.0, 2), (0.5, 7), (6.0, 1)], vocab_size=128, seed=1,
+                      output_range=(30, 50))
+reqs += shared_prefix_workload([(0.3, 3)], prefix_len=40, suffix_range=(0, 6),
+                               vocab_size=128, seed=4, output_range=(10, 20),
+                               rid0=100)
+reqs.sort(key=lambda r: r.arrival_s)
+until = 0.0
+while any(r.finish_s is None for r in reqs) or \
+        "down" not in [e.direction for e in driver.events]:
+    until += 10.0
+    driver.run(reqs if until == 10.0 else [], until=until)
+    assert until < 300.0, "stalled"
+dirs = [e.direction for e in driver.events]
+assert "up" in dirs and "down" in dirs, dirs
+assert srv.hmm.active_cfg.ndev == 4
+assert srv.hmm.kv_blocks.num_partitions == srv.hmm.active_cfg.dp == 2
+assert srv.engine.kv_stats()["shared_block_hits"] > 0
+assert srv.engine.kv_stats()["used_blocks"] == 0
+srv.hmm.kv_blocks.check_invariants()
+print("PAGED-CLOSED-LOOP-OK", dirs)
+""")
+    assert "PAGED-CLOSED-LOOP-OK" in out
+
+
+@pytest.mark.slow
+def test_paged_engine_preempts_under_pressure_and_completes():
+    """Pool sized well below the admitted sequences' eventual footprint: the
+    engine preempts (recompute-on-resume) instead of deadlocking, every
+    request still finishes, and the pool drains clean."""
+    out = run_with_devices(PAGED_COMMON + """
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=4, max_len=128,
+                    prefill_buckets=(32,), seed=0, kv_mode="paged",
+                    kv_block_size=16, kv_blocks_per_replica=8)
+srv.boot(c4)
+rng = np.random.default_rng(1)
+reqs = [Request(i, 0.0, 16, 60, prompt=rng.integers(0, 128, 16))
+        for i in range(8)]
+drive(srv, reqs)
+st = srv.engine.kv_stats()
+assert srv.engine.preemptions > 0, st
+assert st["used_blocks"] == 0, st
+srv.hmm.kv_blocks.check_invariants()
+# preempted requests were recomputed and still produced full outputs
+for r in reqs:
+    assert len(srv.engine.generated[r.rid]) == r.output_len, r.rid
+# a request that could NEVER fit a partition fails fast at submit instead
+# of head-of-line-blocking the queue forever
+try:
+    srv.submit(Request(999, 0.0, 16, 1000, prompt=rng.integers(0, 128, 16)))
+    raise SystemExit("oversized request was accepted")
+except ValueError:
+    pass
+print("PAGED-PREEMPT-OK", srv.engine.preemptions)
+""", ndev=4)
+    assert "PAGED-PREEMPT-OK" in out
