@@ -9,9 +9,8 @@ from typing import Dict, List, Optional
 
 from repro.configs import get_config
 from repro.core.costmodel import DEFAULT_HW, plan_cost
-from repro.core.expert_pages import ExpertPageTable
 from repro.core.scaling_plan import (Op, STRATEGIES, placement, plan_elastic,
-                                     plan_elastic_paged)
+                                     plan_elastic_min_move)
 from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
 
 PAPER_MODELS = ["deepseek-v2-lite-16b", "qwen3-30b-a3b", "deepseek-v3"]
@@ -48,11 +47,7 @@ def scale_cost(name: str, n_old: int, n_new: int, strategy: str,
     else:
         new = cfg_of(n_new, tp)
     if strategy == "elastic" and paged and mcfg.is_moe:
-        table = ExpertPageTable(mcfg.num_layers - mcfg.first_k_dense,
-                                mcfg.num_experts)
-        table.initial_place(old)
-        plan = plan_elastic_paged(tensors, old, new, table,
-                                  first_k_dense=mcfg.first_k_dense)
+        plan = plan_elastic_min_move(tensors, old, new, mcfg)
     else:
         plan = STRATEGIES[strategy](tensors, old, new)
     resident = {d: sum(s.values())

@@ -1,0 +1,52 @@
+"""Expert redistribution cost (beyond-paper CI smoke) — dense reshard vs
+pooled vpage remap.
+
+With the dense ``[E, D, F]`` expert banks, an EP change re-groups every bank
+contiguously (``expert_owner`` placement): experts whose contiguous rank
+changes cross devices even when their *current* device survives.  The
+pooled weight store (``expert_mode="pooled"``, DESIGN.md §2) keeps experts
+wherever they already are while balanced capacity allows and migrates only
+the overflow/orphaned pages (``ExpertPageTable.stage_remap(min_move=True)``)
+— commit is a table swap.
+
+This module quantifies that gap with the real planner (byte-exact, the same
+``plan_elastic`` / ``plan_elastic_paged`` pair the HMM's byte accounting is
+asserted against in tests/test_pooled_experts.py) and projects wall-clock
+with the calibrated cost model.  Columns:
+
+* ``dense_MB`` / ``pooled_MB`` — total expert-weight P2P bytes,
+* ``moved`` — migrated expert pages (pooled) vs expert P2P steps (dense),
+* ``dense_s`` / ``pooled_s`` — projected scale time (all tensors, cost
+  model bottleneck: max P2P bytes into one device),
+* ``saved%`` — expert P2P byte reduction.
+"""
+from benchmarks.common import PAPER_MODELS, Table, scale_cost
+from repro.core.scaling_plan import Op
+
+TRANSITIONS = [(4, 6), (6, 8), (8, 6), (6, 4)]
+
+
+def _expert_p2p(plan):
+    steps = [s for s in plan.steps
+             if s.op == Op.P2P and "/expert" in s.key.tensor]
+    return sum(s.nbytes for s in steps), len(steps)
+
+
+def run():
+    t = Table("expert_remap_p2p",
+              ["model", "transition", "dense_MB", "pooled_MB", "moved",
+               "dense_s", "pooled_s", "saved%"])
+    for name in PAPER_MODELS:
+        for n_old, n_new in TRANSITIONS:
+            dense_plan, dense_cost = scale_cost(name, n_old, n_new,
+                                                "elastic", paged=False)
+            pooled_plan, pooled_cost = scale_cost(name, n_old, n_new,
+                                                  "elastic", paged=True)
+            db, dn = _expert_p2p(dense_plan)
+            pb, pn = _expert_p2p(pooled_plan)
+            assert pb <= db, (name, n_old, n_new, pb, db)
+            t.add(name, f"{n_old}->{n_new}", db / 1e6, pb / 1e6,
+                  f"{pn}/{dn}", dense_cost.scale_time_s,
+                  pooled_cost.scale_time_s,
+                  100.0 * (1 - pb / db) if db else 0.0)
+    return t

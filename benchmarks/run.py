@@ -26,9 +26,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation, bootup_breakdown, engine_measured,
-                            granularity, kv_pressure, latency_breakdown,
-                            memory_vs_ep, peak_memory, scaledown_latency,
-                            scaleup_latency, slo_compliance, slo_dynamics,
+                            expert_remap, granularity, kv_pressure,
+                            latency_breakdown, memory_vs_ep, peak_memory,
+                            scaledown_latency, scaleup_latency,
+                            slo_compliance, slo_dynamics,
                             throughput_windows)
     modules = [
         ("fig1", granularity),
@@ -43,6 +44,7 @@ def main() -> None:
         ("table1+3", ablation),
         ("table2", throughput_windows),
         ("kv_pressure", kv_pressure),
+        ("expert_remap", expert_remap),
         ("measured", engine_measured),
     ]
     if args.only:

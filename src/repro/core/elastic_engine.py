@@ -121,13 +121,22 @@ class ElasticServer:
                  max_len: int, prefill_buckets=(64,), all_devices=None,
                  policy: Optional[ScalingPolicy] = None, seed: int = 0,
                  kv_mode: str = "dense", kv_block_size: int = 16,
-                 kv_blocks_per_replica: Optional[int] = None):
+                 kv_blocks_per_replica: Optional[int] = None,
+                 expert_mode: str = "dense",
+                 expert_pool_pages: Optional[int] = None):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
+        # 'pooled': expert weights live as page pools + tables, so an EP
+        # scale event migrates only the min-move page set and commit only
+        # rewrites tables (DESIGN.md §2); the driver's cost projections
+        # adopt this through the ``expert_mode`` attribute
+        self.expert_mode = expert_mode
         self.hmm = HMM(mcfg, tp, batch_per_replica=batch_per_replica,
                        max_len=max_len, all_devices=all_devices, seed=seed,
                        kv_mode=kv_mode, kv_block_size=kv_block_size,
-                       kv_blocks_per_replica=kv_blocks_per_replica)
+                       kv_blocks_per_replica=kv_blocks_per_replica,
+                       expert_mode=expert_mode,
+                       expert_pool_pages=expert_pool_pages)
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
                        max_len=max_len, prefill_buckets=prefill_buckets)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,

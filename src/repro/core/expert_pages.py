@@ -18,8 +18,11 @@ the pages to free.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.topology import ElasticConfig, expert_owner
 
@@ -66,6 +69,17 @@ class ExpertPageTable:
         self._ensure_pool(device)
         return self.pool_pages - len(self._free[device])
 
+    def clone(self) -> "ExpertPageTable":
+        """Cheap independent copy for what-if staging (cost projections):
+        ``PageRef``s are immutable, so only the containers are copied —
+        no deep recursion over L*E dataclasses."""
+        t = ExpertPageTable(self.num_layers, self.num_experts,
+                            pool_pages_per_device=self.pool_pages)
+        t.active = dict(self.active)
+        t.staged = dict(self.staged) if self.staged is not None else None
+        t._free = {d: list(v) for d, v in self._free.items()}
+        return t
+
     # ---------------------------------------------------------------- boot
     def initial_place(self, cfg: ElasticConfig) -> None:
         """First boot: allocate a page per (layer, expert) on its owner."""
@@ -94,48 +108,63 @@ class ExpertPageTable:
         page (no copy, no reallocation); moved experts get a fresh page on
         the target device and a P2P migration entry.  The active table keeps
         serving until commit()."""
+        if self.staged is not None:
+            raise RuntimeError(
+                "a staged remap is already open; commit() or abort() it "
+                "before staging another one (double-staging would leak the "
+                "previously allocated pages)")
         E = self.num_experts
         devs = list(new_cfg.devices)
         staged: Dict[Tuple[int, int], PageRef] = {}
         migrations: List[Migration] = []
 
-        if not min_move:
-            for (l, e), ref in self.active.items():
-                new_owner = expert_owner(e, E, new_cfg)
-                if new_owner == ref.device:
-                    staged[(l, e)] = ref                  # zero-copy remap
-                else:
-                    dst = PageRef(new_owner, self._alloc(new_owner))
+        try:
+            if not min_move:
+                for (l, e), ref in self.active.items():
+                    new_owner = expert_owner(e, E, new_cfg)
+                    if new_owner == ref.device:
+                        staged[(l, e)] = ref              # zero-copy remap
+                    else:
+                        dst = PageRef(new_owner, self._alloc(new_owner))
+                        staged[(l, e)] = dst
+                        migrations.append(Migration(l, e, ref, dst))
+                self.staged = staged
+                return migrations
+
+            base, extra = divmod(E, len(devs))
+            for l in range(self.num_layers):
+                caps = {d: base + (1 if i < extra else 0)
+                        for i, d in enumerate(devs)}
+                pending: List[Tuple[int, PageRef]] = []
+                for e in range(E):
+                    ref = self.active[(l, e)]
+                    if ref.device in caps and caps[ref.device] > 0:
+                        staged[(l, e)] = ref              # stays in place
+                        caps[ref.device] -= 1
+                    else:
+                        pending.append((e, ref))
+                for e, ref in pending:                    # most-free first
+                    dst_dev = max(caps, key=lambda d: caps[d])
+                    caps[dst_dev] -= 1
+                    dst = PageRef(dst_dev, self._alloc(dst_dev))
                     staged[(l, e)] = dst
                     migrations.append(Migration(l, e, ref, dst))
             self.staged = staged
             return migrations
-
-        base, extra = divmod(E, len(devs))
-        for l in range(self.num_layers):
-            caps = {d: base + (1 if i < extra else 0)
-                    for i, d in enumerate(devs)}
-            pending: List[Tuple[int, PageRef]] = []
-            for e in range(E):
-                ref = self.active[(l, e)]
-                if ref.device in caps and caps[ref.device] > 0:
-                    staged[(l, e)] = ref                  # stays in place
-                    caps[ref.device] -= 1
-                else:
-                    pending.append((e, ref))
-            for e, ref in pending:                        # most-free first
-                dst_dev = max(caps, key=lambda d: caps[d])
-                caps[dst_dev] -= 1
-                dst = PageRef(dst_dev, self._alloc(dst_dev))
-                staged[(l, e)] = dst
-                migrations.append(Migration(l, e, ref, dst))
-        self.staged = staged
-        return migrations
+        except BaseException:
+            # MemoryError (pool exhausted) is documented as recoverable: a
+            # failed staging must not strand the pages it already popped —
+            # return them so the pool is exactly as before the call
+            for m in migrations:
+                self._free[m.dst.device].append(m.dst.page)
+            raise
 
     def commit(self) -> List[PageRef]:
         """Switch to the staged table; returns pages to free (old homes of
         migrated experts)."""
-        assert self.staged is not None
+        if self.staged is None:
+            raise RuntimeError("no staged remap open; call stage_remap() "
+                               "before commit()")
         to_free: List[PageRef] = []
         for key, old_ref in self.active.items():
             if self.staged[key] != old_ref:
@@ -146,11 +175,20 @@ class ExpertPageTable:
         return to_free
 
     def abort(self) -> None:
-        """Drop the staged table, freeing its freshly allocated pages."""
+        """Drop the staged table, freeing its freshly allocated pages.
+
+        Idempotent: a second call is a no-op, and pages *shared* between the
+        active and staged tables (experts that would have stayed in place)
+        are never freed — only staged-only pages return to the pool, each
+        exactly once even if a table ever aliased the same page twice."""
         if self.staged is None:
             return
-        for key, ref in self.staged.items():
-            if self.active.get(key) != ref:
+        live = set(self.active.values())
+        freed = set()
+        for ref in self.staged.values():
+            if ref not in live and ref not in freed:
+                freed.add(ref)
+                self._ensure_pool(ref.device)
                 self._free[ref.device].append(ref.page)
         self.staged = None
 
@@ -159,8 +197,11 @@ class ExpertPageTable:
                      device: int, staged: bool = False) -> List[int]:
         """Pool indices of the experts ``device`` owns for ``layer``, in
         logical expert order — the indirection vector the MoE kernel reads."""
+        if staged and self.staged is None:
+            raise RuntimeError(
+                "no staged remap open: device_table(staged=True) is only "
+                "valid between stage_remap() and commit()/abort()")
         table = self.staged if staged else self.active
-        assert table is not None
         rows = [(e, ref.page) for (l, e), ref in table.items()
                 if l == layer and ref.device == device]
         rows.sort()
@@ -174,3 +215,48 @@ class ExpertPageTable:
         for v in out.values():
             v.sort()
         return out
+
+
+# ------------------------------------------------- pooled execution layout
+
+def pooled_layout(table: Dict[Tuple[int, int], PageRef], cfg: ElasticConfig,
+                  num_layers: int, num_experts: int,
+                  pages_per_device: int) -> Dict[str, np.ndarray]:
+    """Flatten a page-table mapping into the index arrays the pooled MoE
+    execution path consumes (host-side numpy; the HMM device_puts them).
+
+    Returns, with ``Elm = ceil(E / ndev)`` (min-move keeps per-device counts
+    balanced to floor/ceil, so Elm always bounds a device's experts):
+
+    * ``tables`` [L, ndev, Elm] int32 — per (layer, device-rank) the LOCAL
+      pool-page index of each owned expert, logical-expert order, padded
+      with page 0 (pad slots receive no tokens);
+    * ``edest``  [L, E] int32 — owning device *rank* (mesh linear slot) per
+      expert: the all-to-all destination;
+    * ``eslot``  [L, E] int32 — the expert's slot within its rank's table;
+    * ``gtable`` [L, E] int32 — GLOBAL pool row (rank * pages_per_device +
+      local page) per expert, for the single-shard pooled path.
+    """
+    ndev = cfg.ndev
+    elm = math.ceil(num_experts / ndev)
+    tables = np.zeros((num_layers, ndev, elm), np.int32)
+    edest = np.zeros((num_layers, num_experts), np.int32)
+    eslot = np.zeros((num_layers, num_experts), np.int32)
+    gtable = np.zeros((num_layers, num_experts), np.int32)
+    for l in range(num_layers):
+        counts = [0] * ndev
+        for e in range(num_experts):          # ascending e == logical order
+            ref = table[(l, e)]
+            r = cfg.slot(ref.device)
+            s = counts[r]
+            if s >= elm:
+                raise ValueError(
+                    f"layer {l}: device rank {r} owns more than "
+                    f"ceil(E/ndev)={elm} experts — placement not balanced")
+            counts[r] += 1
+            tables[l, r, s] = ref.page
+            edest[l, e] = r
+            eslot[l, e] = s
+            gtable[l, e] = r * pages_per_device + ref.page
+    return {"tables": tables, "edest": edest, "eslot": eslot,
+            "gtable": gtable}

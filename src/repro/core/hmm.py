@@ -12,8 +12,11 @@ paper).
 * shards that exist on another device are moved with ``jax.device_put``
   (device-to-device DMA — the p2p-copy primitive),
 * expert banks are re-grouped at page (single-expert) granularity so only
-  migrated experts cross devices (vpage-remap; see expert_pages.py for the
-  O(1) table mechanics and DESIGN.md §2 for the XLA dense-buffer caveat),
+  migrated experts cross devices — and with ``expert_mode='pooled'`` the
+  page pools + tables ARE the weight representation: scaling migrates
+  exactly the min-move Migration list and commit only swaps tables
+  (vpage-remap; see expert_pages.py for the O(1) table mechanics and
+  DESIGN.md §2 for the pooled store / dense-buffer history),
 * KV caches of surviving DP replicas are reused as-is; new replicas get
   zero-initialized state.
 
@@ -51,6 +54,12 @@ class TransferStats:
     zero_copy_count: int = 0
     p2p_count: int = 0
     wall_s: float = 0.0
+    # expert-weight sub-accounting (included in the totals above): what the
+    # vpage remap moved vs reused — pooled mode asserts expert_p2p_bytes ==
+    # sum of Migration page sizes, and commit adds zero to it
+    expert_p2p_bytes: int = 0
+    expert_zero_copy_bytes: int = 0
+    expert_local_bytes: int = 0
 
     def merge(self, o: "TransferStats"):
         self.zero_copy_bytes += o.zero_copy_bytes
@@ -60,6 +69,9 @@ class TransferStats:
         self.zero_copy_count += o.zero_copy_count
         self.p2p_count += o.p2p_count
         self.wall_s += o.wall_s
+        self.expert_p2p_bytes += o.expert_p2p_bytes
+        self.expert_zero_copy_bytes += o.expert_zero_copy_bytes
+        self.expert_local_bytes += o.expert_local_bytes
 
 
 def make_instance_mesh(cfg: ElasticConfig, all_devices=None) -> Mesh:
@@ -147,13 +159,26 @@ class HMM:
     partitions' shards are reused zero-copy (same device, same shard index),
     so every live block table stays valid verbatim across the scale event —
     the KV-side vpage-remap (DESIGN.md §7).
+
+    ``expert_mode='pooled'`` (MoE models; DESIGN.md §2): each expert weight
+    bank lives as a per-device page *pool* — one global array
+    ``[ndev * pages_per_device, D, F]``, page axis sharded one fixed-size
+    slice per device — plus the ``ExpertPageTable``-derived index arrays
+    (``core/expert_pages.pooled_layout``) that the pooled MoE execution path
+    consumes.  Scaling then migrates exactly the ``stage_remap(min_move=
+    True)`` Migration list (one ``jax.device_put`` per page, accounted in
+    ``TransferStats.expert_p2p_bytes``) and ``commit`` is an O(table) swap:
+    no expert-bank reshard, no ``_assemble_rows`` concatenation, no weight
+    bytes at switchover.  The dense layout stays the default.
     """
 
     def __init__(self, mcfg: ModelConfig, tp: int, *,
                  batch_per_replica: int, max_len: int,
                  all_devices=None, seed: int = 0,
                  kv_mode: str = "dense", kv_block_size: int = 16,
-                 kv_blocks_per_replica: Optional[int] = None):
+                 kv_blocks_per_replica: Optional[int] = None,
+                 expert_mode: str = "dense",
+                 expert_pool_pages: Optional[int] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.batch_per_replica = batch_per_replica
@@ -161,6 +186,18 @@ class HMM:
         self.all_devices = list(all_devices or jax.devices())
         self.seed = seed
         assert kv_mode in ("dense", "paged")
+        assert expert_mode in ("dense", "pooled")
+        if expert_mode == "pooled":
+            assert mcfg.is_moe, \
+                f"{mcfg.name}: expert_mode='pooled' requires a MoE model"
+        self.expert_mode = expert_mode
+        # per-device pool capacity in pages ((layer, expert) granularity,
+        # one free list per device); None resolves at boot to twice the boot
+        # config's per-device expert load — headroom for staging (active +
+        # migrated-in pages coexist until commit) and for scaling down to
+        # half the boot device count.  Scaling below that raises a clear
+        # MemoryError from the page allocator: pass a larger value here.
+        self.expert_pool_pages: Optional[int] = expert_pool_pages
         self.kv_mode = kv_mode
         self.kv_block_size = kv_block_size
         if kv_mode == "paged":
@@ -182,10 +219,13 @@ class HMM:
         self.staged: Optional[Tuple] = None
         if mcfg.is_moe:
             self.page_table = ExpertPageTable(
-                mcfg.num_layers - mcfg.first_k_dense, mcfg.num_experts)
+                mcfg.num_layers - mcfg.first_k_dense, mcfg.num_experts,
+                pool_pages_per_device=(self.expert_pool_pages or 0
+                                       if expert_mode == "pooled" else 0))
         else:
             self.page_table = None
         self.last_stats: Optional[TransferStats] = None
+        self.last_migrations: Optional[List] = None  # pooled: last staged set
         # incremental staging session (begin_scale / stage_increment)
         self._stage_work: Optional[List[Tuple]] = None
         self._stage_cursor = 0
@@ -193,6 +233,7 @@ class HMM:
         self._stage_treedef = None
         self._stage_target: Optional[Tuple] = None
         self._stage_stats: Optional[TransferStats] = None
+        self._stage_layout: Optional[Dict[str, np.ndarray]] = None
 
     # ----------------------------------------------------------- shardings
     def param_shardings(self, params, mesh: Mesh):
@@ -210,6 +251,19 @@ class HMM:
             if re.search(r"moe/w[igo]$", path):
                 if shape[stacked] % nep == 0:
                     s[stacked] = ("dp", "tp")
+                return P(*s)
+            # pooled expert store: page pools carved one slice per device;
+            # per-layer kernel tables one row per device; the other index
+            # arrays (edest/eslot/gtable) replicated like the router
+            if re.search(r"moe_pool/w[igo]$", path):
+                if shape[0] % nep == 0:
+                    s[0] = ("dp", "tp")
+                return P(*s)
+            if re.search(r"moe/tables$", path):
+                if shape[stacked] % nep == 0:
+                    s[stacked] = ("dp", "tp")
+                return P(*s)
+            if re.search(r"moe/(edest|eslot|gtable)$", path):
                 return P(*s)
             rules = [
                 (r"attn/q/w$|attn/q_up/w$|xattn/q/w$", stacked + 1),
@@ -255,6 +309,73 @@ class HMM:
         """Shape/dtype pytree of the cache for ``cfg`` (no allocation)."""
         return jax.eval_shape(lambda: self.make_cache(cfg))
 
+    # -------------------------------------------------- pooled expert store
+    @property
+    def _n_moe_layers(self) -> int:
+        return self.mcfg.num_layers - self.mcfg.first_k_dense
+
+    def expert_page_nbytes(self) -> int:
+        """Bytes of ONE (layer, expert) page across all three banks — the
+        unit of vpage migration accounting."""
+        bpe = jnp.dtype(self.mcfg.dtype).itemsize
+        return 3 * self.mcfg.d_model * self.mcfg.moe_d_ff * bpe
+
+    def _pooled_index_arrays(self, table, cfg: ElasticConfig):
+        """Host index arrays for the pooled MoE path from a page-table dict."""
+        from repro.core.expert_pages import pooled_layout
+        return pooled_layout(table, cfg, self._n_moe_layers,
+                             self.mcfg.num_experts, self.expert_pool_pages)
+
+    def _pooled_host_params(self, params, cfg: ElasticConfig):
+        """Convert freshly initialized dense params to the pooled layout:
+        scatter each (layer, expert) bank into its ``initial_place`` page and
+        replace the dense [L, E, D, F] banks with index arrays + one global
+        pool per bank.  Host-side; the caller device_puts the result."""
+        moe = params["blocks"]["moe"]
+        banks = {k: np.asarray(moe.pop(k)) for k in ("wi", "wg", "wo")}
+        ppd = self.expert_pool_pages
+        pools = {k: np.zeros((cfg.ndev * ppd,) + b.shape[2:], b.dtype)
+                 for k, b in banks.items()}
+        for (l, e), ref in self.page_table.active.items():
+            row = cfg.slot(ref.device) * ppd + ref.page
+            for k in banks:
+                pools[k][row] = banks[k][l, e]
+        moe.update(self._pooled_index_arrays(self.page_table.active, cfg))
+        params["moe_pool"] = pools
+        return params
+
+    def params_template(self, cfg: ElasticConfig):
+        """Shape/dtype pytree of the parameters an instance for ``cfg``
+        binds (dense layout, or the pooled expert store) — what the IMM
+        AOT-compiles against, no allocation."""
+        from repro.models.model import init_params
+        dense = jax.eval_shape(
+            lambda: init_params(self.mcfg, jax.random.PRNGKey(0),
+                                jnp.dtype(self.mcfg.dtype)))
+        if self.expert_mode != "pooled":
+            return dense
+        if self.expert_pool_pages is None:
+            raise RuntimeError(
+                "pooled parameter shapes are fixed by the boot config's "
+                "pool size — boot() the HMM (or pass expert_pool_pages) "
+                "before pre-initializing instances")
+        import math as _math
+        mcfg = self.mcfg
+        moe = dense["blocks"]["moe"]
+        shapes = {k: moe.pop(k).shape for k in ("wi", "wg", "wo")}
+        dt = jnp.dtype(mcfg.dtype)
+        ppd = self.expert_pool_pages
+        L, E = self._n_moe_layers, mcfg.num_experts
+        elm = _math.ceil(E / cfg.ndev)
+        i32 = jnp.dtype(jnp.int32)
+        moe["tables"] = jax.ShapeDtypeStruct((L, cfg.ndev, elm), i32)
+        for k in ("edest", "eslot", "gtable"):
+            moe[k] = jax.ShapeDtypeStruct((L, E), i32)
+        dense["moe_pool"] = {
+            k: jax.ShapeDtypeStruct((cfg.ndev * ppd,) + shapes[k][2:], dt)
+            for k in shapes}
+        return dense
+
     # ----------------------------------------------------------------- boot
     def boot(self, cfg: ElasticConfig) -> TransferStats:
         """First boot: 'disk load' = host init + device_put (counted as disk
@@ -265,6 +386,18 @@ class HMM:
         mesh = make_instance_mesh(cfg, self.all_devices)
         params = init_params(self.mcfg, jax.random.PRNGKey(self.seed),
                              jnp.dtype(self.mcfg.dtype))
+        if self.expert_mode == "pooled" and self.expert_pool_pages is None:
+            # fixed for the HMM's lifetime: page indices and pool shapes
+            # must agree across every later scale event
+            per_dev = self._n_moe_layers * (
+                -(-self.mcfg.num_experts // cfg.ndev))
+            self.expert_pool_pages = min(
+                2 * per_dev, self._n_moe_layers * self.mcfg.num_experts)
+            self.page_table.pool_pages = self.expert_pool_pages
+        if self.page_table is not None and not self.page_table.active:
+            self.page_table.initial_place(cfg)
+        if self.expert_mode == "pooled":
+            params = self._pooled_host_params(params, cfg)
         shardings = self.param_shardings(params, mesh)
         self.params = jax.tree.map(
             lambda x, s: jax.device_put(x, s), params, shardings)
@@ -273,8 +406,6 @@ class HMM:
         self.cache = jax.tree.map(lambda x, s: jax.device_put(x, s),
                                   cache, cshard)
         self.active_cfg = cfg
-        if self.page_table is not None and not self.page_table.active:
-            self.page_table.initial_place(cfg)
         if self.kv_mode == "paged" and self.kv_blocks is None:
             from repro.serving.kv_blocks import KVBlockManager
             self.kv_blocks = KVBlockManager(cfg.dp,
@@ -312,6 +443,10 @@ class HMM:
         moves no bytes yet.  Returns the number of increments; drive them
         with ``stage_increment`` — the engine may run decode ticks between
         calls, which is what makes "throughput during scaling" measurable.
+
+        Pooled expert mode stages the page remap here (``stage_remap(
+        min_move=True)``) so the pool-bank work units know the exact
+        Migration list; each pool bank then moves only those pages.
         """
         assert self.active_cfg is not None
         assert self._stage_work is None, "staging already in progress"
@@ -319,6 +454,13 @@ class HMM:
         import re
         t0 = time.perf_counter()
         mesh = make_instance_mesh(new_cfg, self.all_devices)
+        if self.expert_mode == "pooled":
+            self.last_migrations = self.page_table.stage_remap(
+                new_cfg, min_move=True)
+            # one layout pass per session; the index work units each pick
+            # their array out of it
+            self._stage_layout = self._pooled_index_arrays(
+                self.page_table.staged, new_cfg)
         shardings = self.param_shardings(self.params, mesh)
         flat, treedef = jax.tree_util.tree_flatten_with_path(self.params)
         shard_leaves = jax.tree.leaves(shardings)
@@ -326,11 +468,16 @@ class HMM:
         for (path_tuple, leaf), sh in zip(flat, shard_leaves):
             path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                             for k in path_tuple)
-            expert_dim = None
+            kind, expert_dim = "reshard", None
             if re.search(r"moe/w[igo]$", path):
                 stacked = 1 if "blocks/" in path else 0
                 expert_dim = stacked  # regroup experts at page granularity
-            work.append((path, leaf, sh, expert_dim))
+                kind = "expert_bank"
+            elif re.search(r"moe_pool/(w[igo])$", path):
+                kind = "pool:" + path.rsplit("/", 1)[1]
+            elif re.search(r"moe/(tables|edest|eslot|gtable)$", path):
+                kind = "index:" + path.rsplit("/", 1)[1]
+            work.append((path, leaf, sh, expert_dim, kind))
         self._stage_work = work
         self._stage_cursor = 0
         self._stage_out = []
@@ -359,28 +506,104 @@ class HMM:
         assert self._stage_work is not None, "no staging session open"
         t0 = time.perf_counter()
         stats = self._stage_stats
+        new_cfg, mesh = self._stage_target
         end = min(self._stage_cursor + max(1, max_tensors),
                   len(self._stage_work))
-        for path, leaf, sh, expert_dim in self._stage_work[
+        for path, leaf, sh, expert_dim, kind in self._stage_work[
                 self._stage_cursor:end]:
-            self._stage_out.append(
-                reshard_with_reuse(leaf, sh, stats, expert_dim=expert_dim))
+            if kind.startswith("pool:"):
+                self._stage_out.append(self._migrate_pool_bank(
+                    leaf, new_cfg, mesh, stats))
+            elif kind.startswith("index:"):
+                # O(table): the staged index arrays were rebuilt once in
+                # begin_scale — no weight bytes move here
+                name = kind.split(":", 1)[1]
+                arr = jnp.asarray(self._stage_layout[name])
+                spec = (P(None, ("dp", "tp"), None) if name == "tables"
+                        else P())
+                self._stage_out.append(
+                    jax.device_put(arr, NamedSharding(mesh, spec)))
+            elif kind == "expert_bank":
+                # dense mode: piecewise regroup; track the expert sub-bytes
+                # so dense-reshard vs pooled-remap is directly comparable
+                sub = TransferStats()
+                self._stage_out.append(
+                    reshard_with_reuse(leaf, sh, sub, expert_dim=expert_dim))
+                sub.expert_p2p_bytes = sub.p2p_bytes
+                sub.expert_zero_copy_bytes = sub.zero_copy_bytes
+                sub.expert_local_bytes = sub.local_bytes
+                stats.merge(sub)
+            else:
+                self._stage_out.append(
+                    reshard_with_reuse(leaf, sh, stats,
+                                       expert_dim=expert_dim))
         self._stage_cursor = end
         stats.wall_s += time.perf_counter() - t0
         if self._stage_cursor < len(self._stage_work):
             return True
         # final increment: assemble the staged tree + stage the page remap
+        # (dense bookkeeping only — pooled staged it in begin_scale; dense
+        # arrays take the contiguous expert_owner layout, so the table
+        # records min_move=False placement to stay truthful)
         t0 = time.perf_counter()
-        new_cfg, mesh = self._stage_target
         new_params = jax.tree_util.tree_unflatten(
             self._stage_treedef, self._stage_out)
-        if self.page_table is not None:
-            self.page_table.stage_remap(new_cfg)
+        if self.page_table is not None and self.page_table.staged is None:
+            self.page_table.stage_remap(new_cfg, min_move=False)
         self.staged = (new_cfg, mesh, new_params)
         stats.wall_s += time.perf_counter() - t0
         self.last_stats = stats
         self._reset_stage_session()
         return False
+
+    def _migrate_pool_bank(self, leaf, new_cfg: ElasticConfig, mesh,
+                           stats: TransferStats):
+        """Rebuild one pooled weight bank for ``new_cfg``: surviving devices'
+        pool slices are reused (migrated-in pages written at their staged
+        slots), new devices start from zeros, and exactly the staged
+        Migration list crosses devices — one ``jax.device_put`` per page,
+        the paper's p2p-copy primitive at vpage granularity."""
+        ppd = self.expert_pool_pages
+        row_shape = leaf.shape[1:]
+        row_bytes = int(np.prod(row_shape)) * leaf.dtype.itemsize
+        # keyed by physical device object: page-table/config device ints are
+        # LOGICAL indices into all_devices, which need not be jax.devices()
+        old_shard = {sh.device: sh.data for sh in leaf.addressable_shards}
+        migs_by_dst: Dict[int, List] = defaultdict(list)
+        for m in self.last_migrations:
+            migs_by_dst[m.dst.device].append(m)
+        # pages that stay put are this bank's zero-copy reuse
+        staged, active = self.page_table.staged, self.page_table.active
+        unchanged = sum(1 for k, r in active.items() if staged.get(k) == r)
+        stats.zero_copy_bytes += unchanged * row_bytes
+        stats.zero_copy_count += unchanged
+        stats.expert_zero_copy_bytes += unchanged * row_bytes
+
+        shape = (new_cfg.ndev * ppd,) + row_shape
+        sharding = NamedSharding(mesh, P(("dp", "tp"), *([None] *
+                                                         len(row_shape))))
+        target = sharding.devices_indices_map(shape)
+        out = []
+        for dev in sharding.addressable_devices:
+            rank = (target[dev][0].start or 0) // ppd
+            logical = new_cfg.devices[rank]    # dev == all_devices[logical]
+            local = old_shard.get(dev)
+            if local is None:
+                local = jax.device_put(jnp.zeros((ppd,) + row_shape,
+                                                 leaf.dtype), dev)
+            if migs_by_dst.get(logical):
+                idxs, rows = [], []
+                for m in migs_by_dst[logical]:
+                    src = old_shard[self.all_devices[m.src.device]]
+                    rows.append(jax.device_put(src[m.src.page], dev))
+                    idxs.append(m.dst.page)
+                    stats.p2p_bytes += row_bytes
+                    stats.p2p_count += 1
+                    stats.expert_p2p_bytes += row_bytes
+                local = local.at[jnp.asarray(idxs, jnp.int32)].set(
+                    jnp.stack(rows))
+            out.append(local)
+        return jax.make_array_from_single_device_arrays(shape, sharding, out)
 
     def _reset_stage_session(self):
         self._stage_work = None
@@ -388,6 +611,7 @@ class HMM:
         self._stage_out = []
         self._stage_treedef = None
         self._stage_target = None
+        self._stage_layout = None
 
     def _grow_cache(self, new_cfg: ElasticConfig, mesh: Mesh,
                     stats: TransferStats):
@@ -473,6 +697,7 @@ class HMM:
 
     def abort(self):
         self.staged = None
+        self.last_migrations = None
         self._reset_stage_session()
         if self.page_table is not None:
             self.page_table.abort()

@@ -81,13 +81,10 @@ class IMM:
         return inst
 
     def _shape_templates(self, cfg: ElasticConfig, mesh):
-        """Sharded ShapeDtypeStructs for params+cache — no allocation."""
-        import jax.numpy as jnp
-        from repro.models.model import init_params
-
-        params_shape = jax.eval_shape(
-            lambda: init_params(self.mcfg, jax.random.PRNGKey(0),
-                                jnp.dtype(self.mcfg.dtype)))
+        """Sharded ShapeDtypeStructs for params+cache — no allocation.
+        The param layout comes from the HMM (dense, or the pooled expert
+        store whose pool/table shapes depend on ``cfg``)."""
+        params_shape = self.hmm.params_template(cfg)
         pshard = self.hmm.param_shardings(params_shape, mesh)
         params_sds = jax.tree.map(
             lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),

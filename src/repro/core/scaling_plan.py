@@ -258,3 +258,18 @@ def plan_elastic_paged(tensors, old, new, page_table,
     return plan_elastic(tensors, old, new,
                         expert_assignment_old=a_old,
                         expert_assignment_new=a_new)
+
+
+def plan_elastic_min_move(tensors, old: ElasticConfig, new: ElasticConfig,
+                          mcfg) -> ScalingPlan:
+    """``plan_elastic_paged`` from a *fresh* contiguous placement at ``old``
+    — the shared recipe for cost projections (driver/simulator) and
+    benchmarks that have no live page table to consult: assume the server
+    booted at ``old`` (contiguous ``initial_place``) and cost the min-move
+    remap to ``new``."""
+    from repro.core.expert_pages import ExpertPageTable
+    table = ExpertPageTable(mcfg.num_layers - mcfg.first_k_dense,
+                            mcfg.num_experts)
+    table.initial_place(old)
+    return plan_elastic_paged(tensors, old, new, table,
+                              first_k_dense=mcfg.first_k_dense)

@@ -39,21 +39,47 @@ def _kernel(table_ref, x_ref, pool_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _clamp_block_f(dim: int, block: int) -> int:
+    """The 'clamp' half of pad-or-clamp for the lane (minormost) dim, which
+    the kernel cannot cheaply pad: largest multiple of 128 <= ``block`` that
+    divides ``dim`` — Mosaic requires lane blocks to be 128-aligned — else
+    the full dim (always legal, just a bigger VMEM tile)."""
+    b = min(block, dim) - min(block, dim) % 128
+    while b >= 128 and dim % b:
+        b -= 128
+    return b if b >= 128 and dim % b == 0 else dim
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f",
                                              "interpret"))
 def paged_gmm(table: jax.Array, pool: jax.Array, x: jax.Array,
               *, block_c: int = 128, block_f: int = 128,
               interpret: bool = False) -> jax.Array:
-    """out[e] = x[e] @ pool[table[e]] for each local expert e."""
+    """out[e] = x[e] @ pool[table[e]] for each local expert e.
+
+    Non-MXU-aligned shapes are handled pad-or-clamp: a token count ``C`` not
+    divisible by ``block_c`` is zero-padded up to the next block (zero rows
+    produce zero outputs, sliced off after the call — cheap: pads
+    activations, never weights; the resulting ``bc`` is either 128-aligned
+    or the full dim, both Mosaic-legal).  A hidden dim ``F`` not divisible
+    by ``block_f`` instead *clamps* the block — to a 128-aligned divisor or
+    the whole dim, never an unaligned lane tile — because padding F would
+    mean copying every pool page.  Aliased tables — multiple entries naming
+    the same page, the post-CoW sharing shape — are fine by construction:
+    each grid step only reads ``pool[table[e]]``.
+    """
     E_local, C, D = x.shape
     n_pages, D2, F = pool.shape
     assert D == D2, (D, D2)
     bc = min(block_c, C)
-    bf = min(block_f, F)
-    assert C % bc == 0 and F % bf == 0, (C, bc, F, bf)
+    if C % bc:
+        C_pad = -(-C // bc) * bc
+        x = jnp.pad(x, ((0, 0), (0, C_pad - C), (0, 0)))
+    bf = _clamp_block_f(F, block_f)
+    C_run = x.shape[1]
 
-    grid = (E_local, C // bc, F // bf)
-    return pl.pallas_call(
+    grid = (E_local, C_run // bc, F // bf)
+    out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -66,9 +92,10 @@ def paged_gmm(table: jax.Array, pool: jax.Array, x: jax.Array,
             out_specs=pl.BlockSpec((1, bc, bf),
                                    lambda e, i, j, tbl: (e, i, j)),
         ),
-        out_shape=jax.ShapeDtypeStruct((E_local, C, F), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((E_local, C_run, F), x.dtype),
         interpret=interpret,
     )(table, x, pool)
+    return out[:, :C] if C_run != C else out
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f",

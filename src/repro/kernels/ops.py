@@ -27,6 +27,19 @@ def paged_gmm(table, pool, x, **kw):
 
 def paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x,
                      **kw):
+    """Paged SwiGLU expert FFN (the pooled-expert serving hot path).
+
+    ``impl='kernel'`` forces the Pallas paged-GMM kernel, ``'ref'`` the jnp
+    gather oracle; the default ``'auto'`` (overridable via
+    ``REPRO_POOLED_IMPL``) runs the kernel on accelerators and the reference
+    on CPU — interpret-mode Pallas inside the per-layer decode scan is far
+    slower than the gather, and the two are parity-tested in
+    test_kernels.py (same policy as ``block_paged_decode_attention``)."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_POOLED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import paged_expert_ffn_ref
+        return paged_expert_ffn_ref(table_i, table_g, table_o,
+                                    pool_i, pool_g, pool_o, x)
     kw.setdefault("interpret", _INTERPRET)
     return _ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x, **kw)
 

@@ -32,7 +32,7 @@ from repro.models import mla as mla_mod
 from repro.models.layers import (apply_norm, attention_init, attention_apply,
                                  linear, linear_init, mlp_apply, mlp_init,
                                  norm_init)
-from repro.models.moe import moe_ep, moe_init, moe_local
+from repro.models.moe import moe_ep, moe_init, moe_local, moe_local_pooled
 
 Params = Dict[str, Any]
 
@@ -115,16 +115,28 @@ def init_params(cfg: ModelConfig, rng, dtype=None) -> Params:
 
 # -------------------------------------------------------------- block apply
 
-def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None):
-    """Post-attention feed-forward (+MoE).  Returns (y, aux)."""
+def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None,
+              moe_pool=None):
+    """Post-attention feed-forward (+MoE).  Returns (y, aux).
+
+    ``moe_pool``: the pooled expert weight store (``params["moe_pool"]``,
+    shared across layers) when the HMM runs ``expert_mode="pooled"``; the
+    per-layer ``bp["moe"]`` then carries page-table index arrays instead of
+    dense [E, D, F] banks (models/moe.py)."""
     aux = jnp.zeros((), jnp.float32)
     if moe:
         if parallel is not None:
-            y, aux = moe_ep(cfg, bp["moe"], h, parallel, capacity=moe_capacity)
+            y, aux = moe_ep(cfg, bp["moe"], h, parallel, capacity=moe_capacity,
+                            pool=moe_pool)
         else:
             B, S, D = h.shape
-            yf, aux = moe_local(cfg, bp["moe"], h.reshape(B * S, D),
-                                capacity=moe_capacity)
+            if moe_pool is not None and "tables" in bp["moe"]:
+                yf, aux = moe_local_pooled(cfg, bp["moe"], moe_pool,
+                                           h.reshape(B * S, D),
+                                           capacity=moe_capacity)
+            else:
+                yf, aux = moe_local(cfg, bp["moe"], h.reshape(B * S, D),
+                                    capacity=moe_capacity)
             y = yf.reshape(B, S, D)
         if cfg.dense_residual:
             y = y + mlp_apply(bp["mlp"], h, cfg.mlp_gated)
@@ -135,7 +147,7 @@ def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None):
 
 def _attn_block(cfg, bp, x, positions, *, cache=None, write_pos=None,
                 kv_valid_len=None, image_kv=None, image_x=None,
-                parallel=None, moe=False, moe_capacity=None):
+                parallel=None, moe=False, moe_capacity=None, moe_pool=None):
     """Generic (self-attn [+cross-attn] + ffn/moe) block.
 
     Returns (x', new_kv_cache, new_image_kv, aux).
@@ -165,7 +177,7 @@ def _attn_block(cfg, bp, x, positions, *, cache=None, write_pos=None,
         x = x + jnp.tanh(bp["xgate"]) * cx
     h = apply_norm(bp["ln2"], x, cfg.norm_type)
     y, aux = _ffn_part(cfg, bp, h, parallel=parallel, moe=moe,
-                       moe_capacity=moe_capacity)
+                       moe_capacity=moe_capacity, moe_pool=moe_pool)
     return x + y, new_kv, new_image_kv, aux
 
 
@@ -251,7 +263,7 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
         def body(carry, bp):
             x, aux = carry
             x, _, _, a = _attn_block(cfg, bp, x, positions, parallel=parallel,
-                                     moe=moe)
+                                     moe=moe, moe_pool=params.get("moe_pool"))
             return (x, aux + a), None
         (x, aux_total), _ = jax.lax.scan(maybe_remat(body),
                                          (x, aux_total), params["blocks"])
@@ -377,7 +389,8 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
         x = x + a
         h = apply_norm(bp["ln2"], x, cfg.norm_type)
         y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
-                         moe=moe and "moe" in bp)
+                         moe=moe and "moe" in bp,
+                         moe_pool=params.get("moe_pool"))
         return x + y, kp, vp
 
     nk = cfg.first_k_dense if moe else 0
@@ -477,7 +490,8 @@ def prefill(cfg: ModelConfig, params: Params, batch, max_len: int,
         def body(carry, bp):
             x = carry
             x, kv, _, _ = _attn_block(cfg, bp, x, positions,
-                                      parallel=parallel, moe=moe)
+                                      parallel=parallel, moe=moe,
+                                      moe_pool=params.get("moe_pool"))
             c, kr = kv
             return x, (pad_to(c, max_len, 1), pad_to(kr, max_len, 1))
         x, (cs, krs) = jax.lax.scan(body, x, params["blocks"])
@@ -495,7 +509,8 @@ def prefill(cfg: ModelConfig, params: Params, batch, max_len: int,
         def body(carry, bp):
             x, aux = carry
             x, kv, _, a = _attn_block(cfg, bp, x, positions,
-                                      parallel=parallel, moe=moe)
+                                      parallel=parallel, moe=moe,
+                                      moe_pool=params.get("moe_pool"))
             k, v = kv
             return (x, aux + a), (pad_to(k[:, -eff:], eff, 1),
                                   pad_to(v[:, -eff:], eff, 1))
@@ -607,7 +622,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache, lengths,
             bp, c, kr = inp
             x, kv, _, _ = _attn_block(cfg, bp, x, positions, cache=(c, kr),
                                       write_pos=write_pos, kv_valid_len=valid,
-                                      parallel=parallel, moe=moe)
+                                      parallel=parallel, moe=moe,
+                                      moe_pool=params.get("moe_pool"))
             return x, (kv[0], kv[1])
         x, (cs2, krs2) = jax.lax.scan(body, x,
                                       (params["blocks"], cs[nk:], krs[nk:]))
@@ -658,7 +674,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache, lengths,
                 bp, k, v = inp
                 x, kv, _, _ = _attn_block(cfg, bp, x, positions, cache=(k, v),
                                           write_pos=wp, kv_valid_len=vl,
-                                          parallel=parallel, moe=moe)
+                                          parallel=parallel, moe=moe,
+                                          moe_pool=params.get("moe_pool"))
                 return x, (kv[0], kv[1])
             x, (ks2, vs2) = jax.lax.scan(body, x,
                                          (params["blocks"], cache["k"],

@@ -1,4 +1,4 @@
-"""Mixture-of-Experts layer: router + two execution paths.
+"""Mixture-of-Experts layer: router + three execution paths.
 
 * ``moe_local``  — single-shard capacity-based dispatch (scatter → grouped
   matmul → combine).  Used by the elastic serving engine, smoke tests, and as
@@ -9,6 +9,17 @@
   hidden dim TP-sharded over the model axis, reverse ``all_to_all``, combine.
   This is the paper's "unified token routing" (§2.1/§3 L4) mapped onto
   jax-native collectives.
+* **pooled** (``expert_mode="pooled"`` on the HMM; DESIGN.md §2) — expert
+  weights live as per-device page *pools* ``[pages, D, F]`` plus page-table
+  index arrays (``core/expert_pages.pooled_layout``) instead of dense
+  ``[E, D, F]`` banks.  ``moe_ep`` detects the pooled parameter layout
+  (``"tables" in p``) and dispatches by the table's — possibly
+  non-contiguous, min-move — expert placement; the grouped matmul goes
+  through ``kernels.ops.paged_expert_ffn`` (Pallas paged GMM on
+  accelerators, jnp gather oracle on CPU via ``REPRO_POOLED_IMPL``).
+  ``moe_local_pooled`` is the single-shard equivalent over global pool rows.
+  Per-expert math is identical to the dense paths, so pooled and dense
+  decode agree bit-for-bit at f32 (asserted in tests/test_pooled_experts.py).
 
 Capacity convention: every (expert) gets a fixed per-source-shard capacity
 ``C = ceil(T_local * top_k / E * capacity_factor)``; overflow tokens are
@@ -111,8 +122,10 @@ def capacity_for(tokens, cfg):
 
 # ------------------------------------------------------------- local path
 
-def moe_local(cfg, p, x, capacity=None):
-    """x [T, D] -> ([T, D], aux_loss).  Single-shard dispatch/combine."""
+def _moe_local_body(cfg, p, x, capacity, expert_ffn):
+    """Shared single-shard dispatch/combine; ``expert_ffn(xg [E, C, D]) ->
+    [E, C, D]`` is the only thing that differs between the dense banks and
+    the pooled store (which is what makes their outputs bit-identical)."""
     T, D = x.shape
     E, k = cfg.num_experts, cfg.top_k
     C = capacity or capacity_for(T, cfg)
@@ -122,7 +135,7 @@ def moe_local(cfg, p, x, capacity=None):
 
     xg = jnp.zeros((E, C, D), x.dtype).at[expert_flat, slot].set(
         x[token_idx], mode="drop")
-    yg = _expert_ffn(xg, p["wi"], p["wg"], p["wo"])
+    yg = expert_ffn(xg)
 
     w_flat = topk_w.reshape(T * k).astype(x.dtype)
     gathered = yg.at[expert_flat, slot].get(mode="fill", fill_value=0.0)
@@ -132,6 +145,31 @@ def moe_local(cfg, p, x, capacity=None):
         from repro.models.layers import mlp_apply
         y = y + mlp_apply(p["shared"], x)
     return y, aux
+
+
+def moe_local(cfg, p, x, capacity=None):
+    """x [T, D] -> ([T, D], aux_loss).  Single-shard dispatch/combine."""
+    return _moe_local_body(
+        cfg, p, x, capacity,
+        lambda xg: _expert_ffn(xg, p["wi"], p["wg"], p["wo"]))
+
+
+def moe_local_pooled(cfg, p, pool, x, capacity=None):
+    """Single-shard MoE over the pooled weight store.
+
+    ``p`` holds the per-layer index arrays (``gtable`` [E]: global pool row
+    per expert) and ``pool`` the three banks ``{wi, wg, wo}`` as
+    ``[pages_total, D, F]`` / ``[pages_total, F, D]``.  Dispatch/combine are
+    shared with ``moe_local``; only the weight *addressing* differs — the
+    grouped matmul reads pages through the table (``ops.paged_expert_ffn``),
+    so an expert remap rewrites ``gtable`` and moves no weight bytes."""
+    from repro.kernels import ops
+
+    gt = p["gtable"]
+    return _moe_local_body(
+        cfg, p, x, capacity,
+        lambda xg: ops.paged_expert_ffn(gt, gt, gt, pool["wi"], pool["wg"],
+                                        pool["wo"], xg))
 
 
 # ---------------------------------------------------------------- EP path
@@ -243,13 +281,68 @@ def _moe_ep_shard_packed(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo,
     return y, aux
 
 
-def moe_ep(cfg, p, x, parallel, capacity=None):
+def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
+                         edest, eslot, pool_i, pool_g, pool_o, x,
+                         capacity, n_ep):
+    """Pooled-store EP shard body (paper vpage-remap in the serving path).
+
+    Differs from ``_moe_ep_shard`` only in *addressing*: the expert → device
+    map comes from the page table's (possibly non-contiguous, min-move)
+    placement — ``edest``/``eslot`` [E] replace the contiguous
+    ``expert // E_local`` arithmetic — and the grouped matmul reads weight
+    pages through the local table instead of a dense [E_local, D, F] bank.
+    Per-expert math is unchanged, so tokens match the dense path exactly.
+
+    table  [1, Elm] int32   local pool-page per owned expert (this shard)
+    pools  [ppd, D|F, F|D]  this device's page pools (all three banks)
+    """
+    from repro.kernels import ops
+
+    E, k = cfg.num_experts, cfg.top_k
+    elm = table.shape[-1]
+    T, D = x.shape
+    C = capacity
+
+    topk_idx, topk_w, aux = route({"w": router_w}, x, k)
+    expert_flat, slot, keep = _dispatch_indices(topk_idx, E, C)
+    dest = edest[expert_flat]
+    e_loc = eslot[expert_flat]
+    token_idx = jnp.repeat(jnp.arange(T), k)
+
+    send = jnp.zeros((n_ep, elm, C, D), x.dtype).at[
+        dest, e_loc, slot].set(x[token_idx], mode="drop")
+    recv = jax.lax.all_to_all(send, ep_axes, split_axis=0, concat_axis=0,
+                              tiled=False)
+    xg = recv.transpose(1, 0, 2, 3).reshape(elm, n_ep * C, D)
+    t = table[0]
+    yg = ops.paged_expert_ffn(t, t, t, pool_i, pool_g, pool_o, xg)
+    if tp_axis is not None:
+        yg = jax.lax.psum(yg, tp_axis)
+    back = yg.reshape(elm, n_ep, C, D).transpose(1, 0, 2, 3)
+    ret = jax.lax.all_to_all(back, ep_axes, split_axis=0, concat_axis=0,
+                             tiled=False)
+
+    w_flat = topk_w.reshape(T * k).astype(x.dtype)
+    gathered = ret.at[dest, e_loc, slot].get(mode="fill", fill_value=0.0)
+    y = jnp.zeros((T, D), x.dtype).at[token_idx].add(
+        gathered * (w_flat * keep)[:, None])
+    aux = jax.lax.pmean(aux, dp_axes)
+    return y, aux
+
+
+def moe_ep(cfg, p, x, parallel, capacity=None, pool=None):
     """Expert-parallel MoE over a mesh described by ``parallel``
     (repro.distributed.sharding.ParallelCtx).
 
     x [B, S, D]; tokens are flattened and sharded over ``parallel.ep_axes``
     for dispatch; expert weights are sharded E over ``ep_axes`` and (if
     ``tp_axis`` is set) F over ``tp_axis``.
+
+    ``pool``: the pooled weight store ``{wi, wg, wo}`` when ``p`` carries
+    the pooled index arrays (``expert_mode="pooled"``); pools are page-axis
+    sharded over ``ep_axes`` and the pooled shard body is used.  Pooled
+    mode keeps the expert FFN dim unsharded (the serving engine's
+    ``moe_tp=False`` convention — EP spans every device, paper §4.1).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -262,7 +355,9 @@ def moe_ep(cfg, p, x, parallel, capacity=None):
     T = B * S
     T_pad = -(-T // n_ep) * n_ep          # shard_map needs even token shards
     t_local = max(1, T_pad // n_ep)
-    packed = getattr(parallel, "moe_dispatch", "expert_slots") == "packed"
+    pooled = pool is not None and "tables" in p
+    packed = (getattr(parallel, "moe_dispatch", "expert_slots") == "packed"
+              and not pooled)
     if packed:
         C = capacity or max(1, math.ceil(t_local * cfg.top_k / n_ep
                                          * cfg.capacity_factor))
@@ -274,17 +369,32 @@ def moe_ep(cfg, p, x, parallel, capacity=None):
     xf = x.reshape(T, D)
     if T_pad != T:
         xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
-    body = partial(shard_body, cfg, ep_axes, tp_axis, ep_axes, capacity=C,
-                   n_ep=n_ep)
     x_spec = P(ep_axes, None)
-    w_spec_if = P(ep_axes, None, tp_axis)
-    w_spec_of = P(ep_axes, tp_axis, None)
-    y, aux = _shard_map(
-        body, mesh=mesh,
-        in_specs=(P(None, None), w_spec_if, w_spec_if, w_spec_of, x_spec),
-        out_specs=(x_spec, P()),
-        **_SM_NOCHECK,
-    )(p["router"]["w"], p["wi"], p["wg"], p["wo"], xf)
+    if pooled:
+        assert tp_axis is None, \
+            "pooled expert store requires moe_tp=False (EP-only sharding)"
+        body = partial(_moe_ep_shard_pooled, cfg, ep_axes, tp_axis, ep_axes,
+                       capacity=C, n_ep=n_ep)
+        pool_spec = P(ep_axes, None, None)
+        y, aux = _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None), P(ep_axes, None), P(None), P(None),
+                      pool_spec, pool_spec, pool_spec, x_spec),
+            out_specs=(x_spec, P()),
+            **_SM_NOCHECK,
+        )(p["router"]["w"], p["tables"], p["edest"], p["eslot"],
+          pool["wi"], pool["wg"], pool["wo"], xf)
+    else:
+        body = partial(shard_body, cfg, ep_axes, tp_axis, ep_axes,
+                       capacity=C, n_ep=n_ep)
+        w_spec_if = P(ep_axes, None, tp_axis)
+        w_spec_of = P(ep_axes, tp_axis, None)
+        y, aux = _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None), w_spec_if, w_spec_if, w_spec_of, x_spec),
+            out_specs=(x_spec, P()),
+            **_SM_NOCHECK,
+        )(p["router"]["w"], p["wi"], p["wg"], p["wo"], xf)
     if T_pad != T:
         y = y[:T]
     y = y.reshape(B, S, D)

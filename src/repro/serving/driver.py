@@ -90,14 +90,35 @@ def admission_during_scale(strategy: str) -> Tuple[str, bool]:
 def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                     new: ElasticConfig, *, strategy: str = "elastic",
                     hw: Optional[HardwareModel] = None, preinit: bool = True,
-                    kv_seq_len: int = 4096, kv_batch: int = 8):
+                    kv_seq_len: int = 4096, kv_batch: int = 8,
+                    expert_mode: str = "dense", page_table=None):
     """Plan + cost of one transition — THE shared costing path: the
     simulator executes its scale events with this and the ClusterDriver
     selects targets with it, so projection and execution cannot drift.
-    Returns a ``costmodel.ScalingCost``."""
+    Returns a ``costmodel.ScalingCost``.
+
+    ``expert_mode='pooled'`` costs the elastic transition with the min-move
+    expert placement (``plan_elastic_paged``): only overflow experts count
+    as P2P bytes, so the closed loop sees the cheaper vpage-remap scaling
+    cost the pooled engine actually executes.  Pass the live
+    ``page_table`` (the ClusterDriver does, from ``backend.hmm``) to cost
+    from the server's ACTUAL — possibly non-contiguous, post-remap —
+    placement; it is deep-copied, never mutated.  Without one, a fresh
+    contiguous placement at ``old`` is assumed (a server booted there;
+    also the simulator's model of itself)."""
     kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len)
     tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
-    plan = STRATEGIES[strategy](tensors, old, new)
+    if (expert_mode == "pooled" and mcfg.is_moe and old is not None
+            and strategy == "elastic"):
+        from repro.core.scaling_plan import (plan_elastic_min_move,
+                                             plan_elastic_paged)
+        if page_table is not None and page_table.staged is None:
+            plan = plan_elastic_paged(tensors, old, new, page_table.clone(),
+                                      first_k_dense=mcfg.first_k_dense)
+        else:
+            plan = plan_elastic_min_move(tensors, old, new, mcfg)
+    else:
+        plan = STRATEGIES[strategy](tensors, old, new)
     resident = {d: sum(s.values())
                 for d, s in placement(tensors, old).items()}
     return plan_cost(plan, hw=hw or DEFAULT_HW, preinit=preinit,
@@ -207,6 +228,8 @@ class ClusterDriver:
         self._preinit = bool(getattr(backend, "preinit", True))
         self._strategy = (self.config.strategy
                           or getattr(backend, "strategy", "elastic"))
+        # pooled expert store => min-move expert migration in projections
+        self._expert_mode = getattr(backend, "expert_mode", "dense")
 
     # ------------------------------------------------------ target selection
     @property
@@ -238,10 +261,24 @@ class ClusterDriver:
                          new: ElasticConfig) -> float:
         """Cost-model projection of the transition's scale time (DESIGN.md
         §6) via the shared ``transition_cost`` path."""
-        return transition_cost(self.mcfg, self.tp, old, new,
-                               strategy=self._strategy, hw=self._hw,
-                               preinit=self._preinit,
-                               kv_seq_len=self._kv_len).scale_time_s
+        page_table = None
+        if self._expert_mode == "pooled":
+            # cost from the backend's LIVE placement (post previous remaps),
+            # not a hypothetical contiguous boot at `old`
+            page_table = getattr(getattr(self.backend, "hmm", None),
+                                 "page_table", None)
+        try:
+            return transition_cost(self.mcfg, self.tp, old, new,
+                                   strategy=self._strategy, hw=self._hw,
+                                   preinit=self._preinit,
+                                   kv_seq_len=self._kv_len,
+                                   expert_mode=self._expert_mode,
+                                   page_table=page_table).scale_time_s
+        except MemoryError:
+            # the live page pool cannot host this target's staged pages —
+            # executing the transition would fail the same way, so veto the
+            # candidate instead of crashing the control loop
+            return math.inf
 
     def select_target(self, direction: str
                       ) -> Optional[Tuple[ElasticConfig, float]]:
@@ -271,7 +308,7 @@ class ClusterDriver:
             for d in rungs:
                 cand = self._target_for_dp(d, cur)
                 proj = self.projected_cost_s(cur, cand)
-                if proj <= cfg.scale_budget_s:
+                if proj <= cfg.scale_budget_s and math.isfinite(proj):
                     affordable.append((cand, proj))
             if not affordable:
                 return None
@@ -290,7 +327,10 @@ class ClusterDriver:
         if self.backend.capacity(cand) < active * 1.25 \
                 or self.backend.queue_depth():
             return None
-        return cand, self.projected_cost_s(cur, cand)
+        proj = self.projected_cost_s(cur, cand)
+        if not math.isfinite(proj):
+            return None                # live page pool cannot host the target
+        return cand, proj
 
     # -------------------------------------------------------------- the loop
     def run(self, requests: Sequence[Request], until: float) -> List[Request]:

@@ -21,6 +21,12 @@ generated across a scale-up event are identical to an unscaled run.
 
 Step functions are AOT-compiled per (ElasticConfig, shape bucket); the IMM
 caches them — compilation is the JAX analogue of instance pre-initialization.
+
+The engine is parameter-layout agnostic: with the HMM's pooled expert store
+(``expert_mode='pooled'``, DESIGN.md §2) the params pytree it binds carries
+page pools + table index arrays instead of dense expert banks, the decode/
+prefill functions route the MoE through the paged-GMM path, and a scale
+event rebind only swaps tables — the engine code is unchanged either way.
 """
 from __future__ import annotations
 

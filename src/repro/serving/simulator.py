@@ -148,13 +148,19 @@ class ServingSimulator:
                  strategy: str = "elastic", perf: Optional[PerfModel] = None,
                  hw: Optional[HardwareModel] = None, kv_seq_len: int = 4096,
                  preinit: bool = True, kv_mode: str = "dense",
-                 pool_blocks: Optional[int] = None):
+                 pool_blocks: Optional[int] = None,
+                 expert_mode: str = "dense"):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
         self.strategy = strategy
         self.perf = perf or PerfModel(mcfg, kv_seq_len=kv_seq_len)
         self.hw = hw or DEFAULT_HW
+        # 'pooled' models the min-move vpage remap: elastic scale events are
+        # costed with plan_elastic_paged via the shared transition_cost path
+        # (mirrors ElasticServer(expert_mode="pooled"); DESIGN.md §2)
+        assert expert_mode in ("dense", "pooled")
+        self.expert_mode = expert_mode
         # KV admission: 'dense' reserves a full-length row per admitted
         # request (PerfModel.max_batch); 'paged' admits by block occupancy —
         # a request holds blocks for its *current* tokens, growing as it
@@ -200,7 +206,8 @@ class ServingSimulator:
         cost = transition_cost(self.mcfg, self.tp, old, target,
                                strategy=self.strategy, hw=self.hw,
                                preinit=self.preinit,
-                               kv_seq_len=self.perf.kv_seq_len)
+                               kv_seq_len=self.perf.kv_seq_len,
+                               expert_mode=self.expert_mode)
         event = SimScaleEvent(
             t_command=self.t, t_ready=self.t + cost.scale_time_s,
             downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,

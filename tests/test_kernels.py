@@ -39,9 +39,70 @@ def test_paged_expert_ffn():
     pg = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
     po = jnp.asarray(RNG.standard_normal((P, F, D)), jnp.float32)
     x = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
-    got = ops.paged_expert_ffn(ti, tg, to, pi, pg, po, x)
+    # impl='kernel' forces the Pallas path (ops defaults to the ref oracle
+    # on CPU per REPRO_POOLED_IMPL, which would compare ref to itself here)
+    got = ops.paged_expert_ffn(ti, tg, to, pi, pg, po, x, impl="kernel")
     want = ref.paged_expert_ffn_ref(ti, tg, to, pi, pg, po, x)
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # the ops-level default (CPU -> ref fallback) must agree too
+    got_auto = ops.paged_expert_ffn(ti, tg, to, pi, pg, po, x)
+    np.testing.assert_allclose(got_auto, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("E,C,D,F,bc,bf", [
+    (2, 200, 64, 128, 128, 128),    # C % block_c != 0 -> zero-pad C
+    (3, 128, 32, 192, 128, 128),    # F % 128-block -> clamp to full dim
+    (2, 100, 64, 144, 64, 128),     # both ragged at once
+    (1, 128, 32, 384, 128, 256),    # F clamps 256 -> aligned divisor 128
+    (1, 128, 32, 130, 128, 128),    # F prime-ish -> full-dim lane tile
+])
+def test_paged_gmm_unaligned_blocks(E, C, D, F, bc, bf):
+    """Pad-or-clamp: token counts not divisible by block_c are zero-padded
+    (zero rows produce zero outputs, sliced off); hidden dims not divisible
+    by block_f clamp the block to a 128-aligned divisor or the full dim
+    (never an unaligned lane tile — Mosaic constraint; padding F would copy
+    every pool page).  Results must match the oracle exactly either way."""
+    P = E + 2
+    table = jnp.asarray(RNG.permutation(P)[:E].astype(np.int32))
+    pool = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
+    got = ops.paged_gmm(table, pool, x, block_c=bc, block_f=bf)
+    want = ref.paged_gmm_ref(table, pool, x)
+    assert got.shape == want.shape == (E, C, F)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_paged_gmm_bf16_vs_f32_oracle():
+    """bf16 kernel against the f32 oracle (not the bf16 oracle): the paged
+    indirection must not add error beyond bf16 rounding of inputs."""
+    E, C, D, F, P = 2, 128, 64, 128, 5
+    table = jnp.asarray(RNG.permutation(P)[:E].astype(np.int32))
+    pool32 = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    x32 = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
+    got = ops.paged_gmm(table, pool32.astype(jnp.bfloat16),
+                        x32.astype(jnp.bfloat16))
+    want = ref.paged_gmm_ref(table, pool32, x32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_paged_gmm_aliased_table_entries():
+    """Table entries pointing at the SAME page (post-CoW-style sharing):
+    every aliased expert must read identical weights — each grid step only
+    dereferences pool[table[e]], so aliasing is free."""
+    E, C, D, F, P = 4, 128, 32, 128, 6
+    table = jnp.asarray(np.array([3, 3, 5, 3], np.int32))
+    pool = jnp.asarray(RNG.standard_normal((P, D, F)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), jnp.float32)
+    got = ops.paged_gmm(table, pool, x)
+    want = ref.paged_gmm_ref(table, pool, x)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    # experts 0, 1 and 3 share page 3: same inputs -> identical outputs
+    same_x = x.at[1].set(x[0]).at[3].set(x[0])
+    out = ops.paged_gmm(table, pool, same_x)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[3]))
 
 
 def test_paged_gmm_remap_invariance():

@@ -1,0 +1,341 @@
+"""Pooled expert weight store (``expert_mode="pooled"``) — parity and
+byte-accounting tests for the vpage remap in the serving path (DESIGN.md §2).
+
+Fast (single device): pooled execution is bit-identical to the dense banks
+at f32, for the local path and for prefill+decode logits/tokens.
+
+Slow (subprocess, 8 host devices, patterns from test_elastic_integration /
+test_paged_engine): tokens across an EP scale event mid-decode match the
+dense run exactly; the scale event's expert-weight P2P bytes equal the sum
+of ``stage_remap(min_move=True)`` Migration page sizes and agree page-for-
+page with ``plan_elastic_paged``; commit moves zero expert-weight bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+TEST_MOE_CFG = None
+
+
+def _mcfg():
+    global TEST_MOE_CFG
+    if TEST_MOE_CFG is None:
+        ns = {}
+        exec(TEST_MOE, ns)
+        TEST_MOE_CFG = ns["MCFG"]
+    return TEST_MOE_CFG
+
+
+# ------------------------------------------------------------ fast parity
+
+def test_moe_local_pooled_matches_dense_bitwise():
+    from repro.core.expert_pages import ExpertPageTable, pooled_layout
+    from repro.core.topology import ElasticConfig
+    from repro.models.moe import moe_init, moe_local, moe_local_pooled
+
+    mcfg = _mcfg()
+    cfg = ElasticConfig(dp=1, tp=1, devices=(0,))
+    E, L = mcfg.num_experts, mcfg.num_layers
+    ppd = L * E
+    p = moe_init(jax.random.PRNGKey(0), mcfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, mcfg.d_model))
+    y_ref, aux_ref = moe_local(mcfg, p, x)
+
+    t = ExpertPageTable(L, E, pool_pages_per_device=ppd)
+    t.initial_place(cfg)
+    lay = pooled_layout(t.active, cfg, L, E, ppd)
+    pool = {k: np.zeros((cfg.ndev * ppd,) + np.asarray(p[k]).shape[1:],
+                        np.float32) for k in ("wi", "wg", "wo")}
+    for (l, e), ref in t.active.items():
+        if l == 0:
+            row = cfg.slot(ref.device) * ppd + ref.page
+            for k in pool:
+                pool[k][row] = np.asarray(p[k])[e]
+    pp = {"router": p["router"],
+          **{k: jnp.asarray(v[0]) for k, v in lay.items()}}
+    y_p, aux_p = moe_local_pooled(mcfg, pp,
+                                  {k: jnp.asarray(v)
+                                   for k, v in pool.items()}, x)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_ref))
+    assert float(aux_p) == float(aux_ref)
+
+
+def test_pooled_decode_logits_match_dense():
+    """Same seed, one device: prefill + decode logits of the pooled store
+    are allclose to (in fact bit-identical with) the dense banks, and the
+    greedy tokens are identical."""
+    from repro.core.hmm import HMM
+    from repro.core.topology import ElasticConfig
+    from repro.models import model as M
+
+    mcfg = _mcfg()
+    c1 = ElasticConfig(dp=1, tp=1, devices=(0,))
+
+    def boot(mode):
+        hmm = HMM(mcfg, tp=1, batch_per_replica=2, max_len=32,
+                  expert_mode=mode, seed=0)
+        hmm.boot(c1)
+        return hmm.attach_active()[2]
+
+    dense_p, pooled_p = boot("dense"), boot("pooled")
+    assert "moe_pool" in pooled_p and "wi" not in pooled_p["blocks"]["moe"]
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 8)), jnp.int32),
+             "lengths": jnp.asarray([8, 6], jnp.int32)}
+    lg_d, cache_d = M.prefill(mcfg, dense_p, batch, max_len=32)
+    lg_p, cache_p = M.prefill(mcfg, pooled_p, batch, max_len=32)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d),
+                               rtol=1e-6, atol=1e-6)
+    tok = jnp.argmax(lg_d, axis=-1).astype(jnp.int32)
+    assert (jnp.argmax(lg_p, axis=-1).astype(jnp.int32) == tok).all()
+    lengths = batch["lengths"]
+    lg_d2, _ = M.decode_step(mcfg, dense_p, tok[:, None], cache_d, lengths)
+    lg_p2, _ = M.decode_step(mcfg, pooled_p, tok[:, None], cache_p, lengths)
+    np.testing.assert_allclose(np.asarray(lg_p2), np.asarray(lg_d2),
+                               rtol=1e-6, atol=1e-6)
+    assert (jnp.argmax(lg_p2, -1) == jnp.argmax(lg_d2, -1)).all()
+
+
+def test_transition_cost_pooled_sees_min_move_migration():
+    """The closed loop must see the cheaper min-move migration through the
+    shared costing path.  The P2P bottleneck (max bytes into one device) is
+    where it shows: on scale-down, contiguous placement reshuffles experts
+    among the survivors while min-move only moves the evicted devices'
+    orphans — strictly less traffic.  (On scale-up both placements send the
+    same page count to the fresh devices, so the bottleneck ties.)"""
+    from repro.core.topology import ElasticConfig
+    from repro.serving.driver import transition_cost
+
+    mcfg = _mcfg()
+    c6 = ElasticConfig(dp=3, tp=2, devices=(0, 1, 2, 3, 4, 5))
+    c4 = ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3))
+    dense = transition_cost(mcfg, 2, c6, c4)
+    pooled = transition_cost(mcfg, 2, c6, c4, expert_mode="pooled")
+    assert pooled.breakdown["p2p"] < dense.breakdown["p2p"]
+    up_d = transition_cost(mcfg, 2, c4, c6)
+    up_p = transition_cost(mcfg, 2, c4, c6, expert_mode="pooled")
+    assert up_p.breakdown["p2p"] <= up_d.breakdown["p2p"]
+
+    # the simulator threads its expert_mode into the same costing path
+    from repro.serving.simulator import ServingSimulator
+
+    def sim_cost(mode):
+        sim = ServingSimulator(mcfg, tp=2, ndev=6, expert_mode=mode)
+        return sim.command_scale(4).event.cost
+
+    assert (sim_cost("pooled").breakdown["p2p"]
+            < sim_cost("dense").breakdown["p2p"])
+
+    # a LIVE page table (post-remap, non-contiguous) costs from the actual
+    # placement — the ClusterDriver passes backend.hmm.page_table — and is
+    # never mutated by the projection
+    from repro.core.expert_pages import ExpertPageTable
+    live = ExpertPageTable(mcfg.num_layers, mcfg.num_experts)
+    live.initial_place(c4)
+    live.stage_remap(c6, min_move=True)
+    live.commit()
+    before = dict(live.active)
+    cost = transition_cost(mcfg, 2, c6, c4, expert_mode="pooled",
+                           page_table=live)
+    assert cost.scale_time_s > 0
+    assert live.staged is None and live.active == before
+
+
+# --------------------------------------------------- slow subprocess runs
+
+POOLED_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def run(expert_mode, scale, kv_mode="dense", incremental=True):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0,
+                        expert_mode=expert_mode, kv_mode=kv_mode,
+                        kv_block_size=16)
+    srv.boot(c4 if scale else c6)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 40, prompt=rng.integers(0, 128, 16))
+            for i in range(4)]
+    for r in reqs: srv.submit(r)
+    t, n, task = 0.0, 0, None
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 5 and task is None:
+            if incremental:
+                task = srv.start_scale(c6)
+            else:
+                srv.stage_scale(c6); srv.tick(t); t += .1; n += 1
+                srv.switchover(); continue
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+        assert n < 500
+    while task is not None and not task.done:   # byte assertions need DONE
+        srv.tick(t); task.advance(t); t += .1
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv, task
+"""
+
+
+@pytest.mark.slow
+def test_pooled_tokens_identical_across_scaleup_with_exact_migration_bytes():
+    """The acceptance criterion end-to-end: pooled decode tokens across an
+    incremental 4->6 scale event match the dense run bit for bit; expert
+    P2P bytes during staging equal exactly sum(Migration page sizes) and
+    match plan_elastic_paged page-for-page; commit moves zero expert-weight
+    bytes (table swap only)."""
+    out = run_with_devices(POOLED_COMMON + """
+from repro.core.expert_pages import ExpertPageTable
+from repro.core.scaling_plan import Op, plan_elastic_paged
+from repro.core.topology import model_tensors
+
+ref_toks, _, _ = run("dense", scale=False)
+
+# the pre-scale placement for the planner cross-check: initial_place is
+# deterministic, so a fresh table reproduces the booted server's state
+snapshot = ExpertPageTable(MCFG.num_layers, MCFG.num_experts)
+snapshot.initial_place(c4)
+
+got_toks, srv, task = run("pooled", scale=True)
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], (rid, ref_toks[rid], got_toks[rid])
+
+migs = srv.hmm.last_migrations
+page = srv.hmm.expert_page_nbytes()
+stage = task.stage_stats              # frozen when STAGING completed
+final = srv.hmm.last_stats            # stage + commit, merged
+assert migs, "4->6 with 24 experts must migrate overflow experts"
+# staged expert P2P == exactly the migration pages, nothing else
+assert stage.expert_p2p_bytes == len(migs) * page, \
+    (stage.expert_p2p_bytes, len(migs), page)
+# commit moved ZERO expert-weight bytes (and zero weight bytes at all)
+assert final.expert_p2p_bytes == stage.expert_p2p_bytes
+assert final.p2p_bytes == stage.p2p_bytes
+assert final.expert_local_bytes == 0   # no _assemble_rows concatenation
+
+# page-for-page agreement with the logical planner
+tensors = model_tensors(MCFG, 2)
+plan = plan_elastic_paged(tensors, c4, c6, snapshot, first_k_dense=0)
+plan_moves = {(s.key.tensor, s.src, s.dst) for s in plan.steps
+              if s.op == Op.P2P and "/expert" in s.key.tensor}
+exec_moves = {(f"layer{m.layer}/expert{m.expert}",
+               m.src.device, m.dst.device) for m in migs}
+assert plan_moves == exec_moves, (plan_moves ^ exec_moves)
+
+# min-move strictly beats the dense contiguous regroup on expert bytes
+_, dsrv, dtask = run("dense", scale=True)
+assert dtask.stage_stats.expert_p2p_bytes > stage.expert_p2p_bytes
+print("POOLED-SCALEUP-BYTES-OK", len(migs), stage.expert_p2p_bytes)
+""")
+    assert "POOLED-SCALEUP-BYTES-OK" in out
+
+
+@pytest.mark.slow
+def test_pooled_with_paged_kv_tokens_match_dense():
+    """Both indirections at once — pooled expert weights + paged KV blocks:
+    tokens still match the dense/dense engine exactly, across a scale
+    event, and the block pool conserves."""
+    out = run_with_devices(POOLED_COMMON + """
+ref_toks, _, _ = run("dense", scale=False, kv_mode="dense")
+got_toks, srv, _ = run("pooled", scale=True, kv_mode="paged")
+assert srv.hmm.kv_blocks.num_partitions == 3
+srv.hmm.kv_blocks.check_invariants()
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], rid
+print("POOLED-PAGED-KV-OK")
+""")
+    assert "POOLED-PAGED-KV-OK" in out
+
+
+@pytest.mark.slow
+def test_pooled_scale_with_nondefault_device_pool():
+    """ElasticConfig device ints are LOGICAL indices into ``all_devices``;
+    with a shifted pool (all_devices = jax.devices()[2:]) the migration
+    path must still resolve shard sources/destinations by physical device —
+    regression for keying pool shards by jax device id."""
+    out = run_with_devices(TEST_MOE + """
+import jax, numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def run(devpool):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                        all_devices=devpool)
+    srv.boot(c4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 24, prompt=rng.integers(0, 128, 16))
+            for i in range(4)]
+    for r in reqs: srv.submit(r)
+    t, n = 0.0, 0
+    while any(r.finish_s is None for r in reqs):
+        if n == 5:
+            srv.stage_scale(c6); srv.tick(t); t += .1; n += 1
+            srv.switchover(); continue
+        srv.tick(t); t += .1; n += 1
+        assert n < 500
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv
+
+ref, _ = run(None)                       # default jax.devices()
+got, srv = run(jax.devices()[2:])        # logical 0..5 -> physical 2..7
+assert srv.hmm.last_stats.expert_p2p_bytes == \
+    len(srv.hmm.last_migrations) * srv.hmm.expert_page_nbytes()
+for rid in ref:
+    assert ref[rid] == got[rid], rid
+print("POOLED-DEVPOOL-OK")
+""")
+    assert "POOLED-DEVPOOL-OK" in out
+
+
+@pytest.mark.slow
+def test_pooled_scaledown_and_abort_restore_pool():
+    """Scale down 6->4 with the pooled store (drain + min-move migration
+    off the evicted devices), and an aborted staging returns every staged
+    page — pages_in_use matches the committed table afterwards."""
+    out = run_with_devices(POOLED_COMMON + """
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled")
+srv.boot(c6)
+rng = np.random.default_rng(0)
+reqs = [Request(i, 0.0, 16, 20, prompt=rng.integers(0, 128, 16))
+        for i in range(4)]
+for r in reqs: srv.submit(r)
+
+# abort mid-staging: pool bookkeeping must fully unwind
+task = srv.start_scale(c4)
+srv.tick(0.0); task.advance(0.0)
+task.abort()
+for d in c6.devices:
+    owned = sum(1 for ref in srv.hmm.page_table.active.values()
+                if ref.device == d)
+    assert srv.hmm.page_table.pages_in_use(d) == owned
+assert srv.hmm.page_table.staged is None
+
+# now the real scale-down, driven to completion
+t, n, task = 0.1, 0, srv.start_scale(c4)
+while any(r.finish_s is None for r in reqs) or not task.done:
+    srv.tick(t)
+    if not task.done:
+        task.advance(t)
+    t += .1; n += 1
+    assert n < 1000
+assert srv.hmm.active_cfg.ndev == 4
+# every expert now lives on the surviving devices, balanced
+for ref in srv.hmm.page_table.active.values():
+    assert ref.device in c4.devices
+st = srv.hmm.last_stats
+assert st.expert_p2p_bytes == len(srv.hmm.last_migrations) * \
+    srv.hmm.expert_page_nbytes()
+print("POOLED-SCALEDOWN-OK")
+""")
+    assert "POOLED-SCALEDOWN-OK" in out
