@@ -27,8 +27,8 @@ def main() -> None:
 
     from benchmarks import (ablation, bootup_breakdown, engine_measured,
                             expert_remap, granularity, kv_pressure,
-                            latency_breakdown, memory_vs_ep, peak_memory,
-                            scaledown_latency, scaleup_latency,
+                            latency_breakdown, memory_vs_ep, overlap,
+                            peak_memory, scaledown_latency, scaleup_latency,
                             slo_compliance, slo_dynamics,
                             throughput_windows)
     modules = [
@@ -45,6 +45,7 @@ def main() -> None:
         ("table2", throughput_windows),
         ("kv_pressure", kv_pressure),
         ("expert_remap", expert_remap),
+        ("overlap", overlap),
         ("measured", engine_measured),
     ]
     if args.only:

@@ -3,9 +3,11 @@
 Unlike the scripted quickstart, nothing here issues a scale command: the
 SLO-aware LoadEstimator watches windowed attainment and queue depth, the
 ClusterDriver picks the next config with the cost model and executes it as a
-resumable ScalingTask — one per-tensor weight-staging increment per engine
-tick, so tokens keep flowing through the whole reconfiguration (paper §4.3 +
-§5, on real JAX host devices).
+resumable ScalingTask polled once per engine tick — and with
+``staging="overlap"`` the weight transfers ride the HMM's background
+TransferEngine, so tokens keep flowing *concurrently* with the memory ops
+through the whole reconfiguration (paper §4.3 + §5, on real JAX host
+devices; DESIGN.md §3).
 
 The same ``ClusterDriver.run`` loop drives the paper-scale discrete-event
 simulator — see benchmarks/slo_dynamics.py.
@@ -36,7 +38,7 @@ def main():
     policy = ScalingPolicy(slo=slo, window=8, cooldown_s=3.0,
                            queue_scale_up=3)
     srv = ElasticServer(mcfg, tp=2, batch_per_replica=2, max_len=128,
-                        prefill_buckets=(32,), seed=0)
+                        prefill_buckets=(32,), seed=0, staging="overlap")
     srv.boot(ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3)))
     # standby instance for the anticipated next rung (IMM LRU)
     srv.preinitialize(ElasticConfig(dp=3, tp=2, devices=(0, 1, 2, 3, 4, 5)))
@@ -65,8 +67,9 @@ def main():
         print(f"  {ev.src} -> {ev.dst}: zero-copy "
               f"{ev.stats.zero_copy_bytes/1e6:.1f}MB, p2p "
               f"{ev.stats.p2p_bytes/1e6:.1f}MB, stage {ev.stage_s:.2f}s, "
+              f"serve-loop stall {ev.stall_s:.3f}s, "
               f"compile hit: {ev.compile_hit}")
-    print("\nsummary:", summarize(reqs, slo))
+    print("\nsummary:", summarize(reqs, slo, backend=srv))
     print("final config:", srv.hmm.active_cfg.describe())
 
 

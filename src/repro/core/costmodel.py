@@ -30,6 +30,14 @@ class HardwareModel:
     comm_setup_s: float = 3.0       # communication group (re)init
     kv_alloc_s: float = 1.5         # KV allocator setup on a fresh instance
     device_hbm: float = 64e9        # Ascend 910C HBM per device
+    # overlapped staging (DESIGN.md §3): background transfers share links
+    # and HBM bandwidth with the serving hot path, so each op runs slower
+    # by `overlap_contention`; in exchange the warmup/compile window hides
+    # under the transfer window and decode only loses `overlap_stall_frac`
+    # of the transfer time to HBM contention instead of blocking a full
+    # serve-loop quantum per increment.
+    overlap_contention: float = 1.25
+    overlap_stall_frac: float = 0.12
 
 
 DEFAULT_HW = HardwareModel()
@@ -41,6 +49,12 @@ class ScalingCost:
     downtime_s: float
     peak_mem_bytes_per_device: Dict[int, int]
     breakdown: Dict[str, float]
+    # modelled decode-stall during the staging window: serial staging blocks
+    # the serve loop for the whole transfer time (one increment per tick);
+    # overlapped staging only loses the HBM-contention share.  Zero when the
+    # transition has downtime (the outage already accounts for it).
+    decode_stall_s: float = 0.0
+    staging: str = "serial"
 
     @property
     def peak_mem_gb(self) -> float:
@@ -59,12 +73,22 @@ def plan_cost(plan: ScalingPlan,
               hccl: bool = True,
               ipc_safe_alloc: bool = True,
               strategy: str = "elastic",
-              resident_bytes_per_device: Optional[Dict[int, int]] = None
+              resident_bytes_per_device: Optional[Dict[int, int]] = None,
+              staging: str = "serial"
               ) -> ScalingCost:
     """Project a plan onto the hardware model.
 
     ``resident_bytes_per_device``: bytes already live per device before the
     transition (old instance weights+KV); used for peak-memory accounting.
+
+    ``staging``: "serial" sums transfer + warmup (the tick-interleaved
+    legacy path, decode stalled for the whole transfer time); "overlap"
+    models the background TransferEngine — transfers slowed by
+    ``hw.overlap_contention`` but concurrent with serving AND with the
+    warmup/compile window, so scale time is the *max* of the two instead of
+    their sum and decode only stalls for the HBM-contention share
+    (DESIGN.md §3).  The breakdown's ``op_s`` key holds the
+    serial-equivalent Σ of per-op transfer time either way.
 
     The ablation flags mirror Table 1:
     * ``ipc_safe_alloc=False`` — zero-copy still works but tensors must be
@@ -115,6 +139,7 @@ def plan_cost(plan: ScalingPlan,
     for d in devs:
         peak.setdefault(d, 0)
 
+    assert staging in ("serial", "overlap")
     p2p_bw = hw.p2p_bw if hccl else hw.p2p_bw_slow
     t_disk = max((b / hw.disk_bw for b in disk_bytes.values()), default=0.0)
     t_p2p = max((b / p2p_bw for b in p2p_in.values()), default=0.0)
@@ -123,9 +148,27 @@ def plan_cost(plan: ScalingPlan,
     if not ipc_safe_alloc:
         t_zc += n_zero_copy * hw.zero_copy_per_tensor * 20  # re-registration
 
-    t = t_disk + t_p2p + t_init + t_zc + hw.warmup_s
-    breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
-                 "zero_copy": t_zc, "warmup": hw.warmup_s}
+    t_transfer = t_disk + t_p2p + t_init
+    if staging == "overlap":
+        # background transfers contend with serving -> each op slower; in
+        # exchange the warmup/compile window hides under the transfer
+        # window (max, not sum) and decode only loses the contention share
+        t_ops = t_transfer * hw.overlap_contention
+        t = max(t_ops, hw.warmup_s) + t_zc
+        decode_stall = t_ops * hw.overlap_stall_frac
+        breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
+                     "zero_copy": t_zc, "warmup": hw.warmup_s,
+                     "op_s": t_ops,
+                     "overlap_hidden": t_ops + hw.warmup_s
+                     - max(t_ops, hw.warmup_s)}
+    else:
+        t = t_transfer + t_zc + hw.warmup_s
+        # serial staging blocks the serve loop one increment per tick: the
+        # whole transfer time is decode stall
+        decode_stall = t_transfer
+        breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
+                     "zero_copy": t_zc, "warmup": hw.warmup_s,
+                     "op_s": t_transfer}
     if not preinit:
         t += hw.preinit_boot_s + hw.comm_setup_s
         breakdown["cold_boot"] = hw.preinit_boot_s + hw.comm_setup_s
@@ -135,10 +178,12 @@ def plan_cost(plan: ScalingPlan,
         breakdown["kv_alloc"] = hw.kv_alloc_s
         t += hw.kv_alloc_s
         downtime = t
+        decode_stall = 0.0          # the outage already accounts for it
     else:
         downtime = 0.0
     return ScalingCost(scale_time_s=t, downtime_s=downtime,
-                       peak_mem_bytes_per_device=peak, breakdown=breakdown)
+                       peak_mem_bytes_per_device=peak, breakdown=breakdown,
+                       decode_stall_s=decode_stall, staging=staging)
 
 
 def resident_bytes(plan_place: Dict[int, Dict], kv_included: bool = True

@@ -13,9 +13,12 @@ The serving lifecycle (paper §5):
 
 For closed-loop operation, ``ElasticServer`` implements the
 ``ServingBackend`` protocol (serving/driver.py): ``start_scale`` returns an
-``EngineScalingTask`` that performs the same transition as ``scale_to`` but
-as resumable increments — one per-tensor HMM reshard per ``advance`` call —
-so a ``ClusterDriver`` interleaves real decode ticks with staging work.
+``EngineScalingTask`` whose ``advance`` is a non-blocking poll.  With the
+default ``staging="serial"`` each poll performs one per-tensor HMM reshard
+(tick-interleaved staging); with ``staging="overlap"`` the whole work list
+runs on the HMM's background ``TransferEngine`` while real decode ticks
+proceed concurrently and the IMM AOT compile overlaps the transfer window
+(DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -44,21 +47,42 @@ class ScaleEvent:
     compile_hit: bool
     stage_s: float
     switch_s: float
+    # serve-loop time blocked on staging/compile work (the decode-stall
+    # during scaling): ~= stage_s on the blocking/serial paths, near-zero
+    # with the background TransferEngine (staging="overlap")
+    stall_s: float = 0.0
+    staging: str = "serial"
+    # staging wall-clock frozen at record time: ``stats`` aliases
+    # ``hmm.last_stats``, whose wall_s later grows by the commit/KV-grow
+    # time at switchover — overlap-efficiency ratios must use this snapshot
+    stage_wall_s: float = 0.0
 
 
 class EngineScalingTask:
     """Resumable scale transition over the real JAX engine (driver.ScalingTask).
 
-    Phases: STAGING (one per-tensor HMM reshard per ``advance``) ->
-    COMPILING (IMM pre-init; LRU hit makes this ~free) -> DRAINING
-    (scale-down only) -> COMMITTING (switchover) -> DONE.  The engine's
-    ``tick()`` is legal — and expected — between every ``advance`` call.
+    ``advance`` is a non-blocking completion poll; what runs inside it
+    depends on the HMM's staging mode:
+
+    * ``staging="serial"`` — one per-tensor HMM reshard per ``advance``,
+      then a COMPILING advance (IMM pre-init; LRU hit makes it ~free),
+    * ``staging="overlap"`` — the transfers already run on the background
+      ``TransferEngine`` (submitted at ``start_scale``); the first
+      ``advance`` runs the IMM AOT compile on the serve thread *while* the
+      transfers proceed (STAGING ∥ COMPILING, DESIGN.md §3) and every later
+      ``advance`` just polls completion.
+
+    Either way the phases continue DRAINING (scale-down only) ->
+    COMMITTING (switchover, a barrier that joins any in-flight ops) ->
+    DONE, and the engine's ``tick()`` is legal — and expected — between
+    every ``advance`` call.
     """
 
     def __init__(self, server: "ElasticServer", target: ElasticConfig):
         self.server = server
         self.target = target
         self.phase = ScalePhase.STAGING
+        self.staging_mode = server.hmm.staging_mode
         self.increments_total = server.hmm.begin_scale(target) + 1  # +compile
         self.increments_done = 0
         self.stats: TransferStats = server.hmm._stage_stats
@@ -66,6 +90,8 @@ class EngineScalingTask:
         # keeps accumulating: commit merges the KV handover bytes into it)
         self.stage_stats: Optional[TransferStats] = None
         self.event: Optional[ScaleEvent] = None
+        self.stall_s = 0.0      # serve-loop time spent inside advance()
+        self._compile_hit: Optional[bool] = None
         self._down = target.ndev < server.engine.cfg.ndev
         self._keep = target.dp * server.engine.batch_per_replica
         if self._down:
@@ -78,23 +104,82 @@ class EngineScalingTask:
     def done(self) -> bool:
         return self.phase.terminal
 
+    @property
+    def overlap_efficiency(self) -> Optional[float]:
+        """Σ transfer-op time / staging wall-clock (>1 = real overlap);
+        None until staging completed (driver event log, metrics)."""
+        st = self.stage_stats
+        if st is None or st.wall_s <= 0 or st.op_s <= 0:
+            return None
+        return st.op_s / st.wall_s
+
+    def _finish_staging(self):
+        """STAGING complete: freeze the staging snapshot, record the event
+        (IMM compile is a hit by now on the overlapped path) and move on."""
+        self.stage_stats = dataclasses.replace(self.stats)
+        self.event = self.server._record_stage(self.target,
+                                               self.stats.wall_s)
+        if self._compile_hit is not None:
+            self.event.compile_hit = self._compile_hit
+        self.phase = (ScalePhase.DRAINING if self._down
+                      else ScalePhase.COMMITTING)
+
+    def _unwind_failed(self):
+        """A staging/compile step raised: release every piece of task state
+        so the server keeps serving on the still-active config (the HMM
+        session itself is aborted — poll_staging already did for overlap
+        failures; abort() is idempotent either way)."""
+        self.server.hmm.abort()
+        if self._down:
+            self.server.engine.admit_limit = None
+        self.server._staged_cfg = None
+        self.server._active_task = None
+        self.phase = ScalePhase.ABORTED
+
     def advance(self, now: float) -> ScalePhase:
         ph = self.phase
         if ph is ScalePhase.STAGING:
-            more = self.server.hmm.stage_increment()
-            self.increments_done += 1
-            if not more:
-                self.stage_stats = dataclasses.replace(self.stats)
-                self.phase = ScalePhase.COMPILING
+            t0 = time.perf_counter()
+            try:
+                if self.staging_mode == "overlap":
+                    if self._compile_hit is None:
+                        # the AOT compile runs on the serve thread while the
+                        # TransferEngine moves bytes in the background — the
+                        # overlapped pipeline's COMPILING ∥ STAGING
+                        self._compile_hit = self.server.imm.has(self.target)
+                        self.server.imm.preinitialize(self.target)
+                    if self.server.hmm.poll_staging():
+                        self.increments_done = self.increments_total
+                        self._finish_staging()
+                    else:
+                        self.increments_done = (
+                            self.increments_total - 1
+                            - self.server.hmm.staging_remaining)
+                else:
+                    more = self.server.hmm.stage_increment()
+                    self.increments_done += 1
+                    if not more:
+                        self.stage_stats = dataclasses.replace(self.stats)
+                        self.phase = ScalePhase.COMPILING
+            except BaseException:
+                self._unwind_failed()
+                raise
+            self.stall_s += time.perf_counter() - t0
         elif ph is ScalePhase.COMPILING:
+            t0 = time.perf_counter()
             self.increments_done += 1
             # staging time = the HMM's tracked staging work, NOT wall time
             # since task creation (which would count the decode ticks that
             # ran between increments); _record_stage adds the compile time
-            self.event = self.server._record_stage(
-                self.target, self.stats.wall_s)
+            try:
+                self.event = self.server._record_stage(
+                    self.target, self.stats.wall_s)
+            except BaseException:
+                self._unwind_failed()
+                raise
             self.phase = (ScalePhase.DRAINING if self._down
                           else ScalePhase.COMMITTING)
+            self.stall_s += time.perf_counter() - t0
         elif ph is ScalePhase.DRAINING:
             if self.server.engine.drained(self._keep):
                 self.phase = ScalePhase.COMMITTING
@@ -102,6 +187,8 @@ class EngineScalingTask:
             self.server.switchover()
             self.phase = ScalePhase.DONE
             self.server._active_task = None
+        if self.event is not None:
+            self.event.stall_s = self.stall_s
         return self.phase
 
     def abort(self):
@@ -123,7 +210,8 @@ class ElasticServer:
                  kv_mode: str = "dense", kv_block_size: int = 16,
                  kv_blocks_per_replica: Optional[int] = None,
                  expert_mode: str = "dense",
-                 expert_pool_pages: Optional[int] = None):
+                 expert_pool_pages: Optional[int] = None,
+                 staging: str = "serial", transfer_workers: int = 4):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
         # 'pooled': expert weights live as page pools + tables, so an EP
@@ -131,12 +219,17 @@ class ElasticServer:
         # rewrites tables (DESIGN.md §2); the driver's cost projections
         # adopt this through the ``expert_mode`` attribute
         self.expert_mode = expert_mode
+        # 'overlap': staging transfers run on the HMM's background
+        # TransferEngine while tick() keeps serving; the driver's cost
+        # projections adopt this through the ``staging_mode`` attribute
+        self.staging_mode = staging
         self.hmm = HMM(mcfg, tp, batch_per_replica=batch_per_replica,
                        max_len=max_len, all_devices=all_devices, seed=seed,
                        kv_mode=kv_mode, kv_block_size=kv_block_size,
                        kv_blocks_per_replica=kv_blocks_per_replica,
                        expert_mode=expert_mode,
-                       expert_pool_pages=expert_pool_pages)
+                       expert_pool_pages=expert_pool_pages,
+                       staging=staging, transfer_workers=transfer_workers)
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
                        max_len=max_len, prefill_buckets=prefill_buckets)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,
@@ -190,7 +283,12 @@ class ElasticServer:
                         src=self.hmm.active_cfg.describe(),
                         dst=new_cfg.describe(), stats=self.hmm.last_stats,
                         compile_hit=hit,
-                        stage_s=stage_s, switch_s=0.0)
+                        stage_s=stage_s, switch_s=0.0,
+                        # blocking callers stall for the whole stage; the
+                        # incremental task overwrites with its measured poll
+                        # time (near-zero when overlapped)
+                        stall_s=stage_s, staging=self.staging_mode,
+                        stage_wall_s=self.hmm.last_stats.wall_s)
         self.events.append(ev)
         return ev
 
@@ -297,6 +395,23 @@ class ElasticServer:
     def kv_stats(self):
         """Block-pool stats (None in dense mode); serving/metrics.py."""
         return self.engine.kv_stats()
+
+    def scaling_summary(self) -> Optional[dict]:
+        """Aggregate staging-overlap metrics over completed scale events
+        (None before the first one); consumed by ``metrics.summarize``:
+
+        * ``decode_stall_s`` — total serve-loop time blocked on staging
+          work across all events,
+        * ``overlap_efficiency`` — mean Σ-op-time / staging-wall-clock
+          (>1 = transfers genuinely overlapped serving)."""
+        if not self.events:
+            return None
+        effs = [ev.stats.op_s / ev.stage_wall_s for ev in self.events
+                if ev.stage_wall_s > 0 and ev.stats.op_s > 0]
+        return {"staging_mode": self.staging_mode,
+                "decode_stall_s": sum(ev.stall_s for ev in self.events),
+                "overlap_efficiency":
+                    sum(effs) / len(effs) if effs else None}
 
     def current_config(self) -> ElasticConfig:
         return self.hmm.active_cfg

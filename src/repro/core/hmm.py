@@ -22,10 +22,19 @@ paper).
 
 Byte accounting (zero_copy / p2p / local / init) is exact and is asserted
 against the logical planner (scaling_plan.py) in tests.
+
+Staging runs in one of two modes (DESIGN.md §3): ``staging="serial"`` (the
+default) moves one tensor per ``stage_increment`` call on the caller's
+thread; ``staging="overlap"`` submits the whole work list to a background
+``TransferEngine`` (core/transfer.py) at ``begin_scale`` and the caller
+polls completion with ``poll_staging`` — same bytes, field-by-field equal
+``TransferStats``, strictly less wall-clock because decode ticks run
+concurrently with the transfers instead of between them.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import defaultdict
 from typing import Any, Dict, List, Optional, Tuple
@@ -54,12 +63,26 @@ class TransferStats:
     zero_copy_count: int = 0
     p2p_count: int = 0
     wall_s: float = 0.0
+    # Σ per-transfer-op execution time.  Serial staging: ~= the transfer
+    # share of wall_s.  Overlapped staging: ops run concurrently on the
+    # TransferEngine, so op_s / wall_s > 1 is the measured overlap
+    # efficiency (metrics.summarize).  Timing fields (wall_s, op_s) are
+    # excluded from the serial-vs-overlap byte-equality assertions.
+    op_s: float = 0.0
     # expert-weight sub-accounting (included in the totals above): what the
     # vpage remap moved vs reused — pooled mode asserts expert_p2p_bytes ==
     # sum of Migration page sizes, and commit adds zero to it
     expert_p2p_bytes: int = 0
     expert_zero_copy_bytes: int = 0
     expert_local_bytes: int = 0
+
+    #: the additive byte/count fields that must agree exactly between
+    #: staging="serial" and staging="overlap" (same reshard calls, same
+    #: bytes — only wall-clock differs); tests iterate this list
+    BYTE_FIELDS = ("zero_copy_bytes", "p2p_bytes", "local_bytes",
+                   "init_bytes", "zero_copy_count", "p2p_count",
+                   "expert_p2p_bytes", "expert_zero_copy_bytes",
+                   "expert_local_bytes")
 
     def merge(self, o: "TransferStats"):
         self.zero_copy_bytes += o.zero_copy_bytes
@@ -69,6 +92,7 @@ class TransferStats:
         self.zero_copy_count += o.zero_copy_count
         self.p2p_count += o.p2p_count
         self.wall_s += o.wall_s
+        self.op_s += o.op_s
         self.expert_p2p_bytes += o.expert_p2p_bytes
         self.expert_zero_copy_bytes += o.expert_zero_copy_bytes
         self.expert_local_bytes += o.expert_local_bytes
@@ -121,7 +145,14 @@ def reshard_with_reuse(arr: jax.Array, new_sharding: NamedSharding,
 
 
 def _assemble_rows(arr, index, dim, dev, stats: TransferStats):
-    """Piecewise (per-page) assembly of one target shard along ``dim``."""
+    """Piecewise (per-page) assembly of one target shard along ``dim``.
+
+    Pure memory ops only: pieces are sliced/concatenated host-side with
+    numpy and shipped with one ``jax.device_put`` — no jit-compiled
+    primitives (slice/concatenate executables), so this is safe on
+    TransferEngine worker threads concurrently with main-thread tracing
+    and compilation (core/transfer.py).  Byte accounting is unchanged:
+    the same sub-slices are counted local vs p2p."""
     want = index[dim]
     lo = want.start or 0
     hi = want.stop if want.stop is not None else arr.shape[dim]
@@ -133,18 +164,22 @@ def _assemble_rows(arr, index, dim, dev, stats: TransferStats):
         olo, ohi = max(lo, slo), min(hi, shi)
         if olo >= ohi:
             continue
-        sub = jax.lax.slice_in_dim(sh.data, olo - slo, ohi - slo, axis=dim) \
-            if (olo - slo, ohi - slo) != (0, shi - slo) else sh.data
+        data = np.asarray(sh.data)
+        if (olo - slo, ohi - slo) != (0, shi - slo):
+            sub = data[(slice(None),) * dim
+                       + (slice(olo - slo, ohi - slo),)]
+        else:
+            sub = data
         if sh.device == dev:
             stats.local_bytes += sub.nbytes
         else:
             stats.p2p_bytes += sub.nbytes
             stats.p2p_count += 1
-        pieces.append((olo, jax.device_put(sub, dev)))
+        pieces.append((olo, sub))
     pieces.sort(key=lambda t: t[0])
-    if len(pieces) == 1:
-        return pieces[0][1]
-    return jnp.concatenate([p for _, p in pieces], axis=dim)
+    out = pieces[0][1] if len(pieces) == 1 else \
+        np.concatenate([p for _, p in pieces], axis=dim)
+    return jax.device_put(out, dev)
 
 
 # ---------------------------------------------------------------------- HMM
@@ -178,7 +213,8 @@ class HMM:
                  kv_mode: str = "dense", kv_block_size: int = 16,
                  kv_blocks_per_replica: Optional[int] = None,
                  expert_mode: str = "dense",
-                 expert_pool_pages: Optional[int] = None):
+                 expert_pool_pages: Optional[int] = None,
+                 staging: str = "serial", transfer_workers: int = 4):
         self.mcfg = mcfg
         self.tp = tp
         self.batch_per_replica = batch_per_replica
@@ -187,6 +223,18 @@ class HMM:
         self.seed = seed
         assert kv_mode in ("dense", "paged")
         assert expert_mode in ("dense", "pooled")
+        # staging="serial": stage_increment() moves one tensor per call on
+        # the caller's thread (byte-exact legacy path, the default).
+        # staging="overlap": begin_scale submits the whole work list to a
+        # background TransferEngine and callers poll_staging()/join_staging()
+        # — same bytes, less wall-clock (DESIGN.md §3).
+        assert staging in ("serial", "overlap")
+        self.staging_mode = staging
+        self.transfer_workers = transfer_workers
+        self._transfer = None            # TransferEngine, created lazily
+        self._stage_session = None       # TransferSession (overlap only)
+        self._stage_lock = threading.Lock()
+        self._stage_t0 = 0.0
         if expert_mode == "pooled":
             assert mcfg.is_moe, \
                 f"{mcfg.name}: expert_mode='pooled' requires a MoE model"
@@ -423,26 +471,38 @@ class HMM:
         ``commit`` — the cache keeps being written by the live instance and,
         per the paper (§5.2), is handed over *shared*, never copied.
 
-        Monolithic wrapper over the incremental API (``begin_scale`` /
-        ``stage_increment``): runs every increment back-to-back.  Byte
-        accounting is identical either way — the increments are the same
-        reshard calls in the same order (asserted in tests).
+        Monolithic wrapper over the incremental/async API (``begin_scale``
+        then ``stage_increment`` loop or ``join_staging``, per the staging
+        mode).  Byte accounting is identical either way — the same reshard
+        calls execute, only the thread they run on differs (asserted in
+        tests).
 
         Returns transfer stats; staged params are attached by the IMM via
         ``attach_staged`` and made active by ``commit``."""
         self.begin_scale(new_cfg)
-        while self.stage_increment():
-            pass
+        if self.staging_mode == "overlap":
+            self.join_staging()
+        else:
+            while self.stage_increment():
+                pass
         return self.last_stats
 
     def begin_scale(self, new_cfg: ElasticConfig) -> int:
-        """Open an incremental staging session toward ``new_cfg``.
+        """Open a staging session toward ``new_cfg``.
 
         Builds the per-tensor work list (one unit per parameter leaf — the
-        per-layer chunk analogue under this repo's stacked-block layout) but
-        moves no bytes yet.  Returns the number of increments; drive them
-        with ``stage_increment`` — the engine may run decode ticks between
-        calls, which is what makes "throughput during scaling" measurable.
+        per-layer chunk analogue under this repo's stacked-block layout) and
+        returns the number of work units.
+
+        * ``staging="serial"``: no bytes move yet; drive the units with
+          ``stage_increment`` — the engine may run decode ticks between
+          calls (the legacy tick-interleaved path).
+        * ``staging="overlap"``: every unit is submitted to the background
+          ``TransferEngine`` immediately and starts moving bytes off-thread;
+          drive completion with the non-blocking ``poll_staging`` (or block
+          on ``join_staging``).  Staging only *reads* immutable live
+          weights, so serving ticks concurrent with in-flight ops are safe
+          by construction (core/transfer.py).
 
         Pooled expert mode stages the page remap here (``stage_remap(
         min_move=True)``) so the pool-bank work units know the exact
@@ -486,24 +546,102 @@ class HMM:
         # prep (mesh + shardings + tree walk) counts toward staged wall time,
         # matching the pre-incremental scale() accounting
         self._stage_stats = TransferStats(wall_s=time.perf_counter() - t0)
+        if self.staging_mode == "overlap":
+            from repro.core.transfer import TransferEngine, TransferOp
+            self._stage_t0 = t0
+            if self._transfer is None:
+                self._transfer = TransferEngine(self.transfer_workers)
+            ops = [TransferOp(index=i, label=path,
+                              fn=self._make_stage_op(leaf, sh, expert_dim,
+                                                     kind, new_cfg, mesh))
+                   for i, (path, leaf, sh, expert_dim, kind)
+                   in enumerate(work)]
+            self._stage_session = self._transfer.submit(ops)
         return len(work)
 
     @property
     def staging_remaining(self) -> int:
         if self._stage_work is None:
             return 0
+        if self._stage_session is not None:
+            return self._stage_session.remaining()
         return len(self._stage_work) - self._stage_cursor
 
+    @property
+    def staging_in_flight(self) -> bool:
+        """True while an overlapped session has transfer ops still pending
+        or running on the background engine."""
+        return (self._stage_session is not None
+                and not self._stage_session.finished())
+
+    def _stage_unit(self, leaf, sh, expert_dim, kind,
+                    new_cfg: ElasticConfig, mesh, stats: TransferStats):
+        """Execute ONE unit of staging work; returns the staged leaf and
+        accumulates byte/count accounting into ``stats``.  Shared verbatim
+        by the serial path (caller thread) and the overlapped path
+        (TransferEngine workers) so the two modes cannot drift."""
+        if kind.startswith("pool:"):
+            return self._migrate_pool_bank(leaf, new_cfg, mesh, stats)
+        if kind.startswith("index:"):
+            # O(table): the staged index arrays were rebuilt once in
+            # begin_scale — no weight bytes move here (host numpy ->
+            # device_put, no compiled primitives: worker-thread safe)
+            name = kind.split(":", 1)[1]
+            arr = np.asarray(self._stage_layout[name], np.int32)
+            spec = (P(None, ("dp", "tp"), None) if name == "tables"
+                    else P())
+            return jax.device_put(arr, NamedSharding(mesh, spec))
+        if kind == "expert_bank":
+            # dense mode: piecewise regroup; track the expert sub-bytes
+            # so dense-reshard vs pooled-remap is directly comparable
+            sub = TransferStats()
+            out = reshard_with_reuse(leaf, sh, sub, expert_dim=expert_dim)
+            sub.expert_p2p_bytes = sub.p2p_bytes
+            sub.expert_zero_copy_bytes = sub.zero_copy_bytes
+            sub.expert_local_bytes = sub.local_bytes
+            stats.merge(sub)
+            return out
+        return reshard_with_reuse(leaf, sh, stats, expert_dim=expert_dim)
+
+    def _make_stage_op(self, leaf, sh, expert_dim, kind,
+                       new_cfg: ElasticConfig, mesh):
+        """Closure for one background TransferOp: runs ``_stage_unit`` with
+        a private TransferStats, then merges it into the session stats under
+        the lock (thread-safe accumulation; addition commutes, so the final
+        totals are byte-identical to the serial order)."""
+        session_stats = self._stage_stats
+
+        def run():
+            sub = TransferStats()
+            t0 = time.perf_counter()
+            out = self._stage_unit(leaf, sh, expert_dim, kind, new_cfg,
+                                   mesh, sub)
+            sub.op_s = time.perf_counter() - t0
+            with self._stage_lock:
+                session_stats.merge(sub)
+            return out
+
+        return run
+
     def stage_increment(self, max_tensors: int = 1) -> bool:
-        """Reshard up to ``max_tensors`` parameter tensors toward the target
-        opened by ``begin_scale``.  Safe to interleave with serving: staging
-        only *reads* live params (weights are immutable during serving; the
-        KV cache is not touched until ``commit``).
+        """Serial mode: reshard up to ``max_tensors`` parameter tensors
+        toward the target opened by ``begin_scale``.  Safe to interleave
+        with serving: staging only *reads* live params (weights are
+        immutable during serving; the KV cache is not touched until
+        ``commit``).
 
         Returns True while more increments remain; on the last increment the
         staged tree is assembled, the expert-page remap is staged, and
-        ``attach_staged``/``commit`` become legal."""
+        ``attach_staged``/``commit`` become legal.
+
+        With ``staging="overlap"`` the work already runs on the background
+        TransferEngine — use ``poll_staging``/``join_staging`` instead."""
         assert self._stage_work is not None, "no staging session open"
+        if self._stage_session is not None:
+            raise RuntimeError(
+                "staging session is overlapped (background TransferEngine); "
+                "drive it with poll_staging()/join_staging(), not "
+                "stage_increment()")
         t0 = time.perf_counter()
         stats = self._stage_stats
         new_cfg, mesh = self._stage_target
@@ -511,41 +649,76 @@ class HMM:
                   len(self._stage_work))
         for path, leaf, sh, expert_dim, kind in self._stage_work[
                 self._stage_cursor:end]:
-            if kind.startswith("pool:"):
-                self._stage_out.append(self._migrate_pool_bank(
-                    leaf, new_cfg, mesh, stats))
-            elif kind.startswith("index:"):
-                # O(table): the staged index arrays were rebuilt once in
-                # begin_scale — no weight bytes move here
-                name = kind.split(":", 1)[1]
-                arr = jnp.asarray(self._stage_layout[name])
-                spec = (P(None, ("dp", "tp"), None) if name == "tables"
-                        else P())
-                self._stage_out.append(
-                    jax.device_put(arr, NamedSharding(mesh, spec)))
-            elif kind == "expert_bank":
-                # dense mode: piecewise regroup; track the expert sub-bytes
-                # so dense-reshard vs pooled-remap is directly comparable
-                sub = TransferStats()
-                self._stage_out.append(
-                    reshard_with_reuse(leaf, sh, sub, expert_dim=expert_dim))
-                sub.expert_p2p_bytes = sub.p2p_bytes
-                sub.expert_zero_copy_bytes = sub.zero_copy_bytes
-                sub.expert_local_bytes = sub.local_bytes
-                stats.merge(sub)
-            else:
-                self._stage_out.append(
-                    reshard_with_reuse(leaf, sh, stats,
-                                       expert_dim=expert_dim))
+            u0 = time.perf_counter()
+            self._stage_out.append(
+                self._stage_unit(leaf, sh, expert_dim, kind, new_cfg, mesh,
+                                 stats))
+            stats.op_s += time.perf_counter() - u0
         self._stage_cursor = end
         stats.wall_s += time.perf_counter() - t0
         if self._stage_cursor < len(self._stage_work):
             return True
-        # final increment: assemble the staged tree + stage the page remap
-        # (dense bookkeeping only — pooled staged it in begin_scale; dense
-        # arrays take the contiguous expert_owner layout, so the table
-        # records min_move=False placement to stay truthful)
+        self._finalize_staging()
+        return False
+
+    def poll_staging(self) -> bool:
+        """Overlap mode: bounded completion poll (<= ~2 ms).  Returns True
+        once every background transfer op has finished AND the staged tree
+        has been assembled (``attach_staged``/``commit`` legal); False
+        while ops are still in flight.  A failed op aborts the whole
+        session (staged pages unwound) and re-raises.
+
+        The poll donates a tiny bounded wait rather than returning
+        instantly: a serve loop spinning on an *idle* engine is a pure
+        Python busy-loop that would otherwise starve the worker threads of
+        the GIL (real decode ticks release it inside XLA, so a busy engine
+        needs no such courtesy)."""
+        if self._stage_work is None:
+            return self.staged is not None
+        if self._stage_session is None:
+            raise RuntimeError(
+                "staging session is serial; drive it with stage_increment()")
+        sess = self._stage_session
+        if not sess.finished():
+            sess.join(timeout=0.002)   # bounded yield to the workers
+            if not sess.finished():
+                return False
+        failed = sess.failed_ops()
+        if failed:
+            err = failed[0].error
+            self.abort()
+            raise RuntimeError(
+                f"staging transfer op {failed[0].label!r} failed "
+                f"({len(failed)} op(s) total); session aborted") from err
+        self._stage_out = [op.result for op in sess.ops]
+        # overlap wall-clock = begin_scale() -> last op completion: the
+        # staging *window* the background engine shrinks (op_s holds the
+        # serial-equivalent Σ of per-op times for the efficiency ratio)
+        self._stage_stats.wall_s = max(sess.last_done_t - self._stage_t0,
+                                       self._stage_stats.wall_s)
+        self._finalize_staging()
+        return True
+
+    def join_staging(self) -> bool:
+        """Overlap mode: block until the session completes, then finalize
+        (the COMMITTING/monolithic barrier).  Returns True if a staged tree
+        is ready, False if no session was open and nothing is staged."""
+        if self._stage_work is None:
+            return self.staged is not None
+        if self._stage_session is None:
+            raise RuntimeError(
+                "staging session is serial; drive it with stage_increment()")
+        self._stage_session.join()
+        return self.poll_staging()
+
+    def _finalize_staging(self):
+        """Assemble the staged tree + stage the page remap (dense
+        bookkeeping only — pooled staged it in begin_scale; dense arrays
+        take the contiguous expert_owner layout, so the table records
+        min_move=False placement to stay truthful)."""
         t0 = time.perf_counter()
+        stats = self._stage_stats
+        new_cfg, mesh = self._stage_target
         new_params = jax.tree_util.tree_unflatten(
             self._stage_treedef, self._stage_out)
         if self.page_table is not None and self.page_table.staged is None:
@@ -554,7 +727,6 @@ class HMM:
         stats.wall_s += time.perf_counter() - t0
         self.last_stats = stats
         self._reset_stage_session()
-        return False
 
     def _migrate_pool_bank(self, leaf, new_cfg: ElasticConfig, mesh,
                            stats: TransferStats):
@@ -562,7 +734,12 @@ class HMM:
         pool slices are reused (migrated-in pages written at their staged
         slots), new devices start from zeros, and exactly the staged
         Migration list crosses devices — one ``jax.device_put`` per page,
-        the paper's p2p-copy primitive at vpage granularity."""
+        the paper's p2p-copy primitive at vpage granularity.
+
+        Pure memory ops only (host numpy assembly + device_put, no compiled
+        scatter/stack): worker-thread safe on the TransferEngine.  A device
+        slice that receives no migrated pages keeps its live buffer — the
+        zero-copy alias is preserved."""
         ppd = self.expert_pool_pages
         row_shape = leaf.shape[1:]
         row_bytes = int(np.prod(row_shape)) * leaf.dtype.itemsize
@@ -583,25 +760,32 @@ class HMM:
         sharding = NamedSharding(mesh, P(("dp", "tp"), *([None] *
                                                          len(row_shape))))
         target = sharding.devices_indices_map(shape)
+        src_rows: Dict[int, np.ndarray] = {}   # host view of source slices
+
+        def rows_of(logical_dev: int) -> np.ndarray:
+            if logical_dev not in src_rows:
+                src_rows[logical_dev] = np.asarray(
+                    old_shard[self.all_devices[logical_dev]])
+            return src_rows[logical_dev]
+
         out = []
         for dev in sharding.addressable_devices:
             rank = (target[dev][0].start or 0) // ppd
             logical = new_cfg.devices[rank]    # dev == all_devices[logical]
             local = old_shard.get(dev)
-            if local is None:
-                local = jax.device_put(jnp.zeros((ppd,) + row_shape,
-                                                 leaf.dtype), dev)
-            if migs_by_dst.get(logical):
-                idxs, rows = [], []
-                for m in migs_by_dst[logical]:
-                    src = old_shard[self.all_devices[m.src.device]]
-                    rows.append(jax.device_put(src[m.src.page], dev))
-                    idxs.append(m.dst.page)
+            migs = migs_by_dst.get(logical)
+            if migs:
+                base = (np.array(local) if local is not None
+                        else np.zeros((ppd,) + row_shape, leaf.dtype))
+                for m in migs:
+                    base[m.dst.page] = rows_of(m.src.device)[m.src.page]
                     stats.p2p_bytes += row_bytes
                     stats.p2p_count += 1
                     stats.expert_p2p_bytes += row_bytes
-                local = local.at[jnp.asarray(idxs, jnp.int32)].set(
-                    jnp.stack(rows))
+                local = jax.device_put(base, dev)
+            elif local is None:
+                local = jax.device_put(
+                    np.zeros((ppd,) + row_shape, leaf.dtype), dev)
             out.append(local)
         return jax.make_array_from_single_device_arrays(shape, sharding, out)
 
@@ -612,6 +796,7 @@ class HMM:
         self._stage_treedef = None
         self._stage_target = None
         self._stage_layout = None
+        self._stage_session = None
 
     def _grow_cache(self, new_cfg: ElasticConfig, mesh: Mesh,
                     stats: TransferStats):
@@ -670,7 +855,12 @@ class HMM:
         """Switchover: staged weights become active, and the *live* KV cache
         (surviving slots' buffers reused as-is, new slots zero-init) is grown
         to the new slot count.  Old-only buffers become unreferenced — the
-        paper's deferred FREE."""
+        paper's deferred FREE.
+
+        Overlap mode: committing is a barrier — any transfer ops still in
+        flight are joined (and the tree finalized) before the switchover."""
+        if self._stage_session is not None:
+            self.join_staging()
         assert self.staged is not None
         new_cfg, mesh, params = self.staged
         stats = TransferStats()
@@ -696,6 +886,15 @@ class HMM:
         return stats
 
     def abort(self):
+        """Abandon any staged state — including a staging session with
+        transfer ops still in flight on the background engine.
+
+        Cancel-or-join: pending ops never start, running ops are joined
+        *before* the page table unwinds, so no worker can observe the
+        post-abort table.  Idempotent; leaves zero staged-page leaks
+        (``ExpertPageTable.abort`` frees staged-only pages exactly once)."""
+        if self._stage_session is not None:
+            self._stage_session.cancel()
         self.staged = None
         self.last_migrations = None
         self._reset_stage_session()

@@ -9,6 +9,13 @@ weights attached** (built purely from ShapeDtypeStructs).
 
 ``activate`` binds a standby instance to the HMM's zero-copy array handles —
 a metadata-only operation (the ZeroCopyLoader replacing vLLM's DiskLoader).
+
+With overlapped staging (``staging="overlap"``, DESIGN.md §3) the IMM's
+AOT compile runs on the serving thread *while* the HMM's background
+``TransferEngine`` moves bytes — STAGING ∥ COMPILING, so a cold compile
+hides under the transfer window instead of following it.  Compilation is
+pure tracing over ShapeDtypeStructs (no weight reads), so it races with
+nothing the transfer ops touch.
 """
 from __future__ import annotations
 

@@ -3,15 +3,19 @@
 This module closes the loop the paper's Coordinator (§4.3) describes: one
 ``ClusterDriver`` owns a device pool, watches the SLO-aware ``LoadEstimator``,
 selects the next ``ElasticConfig`` with the cost model, and executes the
-transition as a resumable ``ScalingTask`` — advancing exactly **one**
-increment per serving tick so the engine keeps producing tokens throughout
-the reconfiguration (the paper's concurrent, zero-downtime scaling).
+transition as a resumable ``ScalingTask`` — polled once per serving tick so
+the engine keeps producing tokens throughout the reconfiguration (the
+paper's concurrent, zero-downtime scaling).  With ``staging="overlap"`` the
+transfers themselves ride a background ``TransferEngine`` and the poll is
+non-blocking; the serial legacy mode performs one synchronous increment per
+poll (DESIGN.md §3).
 
 The same driver loop runs unchanged over two backends implementing the
 ``ServingBackend`` protocol:
 
 * ``repro.core.elastic_engine.ElasticServer`` — real JAX on host devices;
-  staging increments are real per-tensor HMM reshards (zero-copy + P2P),
+  staging is real per-tensor HMM reshards (zero-copy + P2P), off-thread
+  when overlapped,
 * ``repro.serving.simulator.ServingSimulator`` — the calibrated
   discrete-event model at paper scale; staging duration comes from
   ``plan_cost`` and commit happens when modelled time reaches ``t_ready``.
@@ -57,9 +61,17 @@ class ScalePhase(enum.Enum):
 
 
 class ScalingTask(Protocol):
-    """A resumable scaling transition.  ``advance`` performs (at most) one
-    increment of work and returns the current phase; the driver interleaves
-    serving ticks between calls."""
+    """A resumable scaling transition.  ``advance`` is a **non-blocking
+    completion poll**: it observes progress, moves the phase machine
+    forward when a phase has completed, and returns the current phase; the
+    driver calls it once per serving tick.
+
+    How much work runs *inside* an ``advance`` call is a backend property:
+    with overlapped staging (``staging="overlap"``) the transfers ride a
+    background ``TransferEngine`` and ``advance`` only polls, while the
+    serial legacy path (``staging="serial"``) performs at most one
+    synchronous staging increment per call — either way the serve loop
+    ticks between calls and never blocks on a bulk transfer."""
     target: ElasticConfig
     phase: ScalePhase
 
@@ -91,7 +103,8 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                     new: ElasticConfig, *, strategy: str = "elastic",
                     hw: Optional[HardwareModel] = None, preinit: bool = True,
                     kv_seq_len: int = 4096, kv_batch: int = 8,
-                    expert_mode: str = "dense", page_table=None):
+                    expert_mode: str = "dense", page_table=None,
+                    staging: str = "serial"):
     """Plan + cost of one transition — THE shared costing path: the
     simulator executes its scale events with this and the ClusterDriver
     selects targets with it, so projection and execution cannot drift.
@@ -105,7 +118,11 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
     from the server's ACTUAL — possibly non-contiguous, post-remap —
     placement; it is deep-copied, never mutated.  Without one, a fresh
     contiguous placement at ``old`` is assumed (a server booted there;
-    also the simulator's model of itself)."""
+    also the simulator's model of itself).
+
+    ``staging`` projects the serial vs overlapped transfer pipeline
+    (``costmodel.plan_cost``): overlap hides warmup under the transfer
+    window and converts decode stall into an HBM-contention share."""
     kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len)
     tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
     if (expert_mode == "pooled" and mcfg.is_moe and old is not None
@@ -122,7 +139,8 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
     resident = {d: sum(s.values())
                 for d, s in placement(tensors, old).items()}
     return plan_cost(plan, hw=hw or DEFAULT_HW, preinit=preinit,
-                     strategy=strategy, resident_bytes_per_device=resident)
+                     strategy=strategy, resident_bytes_per_device=resident,
+                     staging=staging)
 
 
 @runtime_checkable
@@ -176,10 +194,11 @@ class DriverConfig:
     settle_s: float = 0.0          # extra hysteresis after a completed scale
     scale_budget_s: float = math.inf   # veto candidates costlier than this
     prewarm_next: bool = True      # keep a standby instance one rung up
-    # strategy/hw: None (default) = adopt the backend's own settings so
-    # projections match what it will execute; set explicitly to override.
+    # strategy/hw/staging: None (default) = adopt the backend's own settings
+    # so projections match what it will execute; set explicitly to override.
     strategy: Optional[str] = None
     hw: Optional[HardwareModel] = None
+    staging: Optional[str] = None  # "serial" | "overlap" projection override
 
 
 @dataclasses.dataclass
@@ -191,11 +210,18 @@ class DriverEvent:
     projected_scale_s: float       # cost-model projection used for selection
     kv_util: Optional[float] = None    # block-pool occupancy at decision
     preemptions: int = 0               # cumulative, at decision time
+    staging: Optional[str] = None      # staging mode used for the projection
+    # filled in when the ScalingTask completes (None until then / if the
+    # backend does not report them): serve-loop time lost to staging work,
+    # and Σ transfer-op time / staging wall-clock (>1 = real overlap)
+    stall_s: Optional[float] = None
+    overlap_eff: Optional[float] = None
 
 
 class ClusterDriver:
     """SLO-aware closed loop: estimator decision -> cost-model target
-    selection -> incremental ScalingTask execution, one increment per tick.
+    selection -> ScalingTask execution, one non-blocking poll per tick
+    (serial-staging backends do one increment inside the poll).
 
     The driver owns the device pool and the LoadEstimator; the backend owns
     serving.  ``run()`` is the paper's §5 lifecycle as a loop you can call
@@ -230,6 +256,9 @@ class ClusterDriver:
                           or getattr(backend, "strategy", "elastic"))
         # pooled expert store => min-move expert migration in projections
         self._expert_mode = getattr(backend, "expert_mode", "dense")
+        # overlapped staging => overlap transfer pipeline in projections
+        self._staging = (self.config.staging
+                         or getattr(backend, "staging_mode", "serial"))
 
     # ------------------------------------------------------ target selection
     @property
@@ -273,7 +302,8 @@ class ClusterDriver:
                                    preinit=self._preinit,
                                    kv_seq_len=self._kv_len,
                                    expert_mode=self._expert_mode,
-                                   page_table=page_table).scale_time_s
+                                   page_table=page_table,
+                                   staging=self._staging).scale_time_s
         except MemoryError:
             # the live page pool cannot host this target's staged pages —
             # executing the transition would fail the same way, so veto the
@@ -346,8 +376,9 @@ class ClusterDriver:
                     and self._pending[self._pi].arrival_s <= t:
                 self.backend.submit(self._pending[self._pi])
                 self._pi += 1
-            # serve one tick, then (at most) one scaling increment — this
-            # interleaving is what makes ticks land *between* increments
+            # serve one tick, then one non-blocking task poll (serial
+            # backends do at most one staging increment inside it) — the
+            # serve loop never waits on a bulk transfer
             finished = self.backend.step(t)
             for r in finished:
                 self.estimator.record(r)
@@ -355,6 +386,14 @@ class ClusterDriver:
             if self.task is not None:
                 phase = self.task.advance(t)
                 if phase.terminal:
+                    if self.events:
+                        # completion metrics into the event log: stall +
+                        # overlap efficiency (metrics.summarize surfaces
+                        # the backend-level aggregate)
+                        ev = self.events[-1]
+                        ev.stall_s = getattr(self.task, "stall_s", None)
+                        ev.overlap_eff = getattr(
+                            self.task, "overlap_efficiency", None)
                     self.task = None
                     self._last_done_t = t
             elif t - self._last_done_t >= cfgd.settle_s:
@@ -373,7 +412,8 @@ class ClusterDriver:
                             dst=target.describe(), projected_scale_s=proj,
                             kv_util=(kv or {}).get("utilization"),
                             preemptions=int((kv or {}).get(
-                                "preemptions", 0))))
+                                "preemptions", 0)),
+                            staging=self._staging))
                         self.task = self.backend.start_scale(target)
                         if cfgd.prewarm_next and decision == "up" \
                                 and not self._disjoint:

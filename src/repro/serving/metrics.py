@@ -1,6 +1,8 @@
 """Serving metrics (paper §7.3): TTFT, TPOT, SLO attainment, SLO/XPU —
 plus the paged-KV pressure surface (preemption count, block-pool
-utilization) reported by both serving backends (serving/kv_blocks.py)."""
+utilization) and the staging-overlap surface (decode-stall seconds during
+scaling, overlap efficiency = Σ transfer-op time / staging wall-clock)
+reported by both serving backends (serving/kv_blocks.py, DESIGN.md §3)."""
 from __future__ import annotations
 
 import dataclasses
@@ -96,4 +98,25 @@ def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
         if kv is not None:
             out["preemptions"] = kv.preemptions
             out["kv_block_utilization"] = kv.utilization
+        sc = scaling_overlap_stats(backend)
+        if sc is not None:
+            out.update(sc)
+    return out
+
+
+def scaling_overlap_stats(backend) -> Optional[dict]:
+    """Normalize a backend's ``scaling_summary()`` (ElasticServer or
+    ServingSimulator): staging mode, total decode-stall seconds during
+    scaling, and overlap efficiency (Σ transfer-op time / staging
+    wall-clock — >1 means transfers genuinely overlapped serving).  None
+    when the backend has executed no scale events (or predates the async
+    transfer pipeline, DESIGN.md §3)."""
+    getter = getattr(backend, "scaling_summary", None)
+    raw = getter() if getter is not None else None
+    if not raw:
+        return None
+    out = {"staging_mode": raw.get("staging_mode", "serial"),
+           "decode_stall_s": float(raw.get("decode_stall_s", 0.0))}
+    if raw.get("overlap_efficiency") is not None:
+        out["overlap_efficiency"] = float(raw["overlap_efficiency"])
     return out

@@ -114,10 +114,17 @@ class SimScaleEvent:
 
 
 class SimScalingTask:
-    """driver.ScalingTask over modelled time: STAGING until the cost model's
-    ``t_ready``, then an instantaneous commit.  The same object is advanced
-    by a ClusterDriver (closed loop) or by the simulator itself (scripted
-    ``command_scale`` benchmarks) — whichever observes ``t_ready`` first."""
+    """driver.ScalingTask over modelled time — already the poll semantics
+    the protocol specifies: ``advance`` never performs work, it observes
+    modelled time, stays in STAGING until the cost model's ``t_ready`` and
+    then commits instantaneously.  The same object is advanced by a
+    ClusterDriver (closed loop) or by the simulator itself (scripted
+    ``command_scale`` benchmarks) — whichever observes ``t_ready`` first.
+
+    ``stall_s`` / ``overlap_efficiency`` mirror the real engine task's
+    completion metrics: the modelled decode stall (whole transfer time for
+    serial staging, the HBM-contention share when overlapped) and the
+    Σ-op-time / staging-window ratio from the cost breakdown."""
 
     def __init__(self, sim: "ServingSimulator", target: ElasticConfig,
                  event: SimScaleEvent):
@@ -125,10 +132,20 @@ class SimScalingTask:
         self.target = target
         self.event = event
         self.phase = ScalePhase.STAGING
+        # plan_cost zeroes decode_stall_s on downtime transitions (the
+        # outage subsumes the stall), so no re-guarding here
+        self.stall_s = event.cost.decode_stall_s
 
     @property
     def done(self) -> bool:
         return self.phase.terminal
+
+    @property
+    def overlap_efficiency(self) -> Optional[float]:
+        op = self.event.cost.breakdown.get("op_s", 0.0)
+        if not op:
+            return None
+        return op / max(self.event.cost.scale_time_s, 1e-9)
 
     def advance(self, now: float) -> ScalePhase:
         if self.phase is ScalePhase.STAGING and now >= self.event.t_ready:
@@ -149,13 +166,19 @@ class ServingSimulator:
                  hw: Optional[HardwareModel] = None, kv_seq_len: int = 4096,
                  preinit: bool = True, kv_mode: str = "dense",
                  pool_blocks: Optional[int] = None,
-                 expert_mode: str = "dense"):
+                 expert_mode: str = "dense", staging: str = "serial"):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
         self.strategy = strategy
         self.perf = perf or PerfModel(mcfg, kv_seq_len=kv_seq_len)
         self.hw = hw or DEFAULT_HW
+        # 'overlap' models the background TransferEngine (mirrors
+        # ElasticServer(staging="overlap")): scale events are costed with
+        # the overlap pipeline — warmup hidden under the transfer window,
+        # decode stall reduced to the HBM-contention share (DESIGN.md §3)
+        assert staging in ("serial", "overlap")
+        self.staging_mode = staging
         # 'pooled' models the min-move vpage remap: elastic scale events are
         # costed with plan_elastic_paged via the shared transition_cost path
         # (mirrors ElasticServer(expert_mode="pooled"); DESIGN.md §2)
@@ -207,7 +230,8 @@ class ServingSimulator:
                                strategy=self.strategy, hw=self.hw,
                                preinit=self.preinit,
                                kv_seq_len=self.perf.kv_seq_len,
-                               expert_mode=self.expert_mode)
+                               expert_mode=self.expert_mode,
+                               staging=self.staging_mode)
         event = SimScaleEvent(
             t_command=self.t, t_ready=self.t + cost.scale_time_s,
             downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,
@@ -217,6 +241,14 @@ class ServingSimulator:
             # in-flight requests are stalled for the whole outage (§3 L2)
             self.running = [(f + cost.scale_time_s, rid, r,
                              s + cost.scale_time_s)
+                            for f, rid, r, s in self.running]
+            heapq.heapify(self.running)
+        elif cost.decode_stall_s:
+            # decode stalls while staging contends for HBM/links: serial
+            # staging blocks a serve-loop quantum per increment (the whole
+            # transfer time); overlapped staging only the contention share.
+            # Modelled as a finish-time shift of the in-flight requests.
+            self.running = [(f + cost.decode_stall_s, rid, r, s)
                             for f, rid, r, s in self.running]
             heapq.heapify(self.running)
         self.scale = SimScalingTask(self, target, event)
@@ -275,6 +307,19 @@ class ServingSimulator:
             heapq.heapify(self.running)
             self.queue.insert(0, victim[2])
             self.preemptions += 1
+
+    def scaling_summary(self) -> Optional[Dict[str, float]]:
+        """Modelled staging-overlap metrics over completed scale events
+        (mirrors ``ElasticServer.scaling_summary``; metrics.summarize)."""
+        if not self.events:
+            return None
+        effs = [e.cost.breakdown["op_s"] / max(e.cost.scale_time_s, 1e-9)
+                for e in self.events if e.cost.breakdown.get("op_s")]
+        return {"staging_mode": self.staging_mode,
+                "decode_stall_s": sum(e.cost.decode_stall_s
+                                      for e in self.events),
+                "overlap_efficiency":
+                    sum(effs) / len(effs) if effs else None}
 
     def kv_stats(self) -> Optional[Dict[str, float]]:
         """Block-pool stats (None in dense mode); serving/metrics.py."""

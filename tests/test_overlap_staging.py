@@ -1,0 +1,552 @@
+"""Overlapped staging — the background TransferEngine pipeline (DESIGN.md
+§3).  What must hold:
+
+* serial vs overlap `TransferStats` are byte-equal field by field (dense,
+  pooled, and paged-KV combos) — same reshard calls, different thread;
+* with `staging="overlap"` the engine serves real decode ticks while
+  transfer ops are literally in flight, and tokens stay bit-identical to
+  an unscaled run;
+* abort cancels-or-joins in-flight ops and leaves zero staged-page leaks
+  in the ExpertPageTable (idempotent, mid-flight included);
+* a commit/abort race stress over repeated scale events keeps the pool and
+  the serving loop consistent;
+* the cost model, simulator, driver, and metrics all speak the overlap
+  surface (scale time, decode stall, overlap efficiency).
+"""
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+
+# ------------------------------------------------------- transfer engine
+
+def test_transfer_engine_runs_polls_and_orders_results():
+    from repro.core.transfer import TransferEngine, TransferOp
+
+    eng = TransferEngine(max_workers=2)
+    ops = [TransferOp(index=i, label=f"op{i}", fn=lambda i=i: i * i)
+           for i in range(8)]
+    sess = eng.submit(ops)
+    assert sess.join(timeout=30.0)
+    assert sess.finished() and sess.remaining() == 0
+    assert [op.result for op in sess.ops] == [i * i for i in range(8)]
+    assert all(op.state == "done" for op in ops)
+    assert sess.op_seconds >= 0.0 and not sess.failed_ops()
+    eng.shutdown()
+
+
+def test_transfer_engine_cancel_joins_running_and_skips_pending():
+    import threading
+
+    from repro.core.transfer import TransferEngine, TransferOp
+
+    started = threading.Event()
+    release = threading.Event()
+
+    def blocker():
+        started.set()
+        release.wait(timeout=30.0)
+        return "ran"
+
+    eng = TransferEngine(max_workers=1)   # one worker => rest stay pending
+    ops = [TransferOp(index=0, label="blocker", fn=blocker)] + [
+        TransferOp(index=i, label=f"p{i}", fn=lambda: "ran")
+        for i in range(1, 5)]
+    sess = eng.submit(ops)
+    assert started.wait(timeout=30.0)
+    release.set()                          # cancel() must JOIN the runner
+    sess.cancel()
+    assert sess.finished()
+    assert ops[0].state == "done"          # running op joined, not killed
+    assert all(op.state == "cancelled" for op in ops[1:])
+    eng.shutdown()
+
+
+def test_transfer_engine_reports_failures():
+    from repro.core.transfer import TransferEngine, TransferOp
+
+    def boom():
+        raise ValueError("transfer exploded")
+
+    eng = TransferEngine(max_workers=2)
+    sess = eng.submit([TransferOp(index=0, label="ok", fn=lambda: 1),
+                       TransferOp(index=1, label="bad", fn=boom)])
+    sess.join(timeout=30.0)
+    failed = sess.failed_ops()
+    assert len(failed) == 1 and failed[0].label == "bad"
+    assert isinstance(failed[0].error, ValueError)
+    eng.shutdown()
+
+
+# ------------------------------------------------- cost model / simulator
+
+def test_costmodel_overlap_hides_warmup_and_cuts_stall():
+    from repro.configs import get_config
+    from repro.core.costmodel import DEFAULT_HW, plan_cost
+    from repro.core.scaling_plan import STRATEGIES, placement
+    from repro.core.topology import ElasticConfig, kv_cache_bytes, \
+        model_tensors
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+    kvb = kv_cache_bytes(mcfg, 8, 4096)
+    tensors = model_tensors(mcfg, 2, kv_bytes_per_replica=kvb)
+    old = ElasticConfig(2, 2, (0, 1, 2, 3))
+    new = ElasticConfig(3, 2, (0, 1, 2, 3, 4, 5))
+    plan = STRATEGIES["elastic"](tensors, old, new)
+    resident = {d: sum(s.values())
+                for d, s in placement(tensors, old).items()}
+    cs = plan_cost(plan, strategy="elastic", staging="serial",
+                   resident_bytes_per_device=resident)
+    co = plan_cost(plan, strategy="elastic", staging="overlap",
+                   resident_bytes_per_device=resident)
+    assert cs.staging == "serial" and co.staging == "overlap"
+    # serial sums transfer + warmup; overlap hides warmup under the
+    # (contention-slowed) transfer window
+    assert co.scale_time_s < cs.scale_time_s
+    # serial stalls decode for the whole transfer; overlap only the
+    # HBM-contention share
+    assert cs.decode_stall_s > 0
+    assert 0 < co.decode_stall_s < cs.decode_stall_s
+    # op_s carries the serial-equivalent transfer time, contention-scaled
+    assert co.breakdown["op_s"] == pytest.approx(
+        cs.breakdown["op_s"] * DEFAULT_HW.overlap_contention)
+    # peak memory / byte accounting are staging-mode independent
+    assert co.peak_mem_bytes_per_device == cs.peak_mem_bytes_per_device
+    # downtime strategies: the outage subsumes the stall
+    cd = plan_cost(plan, strategy="cold_restart", staging="serial",
+                   resident_bytes_per_device=resident)
+    assert cd.downtime_s > 0 and cd.decode_stall_s == 0.0
+
+
+def test_sim_overlap_backend_stalls_less_and_reports_summary():
+    from repro.configs import get_config
+    from repro.core.topology import ElasticConfig
+    from repro.serving.metrics import summarize
+    from repro.serving.simulator import ServingSimulator
+    from repro.serving.workload import Request
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+
+    def scale_once(staging):
+        sim = ServingSimulator(mcfg, tp=2, ndev=4, strategy="elastic",
+                               staging=staging)
+        for i in range(24):
+            sim.submit(Request(i, 0.0, 2000, 600))
+        sim.run([], until=5.0)
+        task = sim.start_scale(ElasticConfig(3, 2, (0, 1, 2, 3, 4, 5)))
+        sim.run([], until=task.event.t_ready + 5.0)
+        assert task.done
+        return sim, task
+
+    sim_s, task_s = scale_once("serial")
+    sim_o, task_o = scale_once("overlap")
+    # overlap commits sooner and stalls decode less
+    assert task_o.event.t_ready < task_s.event.t_ready
+    assert 0 < task_o.stall_s < task_s.stall_s
+    assert task_o.overlap_efficiency is not None
+    for sim, staging in ((sim_s, "serial"), (sim_o, "overlap")):
+        summ = sim.scaling_summary()
+        assert summ["staging_mode"] == staging
+        assert summ["decode_stall_s"] >= 0
+        out = summarize(sim.finished, backend=sim)
+        assert out["staging_mode"] == staging
+        assert "decode_stall_s" in out
+
+
+def test_driver_adopts_backend_staging_mode_and_logs_completion():
+    from repro.configs import get_config
+    from repro.core.coordinator import ScalingPolicy
+    from repro.serving.driver import ClusterDriver, DriverConfig
+    from repro.serving.metrics import SLO
+    from repro.serving.simulator import ServingSimulator
+    from repro.serving.workload import burst, make_workload
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+    sim = ServingSimulator(mcfg, tp=2, ndev=4, strategy="elastic",
+                           staging="overlap")
+    policy = ScalingPolicy(slo=SLO(ttft_s=5.0, tpot_s=1.5), window=16,
+                           cooldown_s=15.0, queue_scale_up=6, confirm_s=1.0)
+    driver = ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                           device_pool=range(8),
+                           config=DriverConfig(dt=0.05, settle_s=15.0,
+                                               min_dp=2))
+    # adoption: projections use the backend's own staging mode...
+    assert driver._staging == "overlap"
+    cur = sim.current_config()
+    from repro.core.topology import ElasticConfig
+    tgt = ElasticConfig(3, 2, (0, 1, 2, 3, 4, 5))
+    proj_overlap = driver.projected_cost_s(cur, tgt)
+    driver_serial = ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                                  device_pool=range(8),
+                                  config=DriverConfig(staging="serial"))
+    # ...and the DriverConfig override wins over adoption
+    assert driver_serial._staging == "serial"
+    assert proj_overlap < driver_serial.projected_cost_s(cur, tgt)
+    # closed loop: completed events carry staging + completion metrics
+    reqs = make_workload(duration_s=200.0, rps_fn=burst(2.0, 14.0, 60.0,
+                                                        60.0),
+                         prompt_len=2000, output_range=(500, 750), seed=0)
+    driver.run(reqs, until=300.0)
+    ups = [e for e in driver.events if e.direction == "up"]
+    assert ups and all(e.staging == "overlap" for e in driver.events)
+    done = [e for e in driver.events if e.stall_s is not None]
+    assert done, "no event got completion metrics filled in"
+    assert all(e.overlap_eff is not None for e in done)
+
+
+# ----------------------------------------------------------- real engine
+
+@pytest.mark.slow
+def test_overlap_engine_ticks_during_flight_tokens_and_stats_exact():
+    """Real decode ticks run while transfer ops are IN FLIGHT on the
+    background engine (>= 3 of them, single worker to stretch the window);
+    tokens match an unscaled run bit-for-bit; and the overlapped
+    TransferStats equal the serial monolithic ones field by field."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.core.hmm import HMM, TransferStats
+from repro.serving.driver import ScalePhase
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+# monolithic serial reference byte accounting (no serving, boot only)
+href = HMM(MCFG, tp=2, batch_per_replica=2, max_len=128, seed=0)
+href.boot(c4)
+ref_stats = href.scale(c6)
+
+def run(scale):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0, staging="overlap",
+                        transfer_workers=1)
+    srv.boot(c4 if scale else c6)
+    if scale:
+        srv.preinitialize(c6)   # the driver's prewarm; compile overlap is
+                                # exercised by the closed-loop test below
+        # throttle each transfer op so the in-flight window deterministically
+        # spans several ticks (warm jit caches can otherwise finish the tiny
+        # test model's staging before the first poll)
+        import time as _time
+        orig = srv.hmm._stage_unit
+        def slow_unit(*a, **k):
+            _time.sleep(0.1)
+            return orig(*a, **k)
+        srv.hmm._stage_unit = slow_unit
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 40, prompt=rng.integers(0,128,16))
+            for i in range(4)]
+    for r in reqs: srv.submit(r)
+    t, n, task, mid = 0.0, 0, None, 0
+    while any(r.finish_s is None for r in reqs) or \
+            (task is not None and not task.done):
+        if scale and n == 5 and task is None:
+            task = srv.start_scale(c6)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            if task.phase is ScalePhase.STAGING and srv.hmm.staging_in_flight:
+                mid += 1          # this tick ran with ops in flight
+            task.advance(t)
+        assert n < 20000
+    toks = {r.rid: srv.engine.generated[r.rid] for r in reqs}
+    return toks, task, mid
+
+ref_toks, _, _ = run(False)
+got_toks, task, mid = run(True)
+assert task is not None and task.phase is ScalePhase.DONE
+assert mid >= 3, mid
+for f in TransferStats.BYTE_FIELDS:
+    a, b = getattr(ref_stats, f), getattr(task.stage_stats, f)
+    assert a == b, (f, a, b)
+assert task.stall_s < task.stage_stats.wall_s, \
+    (task.stall_s, task.stage_stats.wall_s)   # the serve loop never blocked
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], (rid, ref_toks[rid], got_toks[rid])
+print(f"OVERLAP-INTERLEAVE-OK ticks={mid} stall={task.stall_s:.4f}")
+""")
+    assert "OVERLAP-INTERLEAVE-OK" in out
+
+
+@pytest.mark.slow
+def test_serial_vs_overlap_stats_byte_equality_all_combos():
+    """Field-by-field TransferStats equality between staging modes for the
+    (dense|pooled experts) x (dense|paged KV) matrix, staging AND commit,
+    plus bit-identical staged parameter trees."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np, jax
+from repro.core.topology import ElasticConfig
+from repro.core.hmm import HMM, TransferStats
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def scale_with(staging, expert_mode, kv_mode):
+    h = HMM(MCFG, tp=2, batch_per_replica=2, max_len=128, seed=0,
+            expert_mode=expert_mode, kv_mode=kv_mode, kv_block_size=16,
+            staging=staging)
+    h.boot(c4)
+    stage = h.scale(c6)
+    import dataclasses
+    staged_leaves = [np.asarray(x) for x in jax.tree.leaves(h.staged[2])]
+    stage = dataclasses.replace(stage)      # freeze pre-commit snapshot
+    h.commit()
+    return stage, h.last_stats, staged_leaves
+
+for expert_mode in ("dense", "pooled"):
+    for kv_mode in ("dense", "paged"):
+        s_stage, s_total, s_leaves = scale_with("serial", expert_mode, kv_mode)
+        o_stage, o_total, o_leaves = scale_with("overlap", expert_mode, kv_mode)
+        for f in TransferStats.BYTE_FIELDS:
+            assert getattr(s_stage, f) == getattr(o_stage, f), \
+                (expert_mode, kv_mode, "stage", f)
+            assert getattr(s_total, f) == getattr(o_total, f), \
+                (expert_mode, kv_mode, "total", f)
+        for a, b in zip(s_leaves, o_leaves):
+            assert a.dtype == b.dtype and np.array_equal(a, b), \
+                (expert_mode, kv_mode)
+        print("COMBO-OK", expert_mode, kv_mode)
+print("STATS-EQUALITY-OK")
+""")
+    assert "STATS-EQUALITY-OK" in out
+    assert out.count("COMBO-OK") == 4
+
+
+@pytest.mark.slow
+def test_overlap_abort_in_flight_leaves_no_staged_pages():
+    """abort() with transfer ops mid-flight cancels-or-joins them and fully
+    unwinds the page pool (idempotent, repeatable, and a subsequent scale
+    completes with exact byte accounting)."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    staging="overlap", transfer_workers=1)
+srv.boot(c4)
+srv.preinitialize(c6)
+rng = np.random.default_rng(0)
+reqs = [Request(i, 0.0, 16, 60, prompt=rng.integers(0, 128, 16))
+        for i in range(4)]
+for r in reqs: srv.submit(r)
+
+# throttle ops so every abort provably lands while ops are mid-flight
+import time as _time
+orig_unit = srv.hmm._stage_unit
+def slow_unit(*a, **k):
+    _time.sleep(0.05)
+    return orig_unit(*a, **k)
+srv.hmm._stage_unit = slow_unit
+
+def pool_consistent():
+    for d in srv.hmm.active_cfg.devices:
+        owned = sum(1 for ref in srv.hmm.page_table.active.values()
+                    if ref.device == d)
+        assert srv.hmm.page_table.pages_in_use(d) == owned, d
+    assert srv.hmm.page_table.staged is None
+    assert srv.hmm.staged is None and not srv.hmm.staging_in_flight
+
+# abort immediately: ops are pending/mid-flight on the background engine
+for trial in range(3):
+    task = srv.start_scale(c6)
+    assert srv.hmm.staging_in_flight
+    srv.tick(0.1 * trial)
+    task.abort()
+    pool_consistent()
+    srv.hmm.abort()          # idempotent: second abort is a no-op
+    pool_consistent()
+    print("ABORT-TRIAL-OK", trial)
+
+# the pool must be fully reusable: a real scale completes afterwards
+t, n, task = 1.0, 0, srv.start_scale(c6)
+while any(r.finish_s is None for r in reqs) or not task.done:
+    srv.tick(t)
+    if not task.done: task.advance(t)
+    t += .1; n += 1
+    assert n < 20000
+assert srv.hmm.active_cfg.ndev == 6
+assert srv.hmm.last_stats.expert_p2p_bytes == \
+    len(srv.hmm.last_migrations) * srv.hmm.expert_page_nbytes()
+print("ABORT-IN-FLIGHT-OK")
+""")
+    assert "ABORT-IN-FLIGHT-OK" in out
+    assert out.count("ABORT-TRIAL-OK") == 3
+
+
+@pytest.mark.slow
+def test_overlap_failed_op_unwinds_task_and_server_state():
+    """A transfer op that raises mid-flight aborts the session AND the
+    task: admit_limit released, _active_task cleared, phase ABORTED, pool
+    conserved — and the next scale succeeds."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.driver import ScalePhase
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    staging="overlap", transfer_workers=1)
+srv.boot(c6)
+srv.preinitialize(c4)
+rng = np.random.default_rng(0)
+reqs = [Request(i, 0.0, 16, 40, prompt=rng.integers(0, 128, 16))
+        for i in range(4)]
+for r in reqs: srv.submit(r)
+srv.tick(0.0)
+
+orig = srv.hmm._stage_unit
+calls = []
+def failing_unit(*a, **k):
+    calls.append(1)
+    if len(calls) == 3:
+        raise RuntimeError("injected transfer failure")
+    return orig(*a, **k)
+srv.hmm._stage_unit = failing_unit
+
+task = srv.start_scale(c4)            # scale-DOWN: admit_limit throttled
+assert srv.engine.admit_limit is not None
+t, raised = 0.1, False
+for n in range(200):
+    srv.tick(t)
+    try:
+        task.advance(t)
+    except RuntimeError as e:
+        assert "transfer op" in str(e) or "injected" in str(e), e
+        raised = True
+        break
+    t += 0.1
+    if task.done: break
+assert raised, "injected failure never surfaced"
+assert task.phase is ScalePhase.ABORTED
+assert srv.engine.admit_limit is None          # capacity released
+assert srv._active_task is None and srv._staged_cfg is None
+assert srv.hmm.staged is None and not srv.hmm.staging_in_flight
+for d in c6.devices:
+    owned = sum(1 for ref in srv.hmm.page_table.active.values()
+                if ref.device == d)
+    assert srv.hmm.page_table.pages_in_use(d) == owned, d
+
+# serving continues on the still-active config and the next scale works
+srv.hmm._stage_unit = orig
+task = srv.start_scale(c4)
+n = 0
+while any(r.finish_s is None for r in reqs) or not task.done:
+    srv.tick(t)
+    if not task.done: task.advance(t)
+    t += 0.1; n += 1
+    assert n < 20000
+assert srv.hmm.active_cfg.ndev == 4
+print("FAIL-UNWIND-OK")
+""")
+    assert "FAIL-UNWIND-OK" in out
+
+
+@pytest.mark.slow
+def test_overlap_commit_abort_race_stress():
+    """Interleave aborts (mid-flight) and commits over repeated up/down
+    scale events on the pooled + paged-KV stack: the pool conserves pages,
+    serving never wedges, and every request finishes."""
+    out = run_with_devices(TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    kv_mode="paged", kv_block_size=16,
+                    staging="overlap", transfer_workers=2)
+srv.boot(c4)
+srv.preinitialize(c6)
+rng = np.random.default_rng(0)
+reqs = [Request(i, 0.0, 16, 120, prompt=rng.integers(0, 128, 16))
+        for i in range(4)]
+for r in reqs: srv.submit(r)
+
+t, n = 0.0, 0
+plan = [("abort", c6), ("commit", c6), ("abort", c4), ("commit", c4),
+        ("abort", c6), ("commit", c6)]
+for action, target in plan:
+    task = srv.start_scale(target)
+    srv.tick(t); t += .1; n += 1          # at least one tick mid-flight
+    if action == "abort":
+        task.abort()
+    else:
+        while not task.done:
+            srv.tick(t); task.advance(t); t += .1; n += 1
+            assert n < 40000
+    for d in srv.hmm.active_cfg.devices:
+        owned = sum(1 for ref in srv.hmm.page_table.active.values()
+                    if ref.device == d)
+        assert srv.hmm.page_table.pages_in_use(d) == owned, (action, d)
+    assert srv.hmm.page_table.staged is None
+    srv.engine.kv.check_invariants()
+    print("RACE-STEP-OK", action, target.ndev, srv.hmm.active_cfg.ndev)
+
+while any(r.finish_s is None for r in reqs):
+    srv.tick(t); t += .1; n += 1
+    assert n < 40000
+assert srv.hmm.active_cfg.ndev == 6
+print("RACE-STRESS-OK")
+""")
+    assert "RACE-STRESS-OK" in out
+    assert out.count("RACE-STEP-OK") == 6
+
+
+@pytest.mark.slow
+def test_overlap_closed_loop_driver_compiles_during_staging():
+    """The unchanged ClusterDriver loop over an overlapped ElasticServer:
+    scale-up under backlog with a COLD target compile — the IMM AOT compile
+    runs inside the STAGING window (STAGING ∥ COMPILING) — then scale-down,
+    with completion metrics in the driver event log."""
+    out = run_with_devices(TEST_MOE + """
+from repro.core.coordinator import ScalingPolicy
+from repro.core.elastic_engine import ElasticServer
+from repro.core.topology import ElasticConfig
+from repro.serving.driver import ClusterDriver, DriverConfig
+from repro.serving.metrics import SLO, summarize
+from repro.serving.workload import scripted_burst
+
+policy = ScalingPolicy(slo=SLO(ttft_s=1.0, tpot_s=1.0), window=8,
+                       cooldown_s=1.0, queue_scale_up=3)
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, staging="overlap")
+srv.boot(ElasticConfig(dp=2, tp=2, devices=(0,1,2,3)))
+driver = ClusterDriver(srv, policy, mcfg=MCFG, tp=2, device_pool=range(6),
+                       config=DriverConfig(dt=0.05, settle_s=2.0,
+                                           prewarm_next=False))
+assert driver._staging == "overlap"
+reqs = scripted_burst([(0.0, 2), (0.5, 7), (6.0, 1)], vocab_size=128, seed=1)
+until = 0.0
+while any(r.finish_s is None for r in reqs):
+    until += 10.0
+    driver.run(reqs if until == 10.0 else [], until=until)
+    assert until < 400.0, "stalled"
+dirs = [e.direction for e in driver.events]
+assert "up" in dirs and "down" in dirs, dirs
+assert srv.hmm.active_cfg.ndev == 4
+# the target was never pre-initialized, so the IMM compiled it cold — and
+# overlapped tasks never enter a COMPILING phase: the compile ran inside
+# the STAGING window on the serve thread (its cost shows up as stall)
+assert srv.imm.stats["preinit_misses"] >= 1, srv.imm.stats
+done = [e for e in driver.events if e.stall_s is not None]
+assert done and all(e.staging == "overlap" for e in driver.events)
+assert all(e.overlap_eff is not None for e in done)
+summ = summarize(driver.finished, backend=srv)
+assert summ["staging_mode"] == "overlap"
+assert summ["decode_stall_s"] >= 0.0
+print("OVERLAP-CLOSED-LOOP-OK", dirs)
+""")
+    assert "OVERLAP-CLOSED-LOOP-OK" in out

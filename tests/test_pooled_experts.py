@@ -320,6 +320,14 @@ for d in c6.devices:
                 if ref.device == d)
     assert srv.hmm.page_table.pages_in_use(d) == owned
 assert srv.hmm.page_table.staged is None
+# idempotent: a second abort (HMM-level) is a no-op, no double-free
+srv.hmm.abort()
+for d in c6.devices:
+    owned = sum(1 for ref in srv.hmm.page_table.active.values()
+                if ref.device == d)
+    assert srv.hmm.page_table.pages_in_use(d) == owned
+# mid-flight ops (staging="overlap") are covered by
+# tests/test_overlap_staging.py::test_overlap_abort_in_flight_leaves_no_staged_pages
 
 # now the real scale-down, driven to completion
 t, n, task = 0.1, 0, srv.start_scale(c4)
