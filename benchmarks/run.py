@@ -46,6 +46,9 @@ def main() -> None:
         ("kv_pressure", kv_pressure),
         ("expert_remap", expert_remap),
         ("overlap", overlap),
+        # measured drain-vs-migrate scale-down on the real engine (the
+        # fig12 entry above is the cost-model projection)
+        ("scaledown_migrate", scaledown_latency),
         ("measured", engine_measured),
     ]
     if args.only:
@@ -60,6 +63,8 @@ def main() -> None:
         try:
             if mod is slo_dynamics:
                 outs = [mod.run(True), mod.run(False), mod.run_closed_loop()]
+            elif name == "scaledown_migrate":
+                outs = [mod.run_measured()]
             else:
                 out = mod.run()
                 outs = out if isinstance(out, list) else [out]

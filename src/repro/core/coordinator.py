@@ -69,6 +69,12 @@ class LoadEstimator:
         """Returns 'up' | 'down' | None.  A non-None return commits the
         decision: the cooldown starts and the attainment window resets."""
         if now - self.last_action_t < self.policy.cooldown_s:
+            # drop any tracked signal: confirm_s demands CONTINUOUS
+            # presence, and presence during a cooldown is unobserved — a
+            # confirm timer surviving the cooldown would let the first
+            # post-cooldown blip instantly satisfy confirm_s even though
+            # the signal flapped in between
+            self._sig_dir = None
             return None
         sig = self._raw_signal(queue_depth, utilization)
         if sig is None:

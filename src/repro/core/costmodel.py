@@ -55,6 +55,10 @@ class ScalingCost:
     # transition has downtime (the outage already accounts for it).
     decode_stall_s: float = 0.0
     staging: str = "serial"
+    # zero-drain scale-down: live KV blocks device-copied off doomed
+    # partitions.  Scale-down time is then bounded by these *bytes* (plus
+    # weight staging) instead of by the longest in-flight sequence's drain.
+    migration_bytes: int = 0
 
     @property
     def peak_mem_gb(self) -> float:
@@ -74,12 +78,21 @@ def plan_cost(plan: ScalingPlan,
               ipc_safe_alloc: bool = True,
               strategy: str = "elastic",
               resident_bytes_per_device: Optional[Dict[int, int]] = None,
-              staging: str = "serial"
+              staging: str = "serial",
+              kv_migration_bytes: int = 0
               ) -> ScalingCost:
     """Project a plan onto the hardware model.
 
     ``resident_bytes_per_device``: bytes already live per device before the
     transition (old instance weights+KV); used for peak-memory accounting.
+
+    ``kv_migration_bytes``: live KV blocks device-copied off doomed
+    partitions during a zero-drain scale-down (P2P traffic, concurrent
+    with serving like any other transfer) — scale-down cost becomes
+    migration *bytes* instead of the drain's
+    longest-in-flight-sequence wall time, with the usual staging-mode
+    decode-stall share.  No peak-memory term: the copies land inside the
+    already-allocated survivor pool.
 
     ``staging``: "serial" sums transfer + warmup (the tick-interleaved
     legacy path, decode stalled for the whole transfer time); "overlap"
@@ -144,11 +157,12 @@ def plan_cost(plan: ScalingPlan,
     t_disk = max((b / hw.disk_bw for b in disk_bytes.values()), default=0.0)
     t_p2p = max((b / p2p_bw for b in p2p_in.values()), default=0.0)
     t_init = max((b / hw.hbm_init_bw for b in init_bytes.values()), default=0.0)
+    t_mig = kv_migration_bytes / p2p_bw
     t_zc = n_zero_copy * hw.zero_copy_per_tensor
     if not ipc_safe_alloc:
         t_zc += n_zero_copy * hw.zero_copy_per_tensor * 20  # re-registration
 
-    t_transfer = t_disk + t_p2p + t_init
+    t_transfer = t_disk + t_p2p + t_init + t_mig
     if staging == "overlap":
         # background transfers contend with serving -> each op slower; in
         # exchange the warmup/compile window hides under the transfer
@@ -157,6 +171,7 @@ def plan_cost(plan: ScalingPlan,
         t = max(t_ops, hw.warmup_s) + t_zc
         decode_stall = t_ops * hw.overlap_stall_frac
         breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
+                     "kv_migration": t_mig,
                      "zero_copy": t_zc, "warmup": hw.warmup_s,
                      "op_s": t_ops,
                      "overlap_hidden": t_ops + hw.warmup_s
@@ -164,9 +179,14 @@ def plan_cost(plan: ScalingPlan,
     else:
         t = t_transfer + t_zc + hw.warmup_s
         # serial staging blocks the serve loop one increment per tick: the
-        # whole transfer time is decode stall
-        decode_stall = t_transfer
+        # whole WEIGHT transfer time is decode stall — but KV migration
+        # copies ride the background TransferEngine in every staging mode
+        # (elastic_engine._advance_migration), so they only cost the HBM-
+        # contention share, never a serve-loop block
+        decode_stall = (t_disk + t_p2p + t_init
+                        + t_mig * hw.overlap_stall_frac)
         breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
+                     "kv_migration": t_mig,
                      "zero_copy": t_zc, "warmup": hw.warmup_s,
                      "op_s": t_transfer}
     if not preinit:
@@ -183,7 +203,8 @@ def plan_cost(plan: ScalingPlan,
         downtime = 0.0
     return ScalingCost(scale_time_s=t, downtime_s=downtime,
                        peak_mem_bytes_per_device=peak, breakdown=breakdown,
-                       decode_stall_s=decode_stall, staging=staging)
+                       decode_stall_s=decode_stall, staging=staging,
+                       migration_bytes=kv_migration_bytes)
 
 
 def resident_bytes(plan_place: Dict[int, Dict], kv_included: bool = True

@@ -9,7 +9,12 @@ The serving lifecycle (paper §5):
   (tick() remains callable throughout).  ``switchover()`` retargets traffic:
   surviving decode slots continue on the *same* KV cache rows — zero
   downtime, zero token divergence (asserted in tests).
-* ``scale_down`` drains only the slots being evicted.
+* scale-down (paged KV, ``scaledown="migrate"``, default): live sequences
+  in doomed slots MIGRATE — their KV blocks device-copy onto survivor
+  partitions in the background (MIGRATING phase) and devices release as
+  soon as the copies land, instead of waiting out the longest in-flight
+  sequence.  ``scaledown="drain"`` (and the dense layout) keeps the
+  legacy drain of evicted slots.
 
 For closed-loop operation, ``ElasticServer`` implements the
 ``ServingBackend`` protocol (serving/driver.py): ``start_scale`` returns an
@@ -24,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -56,6 +62,10 @@ class ScaleEvent:
     # ``hmm.last_stats``, whose wall_s later grows by the commit/KV-grow
     # time at switchover — overlap-efficiency ratios must use this snapshot
     stage_wall_s: float = 0.0
+    # zero-drain scale-down: live KV blocks device-copied off doomed
+    # partitions during the MIGRATING phase (0 for scale-up / drain mode)
+    migrated_blocks: int = 0
+    migration_bytes: int = 0
 
 
 class EngineScalingTask:
@@ -72,10 +82,14 @@ class EngineScalingTask:
       transfers proceed (STAGING ∥ COMPILING, DESIGN.md §3) and every later
       ``advance`` just polls completion.
 
-    Either way the phases continue DRAINING (scale-down only) ->
-    COMMITTING (switchover, a barrier that joins any in-flight ops) ->
-    DONE, and the engine's ``tick()`` is legal — and expected — between
-    every ``advance`` call.
+    Scale-down continues into MIGRATING (``scaledown="migrate"``, paged
+    KV: live sequences' blocks device-copy onto survivor partitions as
+    per-block ops on the HMM's TransferEngine while decode ticks proceed —
+    the doomed devices release as soon as the copies land) or DRAINING
+    (``scaledown="drain"`` / dense KV: evicted slots run to completion).
+    Either way the phases continue -> COMMITTING (switchover, a barrier
+    that joins any in-flight ops) -> DONE, and the engine's ``tick()`` is
+    legal — and expected — between every ``advance`` call.
     """
 
     def __init__(self, server: "ElasticServer", target: ElasticConfig):
@@ -94,6 +108,12 @@ class EngineScalingTask:
         self._compile_hit: Optional[bool] = None
         self._down = target.ndev < server.engine.cfg.ndev
         self._keep = target.dp * server.engine.batch_per_replica
+        self._migrate = self._down and server.scaledown_mode == "migrate"
+        # in-flight KV migrations: (MigrationJob, TransferSession)
+        self._mig_inflight: List = []
+        self._mig_warm = False
+        self.migrated_blocks = 0
+        self.migration_bytes = 0
         if self._down:
             # stop admitting into doomed slots right away so the drain
             # overlaps the staging increments instead of following them
@@ -121,8 +141,13 @@ class EngineScalingTask:
                                                self.stats.wall_s)
         if self._compile_hit is not None:
             self.event.compile_hit = self._compile_hit
-        self.phase = (ScalePhase.DRAINING if self._down
-                      else ScalePhase.COMMITTING)
+        self.phase = self._scaledown_phase()
+
+    def _scaledown_phase(self) -> ScalePhase:
+        if not self._down:
+            return ScalePhase.COMMITTING
+        return (ScalePhase.MIGRATING if self._migrate
+                else ScalePhase.DRAINING)
 
     def _unwind_failed(self):
         """A staging/compile step raised: release every piece of task state
@@ -177,8 +202,17 @@ class EngineScalingTask:
             except BaseException:
                 self._unwind_failed()
                 raise
-            self.phase = (ScalePhase.DRAINING if self._down
-                          else ScalePhase.COMMITTING)
+            self.phase = self._scaledown_phase()
+            self.stall_s += time.perf_counter() - t0
+        elif ph is ScalePhase.MIGRATING:
+            t0 = time.perf_counter()
+            try:
+                if self._advance_migration():
+                    self.phase = ScalePhase.COMMITTING
+            except BaseException:
+                self._cancel_migrations()
+                self._unwind_failed()
+                raise
             self.stall_s += time.perf_counter() - t0
         elif ph is ScalePhase.DRAINING:
             if self.server.engine.drained(self._keep):
@@ -191,9 +225,74 @@ class EngineScalingTask:
             self.event.stall_s = self.stall_s
         return self.phase
 
+    def _advance_migration(self) -> bool:
+        """One MIGRATING poll: harvest finished per-block copy sessions
+        (cut the slots over), submit new component moves, and report
+        whether every doomed partition is evacuated.  The copies run as
+        TransferOps on the HMM's background TransferEngine, so decode
+        ticks between polls overlap them exactly like overlapped staging
+        (DESIGN.md §3 — migration is asynchronous in every staging mode)."""
+        eng = self.server.engine
+        for job, sess in list(self._mig_inflight):
+            if not sess.finished():
+                continue
+            self._mig_inflight.remove((job, sess))
+            failed = sess.failed_ops()
+            if failed:
+                self._cancel_one(job)
+                raise RuntimeError(
+                    f"KV migration copy op {failed[0].label!r} failed "
+                    f"({len(failed)} op(s)); scale-down aborted"
+                ) from failed[0].error
+            eng.finish_migration(job)
+            self.migrated_blocks += job.ticket.num_blocks
+            self.migration_bytes += (job.ticket.num_blocks
+                                     * eng.block_nbytes())
+            if self.event is not None:
+                # per-harvest, not only at completion: components already
+                # committed are permanent even if a later abort lands
+                self.event.migrated_blocks = self.migrated_blocks
+                self.event.migration_bytes = self.migration_bytes
+        while True:
+            job = eng.plan_migration()
+            if job is None:
+                break
+            if not self._mig_warm:
+                # compile the block-copy executable on the serve thread so
+                # no worker ever compiles concurrently with serving
+                eng.prewarm_block_copy()
+                self._mig_warm = True
+            from repro.core.transfer import TransferOp
+            ops = [TransferOp(index=i, label=f"kvmig:{s}->{d}",
+                              fn=partial(eng.copy_block, s, d))
+                   for i, (s, d) in enumerate(job.ticket.pairs)]
+            sess = self.server.hmm.transfer_engine().submit(ops)
+            self._mig_inflight.append((job, sess))
+        if self._mig_inflight:
+            # bounded yield to the copy workers — the same GIL courtesy as
+            # HMM.poll_staging: with every doomed sequence paused and the
+            # survivors idle, the serve loop degenerates into a pure Python
+            # busy-loop that would otherwise starve the copies
+            self._mig_inflight[0][1].join(timeout=0.002)
+        return not self._mig_inflight and not eng.doomed_active_slots()
+
+    def _cancel_one(self, job) -> None:
+        self.server.engine.cancel_migration(job)
+
+    def _cancel_migrations(self):
+        """Abort barrier for in-flight migrations: cancel-or-join every
+        copy session FIRST (no worker may touch the cache afterwards),
+        then unwind tickets/slots — tables were never flipped, so the
+        paused sequences simply resume where they were."""
+        for job, sess in self._mig_inflight:
+            sess.cancel()
+            self._cancel_one(job)
+        self._mig_inflight = []
+
     def abort(self):
         assert self.phase in (ScalePhase.STAGING, ScalePhase.COMPILING,
-                              ScalePhase.DRAINING)
+                              ScalePhase.MIGRATING, ScalePhase.DRAINING)
+        self._cancel_migrations()
         self.server.hmm.abort()
         if self._down:
             # re-open the slots we stopped admitting into in __init__
@@ -211,9 +310,17 @@ class ElasticServer:
                  kv_blocks_per_replica: Optional[int] = None,
                  expert_mode: str = "dense",
                  expert_pool_pages: Optional[int] = None,
-                 staging: str = "serial", transfer_workers: int = 4):
+                 staging: str = "serial", transfer_workers: int = 4,
+                 scaledown: str = "migrate"):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
+        # scale-down policy: 'migrate' (paged KV only — live sequences'
+        # blocks device-copy onto survivor partitions, devices release in
+        # seconds) or 'drain' (evicted slots run to completion; latency
+        # bounded by the longest in-flight sequence).  The dense layout has
+        # no block indirection to rewrite, so it always drains.
+        assert scaledown in ("migrate", "drain")
+        self.scaledown_mode = scaledown if kv_mode == "paged" else "drain"
         # 'pooled': expert weights live as page pools + tables, so an EP
         # scale event migrates only the min-move page set and commit only
         # rewrites tables (DESIGN.md §2); the driver's cost projections
@@ -409,9 +516,14 @@ class ElasticServer:
         effs = [ev.stats.op_s / ev.stage_wall_s for ev in self.events
                 if ev.stage_wall_s > 0 and ev.stats.op_s > 0]
         return {"staging_mode": self.staging_mode,
+                "scaledown_mode": self.scaledown_mode,
                 "decode_stall_s": sum(ev.stall_s for ev in self.events),
                 "overlap_efficiency":
-                    sum(effs) / len(effs) if effs else None}
+                    sum(effs) / len(effs) if effs else None,
+                "migrated_blocks": sum(ev.migrated_blocks
+                                       for ev in self.events),
+                "migration_bytes": sum(ev.migration_bytes
+                                       for ev in self.events)}
 
     def current_config(self) -> ElasticConfig:
         return self.hmm.active_cfg

@@ -547,17 +547,26 @@ class HMM:
         # matching the pre-incremental scale() accounting
         self._stage_stats = TransferStats(wall_s=time.perf_counter() - t0)
         if self.staging_mode == "overlap":
-            from repro.core.transfer import TransferEngine, TransferOp
+            from repro.core.transfer import TransferOp
             self._stage_t0 = t0
-            if self._transfer is None:
-                self._transfer = TransferEngine(self.transfer_workers)
             ops = [TransferOp(index=i, label=path,
                               fn=self._make_stage_op(leaf, sh, expert_dim,
                                                      kind, new_cfg, mesh))
                    for i, (path, leaf, sh, expert_dim, kind)
                    in enumerate(work)]
-            self._stage_session = self._transfer.submit(ops)
+            self._stage_session = self.transfer_engine().submit(ops)
         return len(work)
+
+    def transfer_engine(self):
+        """The HMM's background TransferEngine (created lazily, persistent
+        across scale events).  Staging ops ride it with
+        ``staging="overlap"``; the engine's live KV-block migration copies
+        ride it in EVERY staging mode — migration is asynchronous by
+        design (DESIGN.md §3, §7)."""
+        if self._transfer is None:
+            from repro.core.transfer import TransferEngine
+            self._transfer = TransferEngine(self.transfer_workers)
+        return self._transfer
 
     @property
     def staging_remaining(self) -> int:
@@ -870,7 +879,11 @@ class HMM:
         self.cache = self._grow_cache(new_cfg, mesh, stats)
         if self.kv_blocks is not None:
             # pool partitions track DP replicas; block ids of survivors are
-            # unchanged, so live block tables need no translation
+            # unchanged, so live block tables need no translation.  Shrink
+            # is only legal once scale-down evacuation is complete (live
+            # blocks migrated onto survivors or drained) — the manager
+            # refuses while partitions hold blocks or migrations are
+            # pending, so commit cannot strand a live sequence.
             if new_cfg.dp >= self.kv_blocks.num_partitions:
                 self.kv_blocks.grow_partitions(new_cfg.dp)
             else:

@@ -236,8 +236,14 @@ def paged_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
                                              mode="drop")
     v_pool = v_pool.at[write_block, off].set(v[:, 0].astype(v_pool.dtype),
                                              mode="drop")
+    # table padding holds the NB sentinel (never a valid pool row); active
+    # sequences only dereference owned entries (< lengths), but inactive
+    # slots stream their padding — clamp so the gather stays in-bounds on
+    # kernels that index the pool directly (their output is discarded)
+    NB = k_pool.shape[0]
     o = ops.block_paged_decode_attention(q[:, 0], k_pool, v_pool,
-                                         block_tables, lengths + 1)
+                                         jnp.minimum(block_tables, NB - 1),
+                                         lengths + 1)
     y = linear(p["o"], o.reshape(B, 1, H * hd))
     return y, (k_pool, v_pool)
 

@@ -26,11 +26,17 @@ cannot silently diverge from engine semantics.
 
 Lifecycle of a ``ScalingTask`` (state diagram in DESIGN.md §3)::
 
-    IDLE -> STAGING -> COMPILING -> [DRAINING] -> COMMITTING -> DONE
+    IDLE -> STAGING -> COMPILING -> [MIGRATING | DRAINING]
+                                          -> COMMITTING -> DONE
                 \\________________________________________/-> ABORTED
 
-DRAINING only occurs on scale-down (evicted decode slots must finish);
-every arrow is traversed by ``advance(now)`` calls between serving ticks.
+MIGRATING/DRAINING only occur on scale-down: with paged KV and
+``scaledown="migrate"`` (the default) live sequences' KV blocks are
+device-copied onto survivor partitions in the background and the devices
+release in seconds; ``scaledown="drain"`` (and the dense layout) keeps
+the legacy run-to-completion drain, whose latency is bounded by the
+longest in-flight sequence.  Every arrow is traversed by ``advance(now)``
+calls between serving ticks.
 """
 from __future__ import annotations
 
@@ -50,6 +56,7 @@ from repro.serving.workload import Request, merge_arrivals
 class ScalePhase(enum.Enum):
     STAGING = "staging"        # weights moving; serving continues
     COMPILING = "compiling"    # IMM pre-init (AOT compile) for the target
+    MIGRATING = "migrating"    # scale-down: live KV blocks copy to survivors
     DRAINING = "draining"      # scale-down: evicted slots run to completion
     COMMITTING = "committing"  # switchover: retarget traffic, shared KV
     DONE = "done"
@@ -99,12 +106,26 @@ def admission_during_scale(strategy: str) -> Tuple[str, bool]:
     return "old", False
 
 
+def projected_migration_blocks(used_blocks: float, old_dp: int,
+                               new_dp: int) -> int:
+    """THE shared scale-down migration policy for projections: the doomed
+    partitions' share of current block occupancy must move to survivors.
+    Slots fill partition-major and admission is paused during the
+    transition, so occupancy is ~uniform across partitions — the simulator
+    costs its scale events with this and the ClusterDriver projects
+    candidate costs with it, while the real engine migrates the exact
+    per-sequence block sets (DriverEvent records both)."""
+    if new_dp >= old_dp or old_dp <= 0:
+        return 0
+    return int(math.ceil(used_blocks * (old_dp - new_dp) / old_dp))
+
+
 def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                     new: ElasticConfig, *, strategy: str = "elastic",
                     hw: Optional[HardwareModel] = None, preinit: bool = True,
                     kv_seq_len: int = 4096, kv_batch: int = 8,
                     expert_mode: str = "dense", page_table=None,
-                    staging: str = "serial"):
+                    staging: str = "serial", kv_migration_bytes: int = 0):
     """Plan + cost of one transition — THE shared costing path: the
     simulator executes its scale events with this and the ClusterDriver
     selects targets with it, so projection and execution cannot drift.
@@ -122,7 +143,11 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
 
     ``staging`` projects the serial vs overlapped transfer pipeline
     (``costmodel.plan_cost``): overlap hides warmup under the transfer
-    window and converts decode stall into an HBM-contention share."""
+    window and converts decode stall into an HBM-contention share.
+
+    ``kv_migration_bytes`` models a zero-drain scale-down: live KV blocks
+    device-copied onto survivor partitions (use
+    ``projected_migration_blocks`` × block bytes for the shared policy)."""
     kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len)
     tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
     if (expert_mode == "pooled" and mcfg.is_moe and old is not None
@@ -140,7 +165,7 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                 for d, s in placement(tensors, old).items()}
     return plan_cost(plan, hw=hw or DEFAULT_HW, preinit=preinit,
                      strategy=strategy, resident_bytes_per_device=resident,
-                     staging=staging)
+                     staging=staging, kv_migration_bytes=kv_migration_bytes)
 
 
 @runtime_checkable
@@ -213,9 +238,12 @@ class DriverEvent:
     staging: Optional[str] = None      # staging mode used for the projection
     # filled in when the ScalingTask completes (None until then / if the
     # backend does not report them): serve-loop time lost to staging work,
-    # and Σ transfer-op time / staging wall-clock (>1 = real overlap)
+    # Σ transfer-op time / staging wall-clock (>1 = real overlap), and the
+    # zero-drain scale-down's live KV-block migration volume
     stall_s: Optional[float] = None
     overlap_eff: Optional[float] = None
+    migrated_blocks: Optional[int] = None
+    migration_bytes: Optional[int] = None
 
 
 class ClusterDriver:
@@ -259,6 +287,9 @@ class ClusterDriver:
         # overlapped staging => overlap transfer pipeline in projections
         self._staging = (self.config.staging
                          or getattr(backend, "staging_mode", "serial"))
+        # migrate-mode scale-down => projections cost migration bytes via
+        # the shared projected_migration_blocks policy, not drain time
+        self._scaledown = getattr(backend, "scaledown_mode", "drain")
 
     # ------------------------------------------------------ target selection
     @property
@@ -296,6 +327,14 @@ class ClusterDriver:
             # not a hypothetical contiguous boot at `old`
             page_table = getattr(getattr(self.backend, "hmm", None),
                                  "page_table", None)
+        kv_mig = 0
+        if new.dp < old.dp and self._scaledown == "migrate":
+            # project the live occupancy that must evacuate doomed
+            # partitions — same policy the simulator executes with
+            kv = getattr(self.backend, "kv_stats", lambda: None)() or {}
+            kv_mig = (projected_migration_blocks(
+                kv.get("used_blocks", 0), old.dp, new.dp)
+                * int(kv.get("block_bytes", 0)))
         try:
             return transition_cost(self.mcfg, self.tp, old, new,
                                    strategy=self._strategy, hw=self._hw,
@@ -303,7 +342,8 @@ class ClusterDriver:
                                    kv_seq_len=self._kv_len,
                                    expert_mode=self._expert_mode,
                                    page_table=page_table,
-                                   staging=self._staging).scale_time_s
+                                   staging=self._staging,
+                                   kv_migration_bytes=kv_mig).scale_time_s
         except MemoryError:
             # the live page pool cannot host this target's staged pages —
             # executing the transition would fail the same way, so veto the
@@ -394,6 +434,10 @@ class ClusterDriver:
                         ev.stall_s = getattr(self.task, "stall_s", None)
                         ev.overlap_eff = getattr(
                             self.task, "overlap_efficiency", None)
+                        ev.migrated_blocks = getattr(
+                            self.task, "migrated_blocks", None)
+                        ev.migration_bytes = getattr(
+                            self.task, "migration_bytes", None)
                     self.task = None
                     self._last_done_t = t
             elif t - self._last_done_t >= cfgd.settle_s:

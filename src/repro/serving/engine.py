@@ -31,6 +31,7 @@ event rebind only swaps tables — the engine code is unchanged either way.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -45,7 +46,7 @@ from repro.configs.base import ModelConfig
 from repro.core.topology import ElasticConfig
 from repro.distributed.sharding import ParallelCtx
 from repro.models import model as M
-from repro.serving.kv_blocks import KVBlockManager
+from repro.serving.kv_blocks import KVBlockManager, MigrationTicket
 
 
 def engine_parallel_ctx(mesh) -> ParallelCtx:
@@ -134,6 +135,20 @@ class SlotState:
     remaining: int = 0
     active: bool = False
     priority: int = 0
+    # live KV-block migration (scale-down): a migrating slot's sequence is
+    # paused (its blocks are frozen while copies are in flight); a reserved
+    # slot is the migration's destination and must not admit anything else
+    migrating: bool = False
+    reserved: bool = False
+
+
+@dataclasses.dataclass
+class MigrationJob:
+    """One in-flight slot migration: a sharing component of doomed slots
+    moving to reserved survivor slots.  ``ticket.pairs`` is the device copy
+    list; ``moves`` maps each sequence to its (src_slot, dst_slot)."""
+    ticket: MigrationTicket
+    moves: List[Tuple[int, int, int]]      # (rid, src_slot, dst_slot)
 
 
 class InferenceEngine:
@@ -167,6 +182,11 @@ class InferenceEngine:
         self._resume_rids: set = set()            # preempted at least once
         self._finished_at_admission: List[int] = []
         self.preemptions = 0
+        # serializes every mutation of ``self.cache`` (the compiled steps
+        # donate it, so the handle is replaced each call): decode/prefill on
+        # the serve thread vs per-block migration copies on the
+        # TransferEngine workers (copy_block)
+        self._cache_lock = threading.Lock()
 
     # ------------------------------------------------------------- binding
     @property
@@ -195,18 +215,25 @@ class InferenceEngine:
             bs = self.kv.block_size
             assert self.max_len % bs == 0 and self.prefill_bucket % bs == 0, \
                 "max_len and prefill buckets must be block-size multiples"
-            self.block_tables = np.zeros((n, self.max_len // bs), np.int32)
+            # padding rows hold the NB sentinel (never block id 0, which is
+            # a valid pool row); NB tracks the *current* pool size, so
+            # tables are rebuilt from the block manager on every rebind
+            self.block_tables = np.full((n, self.max_len // bs),
+                                        self.kv.num_blocks, np.int32)
         # surviving slots keep their requests (zero-copy KV reuse)
         for i in range(min(len(old_slots), n)):
             self.slots[i] = old_slots[i]
             self.lengths[i] = old_lengths[i]
             self.tokens[i] = old_tokens[i]
-            if self.paged and old_tables is not None:
-                self.block_tables[i] = old_tables[i]
+            if self.paged and old_tables is not None \
+                    and self.slots[i].active:
+                tbl = self.kv.block_table(self.slots[i].rid)
+                self.block_tables[i, :len(tbl)] = tbl
 
     def free_slots(self) -> List[int]:
         lim = self.admit_limit if self.admit_limit is not None else len(self.slots)
-        return [i for i, s in enumerate(self.slots) if not s.active and i < lim]
+        return [i for i, s in enumerate(self.slots)
+                if not s.active and not s.reserved and i < lim]
 
     def drained(self, keep: int) -> bool:
         """True when all slots >= keep are inactive (scale-down ready)."""
@@ -216,17 +243,33 @@ class InferenceEngine:
         return sum(1 for s in self.slots if s.active)
 
     def utilization(self) -> float:
-        """Occupied fraction of serving capacity (drives the load
-        estimator): slot occupancy dense, block-pool occupancy paged."""
+        """Occupied fraction of *admissible* serving capacity (drives the
+        load estimator): slot occupancy dense, block-pool occupancy paged.
+
+        During a scale-down, capacity is what survives the transition
+        (``admit_limit`` slots / partitions) — counting doomed slots would
+        deflate the load signal exactly while the estimator is judging
+        whether the shrink was a good idea."""
         if self.paged:
-            return self.kv.utilization()
-        return self.active_count() / max(self.num_slots, 1)
+            cap = self.kv.num_blocks
+            if self.admit_limit is not None:
+                parts = max(1, self.admit_limit // self.batch_per_replica)
+                cap = min(cap, parts * self.kv.blocks_per_partition)
+            return self.kv.used_blocks() / max(cap, 1)
+        lim = (len(self.slots) if self.admit_limit is None
+               else max(1, min(self.admit_limit, len(self.slots))))
+        return self.active_count() / max(lim, 1)
 
     def kv_stats(self) -> Optional[Dict[str, float]]:
         if not self.paged:
             return None
         st = self.kv.stats()
         st["preemptions"] = self.preemptions
+        st["block_bytes"] = self.block_nbytes()
+        # single source of truth: the manager counts committed migrations
+        # (kv.stats already reports migrated_blocks); bytes are derived
+        st["migration_bytes"] = (self.kv.migrated_blocks
+                                 * self.block_nbytes())
         return st
 
     # ------------------------------------------------------------- serving
@@ -268,15 +311,21 @@ class InferenceEngine:
             for j, b in enumerate(alloc.blocks):
                 if j >= alloc.num_shared:      # shared prefix: don't rewrite
                     ids[j] = b
-            first, self.cache = self._prefill(S_pad)(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(S, jnp.int32), jnp.asarray(ids))
-            self.block_tables[slot, :] = 0
+            with self._cache_lock:
+                first, self.cache = self._prefill(S_pad)(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(S, jnp.int32), jnp.asarray(ids))
+            # clear the previous occupant's rows with the NB sentinel, NOT
+            # 0 — block 0 is a valid pool row, and a stale row beyond this
+            # request's (possibly shorter) table must never alias a block
+            # another sequence owns (module docstring: NB marks padding)
+            self.block_tables[slot, :] = self.kv.num_blocks
             self.block_tables[slot, :len(alloc.blocks)] = alloc.blocks
         else:
-            first, self.cache = self._prefill(S_pad)(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(S, jnp.int32), jnp.asarray(slot, jnp.int32))
+            with self._cache_lock:
+                first, self.cache = self._prefill(S_pad)(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(S, jnp.int32), jnp.asarray(slot, jnp.int32))
         produced = len(self.generated.get(req.rid, [])) if resume else 0
         remaining = req.output_len - produced - 1
         self.slots[slot] = SlotState(rid=req.rid, remaining=remaining,
@@ -353,8 +402,9 @@ class InferenceEngine:
         """Physical copy-on-write: duplicate pool row ``src`` into ``dst``
         across all layers.  Jitted with the cache donated so XLA updates
         the pool buffers in place (one block row moved, not a pool copy)."""
-        self.cache = _cow_copy(self.cache, jnp.asarray(src, jnp.int32),
-                               jnp.asarray(dst, jnp.int32))
+        with self._cache_lock:
+            self.cache = _cow_copy(self.cache, jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32))
 
     def _ensure_append(self, slot: int) -> bool:
         """Reserve the write slot for this sequence's next token, preempting
@@ -381,36 +431,152 @@ class InferenceEngine:
             self.block_tables[slot, j] = r.block
         return True
 
+    # ------------------------------------- live migration (scale-down)
+    def block_nbytes(self) -> int:
+        """Device bytes of ONE pool block across all layers/tensors — the
+        unit of migration byte accounting."""
+        assert self.paged and self.cache is not None
+        return sum(leaf.nbytes // leaf.shape[1]
+                   for leaf in jax.tree.leaves(self.cache))
+
+    def doomed_active_slots(self) -> List[int]:
+        """Active slots that will be evicted by the pending scale-down
+        (at or above ``admit_limit``), including ones mid-migration."""
+        assert self.admit_limit is not None
+        return [i for i, s in enumerate(self.slots)
+                if s.active and i >= self.admit_limit]
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """One migration device copy (pool row ``src`` -> ``dst``), safe to
+        run on a TransferEngine worker: the jit-donated CoW copy under the
+        cache lock, serialized against decode/prefill cache swaps.  Call
+        once from the serve thread first (``prewarm_block_copy``) so the
+        compile never happens on a worker."""
+        self._copy_block(src, dst)
+
+    def prewarm_block_copy(self) -> None:
+        """Compile the block-copy executable on the serve thread (a
+        self-copy is a content no-op) before workers start issuing it."""
+        self._copy_block(0, 0)
+
+    def plan_migration(self) -> Optional[MigrationJob]:
+        """Plan ONE component move off a doomed partition, or None.
+
+        Picks the first doomed partition with unmigrated live sequences,
+        groups them into block-sharing components (the unit that preserves
+        CoW refcounts), and best-effort places each component onto a
+        survivor partition with enough free *slots* and free *blocks*.  A
+        component no survivor can hold block-wise falls back to
+        recompute-preemption (freed + re-queued, restarted after
+        switchover); one that is merely waiting on survivor slots is left
+        for a later call (survivors only finish during a scale — admission
+        is paused — so slots free up monotonically)."""
+        assert self.paged and self.admit_limit is not None
+        keep_parts = self.admit_limit // self.batch_per_replica
+        bpr = self.batch_per_replica
+        slot_of = {s.rid: i for i, s in enumerate(self.slots) if s.active}
+        for part in range(keep_parts, self.kv.num_partitions):
+            for comp in self.kv.share_components(part):
+                if any(self.kv.migrating(s) for s in comp):
+                    continue
+                if any(r not in slot_of for r in comp):
+                    continue            # finishing this tick; skip
+                need = self.kv.migration_need(comp)
+                placed = None
+                for q in range(keep_parts):
+                    free = [i for i in range(q * bpr, (q + 1) * bpr)
+                            if not self.slots[i].active
+                            and not self.slots[i].reserved
+                            and i < self.admit_limit]
+                    if len(free) >= len(comp) \
+                            and self.kv.free_blocks(q) >= need:
+                        placed = (q, free)
+                        break
+                if placed is None:
+                    if len(comp) <= bpr and any(
+                            self.kv.free_blocks(q) >= need
+                            for q in range(keep_parts)):
+                        continue        # blocks exist; waiting on slots
+                    # no survivor can ever hold this component: recompute
+                    for rid in sorted(comp):
+                        self._preempt_slot(slot_of[rid])
+                    continue
+                q, free = placed
+                ticket = self.kv.begin_migration(comp, q)
+                moves = []
+                for rid, dst in zip(sorted(comp), free):
+                    src = slot_of[rid]
+                    self.slots[src].migrating = True
+                    self.slots[dst] = SlotState(reserved=True)
+                    moves.append((rid, src, dst))
+                return MigrationJob(ticket=ticket, moves=moves)
+        return None
+
+    def finish_migration(self, job: MigrationJob) -> None:
+        """Cut-over after every pair in ``job.ticket`` was device-copied:
+        commit the block-table rewrite, re-home each slot's state to its
+        survivor slot, and resume decoding there."""
+        self.kv.commit_migration(job.ticket)
+        NB = self.kv.num_blocks
+        for rid, src, dst in job.moves:
+            st = self.slots[src]
+            assert st.rid == rid and st.migrating
+            st.migrating = False
+            self.slots[dst] = st
+            self.slots[src] = SlotState()
+            self.lengths[dst] = self.lengths[src]
+            self.tokens[dst] = self.tokens[src]
+            tbl = self.kv.block_table(rid)
+            self.block_tables[dst, :] = NB
+            self.block_tables[dst, :len(tbl)] = tbl
+            self.block_tables[src, :] = NB
+
+    def cancel_migration(self, job: MigrationJob) -> None:
+        """Abort an in-flight migration: the reservation unwinds, source
+        tables were never touched (device truth unchanged), and the paused
+        sequences resume decoding in place."""
+        self.kv.abort_migration(job.ticket)
+        for _, src, dst in job.moves:
+            if self.slots[src].migrating:
+                self.slots[src].migrating = False
+            if self.slots[dst].reserved:
+                self.slots[dst] = SlotState()
+
     def decode_tick(self) -> List[Tuple[int, int, bool]]:
-        """One decode step for all active slots.
+        """One decode step for all runnable slots (active and not paused by
+        an in-flight migration — a migrating sequence's blocks are frozen
+        until the copies land, then it resumes on its survivor slot).
         Returns [(rid, token, finished)] for slots that produced a token."""
+        runnable = [s.active and not s.migrating for s in self.slots]
         if self.paged:
             # highest priority first, oldest first on ties: pressure evicts
             # from the low-priority/young end before it reaches them
-            order = sorted((i for i, s in enumerate(self.slots) if s.active),
+            order = sorted((i for i in range(len(self.slots)) if runnable[i]),
                            key=lambda i: (-self.slots[i].priority,
                                           self.slots[i].rid))
             for slot in order:
                 if self.slots[slot].active:
                     self._ensure_append(slot)
-        if self.active_count() == 0:
+            runnable = [s.active and not s.migrating for s in self.slots]
+        if not any(runnable):
             return []
-        active = np.array([s.active for s in self.slots])
+        active = np.array(runnable)
         self._step_count = getattr(self, "_step_count", 0) + 1
         rng = jax.random.key_data(jax.random.PRNGKey(self._step_count))
-        if self.paged:
-            nxt, self.cache = self.compiled["decode"](
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.lengths), jnp.asarray(active),
-                jnp.asarray(self.block_tables), rng)
-        else:
-            nxt, self.cache = self.compiled["decode"](
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.lengths), jnp.asarray(active), rng)
+        with self._cache_lock:
+            if self.paged:
+                nxt, self.cache = self.compiled["decode"](
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(active),
+                    jnp.asarray(self.block_tables), rng)
+            else:
+                nxt, self.cache = self.compiled["decode"](
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(active), rng)
         nxt = np.asarray(nxt)
         out = []
         for i, s in enumerate(self.slots):
-            if not s.active:
+            if not active[i]:
                 continue
             self.lengths[i] += 1
             self.tokens[i] = nxt[i]

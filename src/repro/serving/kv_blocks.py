@@ -27,6 +27,18 @@ preemption.  This module is pure host-side bookkeeping (no JAX): the engine
 and the discrete-event simulator both drive it, and property tests assert
 conservation (no block leaked or double-owned) across arbitrary
 alloc/append/free/preempt/CoW interleavings.
+
+**Live migration (zero-drain scale-down, DESIGN.md §7).**  Shrinking used
+to require draining every doomed partition — scale-down latency bounded by
+the longest in-flight sequence.  ``begin_migration`` instead *reserves*
+blocks on a survivor partition for a whole sharing component of live
+sequences (two-phase: sequences keep reading their source blocks — device
+truth — while the engine copies rows in the background), and
+``commit_migration`` atomically rewrites the block tables, moves CoW
+refcounts block-for-block, re-keys the prefix-registry chains to the
+destination partition's hash seed, and frees the source blocks.
+``abort_migration`` returns the reservation untouched.  Migration is
+component-granular precisely so refcounted sharing survives the move.
 """
 from __future__ import annotations
 
@@ -48,6 +60,28 @@ class SeqBlocks:
     blocks: List[int]
     num_tokens: int                    # tokens currently stored
     num_shared: int = 0                # leading blocks adopted via prefix match
+
+
+@dataclasses.dataclass
+class MigrationTicket:
+    """An in-flight cross-partition move of one sharing component.
+
+    ``pairs`` is the device copy list — the caller must copy the physical
+    contents of every ``src`` block into its ``dst`` block (in any order;
+    the blocks are frozen: migrating sequences may not append) before
+    calling ``commit_migration``.  Until commit, every sequence still
+    *reads* its source blocks — the ticket only holds a reservation on the
+    destination partition, so ``abort_migration`` is a pure unwind."""
+    tid: int
+    seqs: List[int]
+    src_partition: int
+    dst_partition: int
+    pairs: List[Tuple[int, int]]           # (src_block, dst_block)
+    mapping: Dict[int, int]                # src_block -> dst_block
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.pairs)
 
 
 @dataclasses.dataclass
@@ -89,6 +123,10 @@ class KVBlockManager:
         self.preemptions = 0
         self.cow_copies = 0
         self.shared_block_hits = 0
+        # live migrations (zero-drain scale-down): tid -> MigrationTicket
+        self._migrations: Dict[int, MigrationTicket] = {}
+        self._next_tid = 0
+        self.migrated_blocks = 0
         for _ in range(num_partitions):
             self._add_partition()
 
@@ -113,10 +151,13 @@ class KVBlockManager:
             self._add_partition()
 
     def shrink_partitions(self, num_partitions: int) -> None:
-        """Scale-down: drop trailing partitions.  They must be fully free
-        (the engine drains evicted slots first; sharing is partition-local,
-        so no survivor can hold a doomed block)."""
+        """Scale-down: drop trailing partitions.  They must be fully free —
+        the engine first *migrates* live sequences onto survivors (or, in
+        drain mode, lets evicted slots finish); sharing is partition-local,
+        so no survivor can hold a doomed block."""
         assert 0 < num_partitions <= self.num_partitions
+        assert not self._migrations, \
+            "cannot shrink with migrations in flight (commit/abort first)"
         for p in range(num_partitions, self.num_partitions):
             assert len(self._free[p]) == self.blocks_per_partition, \
                 f"partition {p} still has allocated blocks"
@@ -245,6 +286,8 @@ class KVBlockManager:
         (possibly CoW-copied) block.  Raises MemoryError when a new block is
         needed and the partition is dry."""
         sb = self._seqs[seq]
+        assert not self.migrating(seq), \
+            f"seq {seq} is mid-migration (blocks frozen)"
         pos = sb.num_tokens
         j = pos // self.block_size
         if j == len(sb.blocks):                       # crosses into new block
@@ -277,6 +320,8 @@ class KVBlockManager:
     def free(self, seq: int) -> List[int]:
         """Release a sequence.  Returns the blocks actually returned to the
         pool (shared blocks survive until their last holder frees them)."""
+        assert not self.migrating(seq), \
+            f"seq {seq} is mid-migration (abort_migration first)"
         sb = self._seqs.pop(seq)
         released = []
         for b in sb.blocks:
@@ -295,7 +340,7 @@ class KVBlockManager:
         (highest seq id) on ties — vLLM's recompute-preemption order."""
         pool = [s for s in (candidates if candidates is not None
                             else self._seqs) if s not in exclude
-                and s in self._seqs]
+                and s in self._seqs and not self.migrating(s)]
         if not pool:
             return None
         return min(pool, key=lambda s: (self._seqs[s].priority, -s))
@@ -304,6 +349,147 @@ class KVBlockManager:
         """Evict ``seq`` (recompute-on-resume: all state dropped)."""
         self.preemptions += 1
         return self.free(seq)
+
+    # ----------------------------------------------------------- migration
+    def migrating(self, seq: int) -> bool:
+        return any(seq in t.seqs for t in self._migrations.values())
+
+    @property
+    def migrations_pending(self) -> int:
+        return len(self._migrations)
+
+    def share_components(self, partition: int) -> List[List[int]]:
+        """Live sequences of ``partition`` grouped into connected components
+        of the block-sharing graph (CoW'd prefixes).  A component is the
+        migration unit: moving it whole keeps every refcount intact.
+        Deterministic: components and members sorted by sequence id."""
+        holders: Dict[int, List[int]] = {}
+        for s, sb in self._seqs.items():
+            if sb.partition != partition:
+                continue
+            for b in sb.blocks:
+                holders.setdefault(b, []).append(s)
+        parent: Dict[int, int] = {}
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for seqs in holders.values():
+            for s in seqs:
+                parent.setdefault(s, s)
+            for s in seqs[1:]:
+                parent[find(seqs[0])] = find(s)
+        comps: Dict[int, List[int]] = {}
+        for s in parent:
+            comps.setdefault(find(s), []).append(s)
+        return sorted((sorted(c) for c in comps.values()), key=lambda c: c[0])
+
+    def migration_need(self, seqs: Sequence[int]) -> int:
+        """Blocks a ``begin_migration`` of ``seqs`` would reserve (unique
+        blocks across the component — shared blocks counted once)."""
+        return len({b for s in seqs for b in self._seqs[s].blocks})
+
+    def begin_migration(self, seqs: Sequence[int],
+                        dst_partition: int) -> MigrationTicket:
+        """Reserve destination blocks for a whole sharing component.
+
+        Validates the component is closed (every co-owner of every block is
+        in ``seqs`` — otherwise the move would strand a survivor's table)
+        and reserves one destination block per unique source block.  No
+        sequence state changes: the caller device-copies ``ticket.pairs``
+        and then commits.  Raises MemoryError when the destination
+        partition lacks free blocks (the caller falls back to
+        recompute-preemption)."""
+        assert seqs, "empty migration"
+        parts = {self._seqs[s].partition for s in seqs}
+        assert len(parts) == 1, f"component spans partitions {parts}"
+        src_partition = parts.pop()
+        assert dst_partition != src_partition
+        assert 0 <= dst_partition < self.num_partitions
+        for s in seqs:
+            assert not self.migrating(s), f"seq {s} already migrating"
+        order: List[int] = []
+        seen = set()
+        for s in seqs:
+            for b in self._seqs[s].blocks:
+                if b not in seen:
+                    seen.add(b)
+                    order.append(b)
+        # closure: a shared block whose co-owner stays behind cannot move
+        for s, sb in self._seqs.items():
+            if s not in seqs:
+                assert not seen & set(sb.blocks), \
+                    f"seq {s} shares blocks with the migrating component"
+        if len(self._free[dst_partition]) < len(order):
+            raise MemoryError(
+                f"survivor partition {dst_partition} lacks free blocks for "
+                f"migration: need {len(order)}, "
+                f"free {len(self._free[dst_partition])}")
+        dst = [self._free[dst_partition].pop() for _ in order]
+        ticket = MigrationTicket(
+            tid=self._next_tid, seqs=sorted(seqs),
+            src_partition=src_partition, dst_partition=dst_partition,
+            pairs=list(zip(order, dst)), mapping=dict(zip(order, dst)))
+        self._next_tid += 1
+        self._migrations[ticket.tid] = ticket
+        return ticket
+
+    def commit_migration(self, ticket: MigrationTicket) -> List[int]:
+        """Atomic cut-over after the caller copied every pair: rewrite the
+        component's block tables to the destination blocks, move refcounts
+        block-for-block, re-key prefix-registry chains onto the destination
+        partition's hash seed, and free the source blocks.  Returns them."""
+        t = self._migrations.pop(ticket.tid)
+        # 1. read the registered prefix chains against the pristine registry
+        #    (chain hash = fold of chunk contents from the partition seed)
+        moves: Dict[int, Tuple[Tuple[int, int], Tuple[int, ...]]] = {}
+        for s in t.seqs:
+            h_old, h_new = t.src_partition, t.dst_partition
+            for b in self._seqs[s].blocks:
+                if self._block_prefix_key.get(b) != (t.src_partition, h_old):
+                    break            # unregistered tail / diverged chain
+                chunk = next((c for bb, c
+                              in self._prefix.get((t.src_partition, h_old),
+                                                  []) if bb == b), None)
+                if chunk is None:
+                    break
+                moves.setdefault(b, ((t.dst_partition, h_new), chunk))
+                if len(chunk) < self.block_size:
+                    break
+                h_old = hash((h_old, chunk))
+                h_new = hash((h_new, chunk))
+        # 2. re-key matched chains; 3. drop any stragglers (stale entries
+        #    must not reference blocks returning to the free list)
+        for b_src, (new_key, chunk) in moves.items():
+            self._unregister_block(b_src)
+            b_dst = t.mapping[b_src]
+            self._prefix.setdefault(new_key, []).append((b_dst, chunk))
+            self._block_prefix_key[b_dst] = new_key
+        for b_src in t.mapping:
+            if b_src in self._block_prefix_key:
+                self._unregister_block(b_src)
+        # 4. refcounts + tables
+        for b_src, b_dst in t.mapping.items():
+            self._refcount[b_dst] = self._refcount.pop(b_src)
+        for s in t.seqs:
+            sb = self._seqs[s]
+            sb.blocks = [t.mapping[b] for b in sb.blocks]
+            sb.partition = t.dst_partition
+        released = sorted(t.mapping)
+        self._free[t.src_partition].extend(released)
+        self.migrated_blocks += len(t.pairs)
+        return released
+
+    def abort_migration(self, ticket: MigrationTicket) -> None:
+        """Drop the reservation; sequence state never changed, so this is a
+        pure free-list unwind (idempotent for an already-resolved ticket)."""
+        t = self._migrations.pop(ticket.tid, None)
+        if t is None:
+            return
+        self._free[t.dst_partition].extend(d for _, d in t.pairs)
 
     # ------------------------------------------------------------- checking
     def check_invariants(self) -> None:
@@ -319,10 +505,24 @@ class KVBlockManager:
                 holders[b] = holders.get(b, 0) + 1
         assert holders == self._refcount, (holders, self._refcount)
         seen = set(holders)
+        reserved = set()
+        for t in self._migrations.values():
+            srcs = set()
+            for s in t.seqs:
+                assert s in self._seqs, f"migrating seq {s} vanished"
+                srcs |= set(self._seqs[s].blocks)
+            assert srcs == set(t.mapping), (srcs, t.mapping)
+            for _, d in t.pairs:
+                assert d // bpp == t.dst_partition, (d, t.dst_partition)
+                assert d not in holders and d not in reserved, \
+                    f"migration-reserved block {d} double-owned"
+                reserved.add(d)
+        seen |= reserved
         for p, free in enumerate(self._free):
             assert len(set(free)) == len(free), f"double-free in partition {p}"
             for b in free:
-                assert b // bpp == p and b not in holders, b
+                assert b // bpp == p and b not in holders \
+                    and b not in reserved, b
                 seen.add(b)
         assert seen == set(range(self.num_blocks)), "blocks leaked"
         for block, key in self._block_prefix_key.items():
@@ -339,4 +539,6 @@ class KVBlockManager:
             "cow_copies": self.cow_copies,
             "shared_block_hits": self.shared_block_hits,
             "live_seqs": len(self._seqs),
+            "migrated_blocks": self.migrated_blocks,
+            "migrations_pending": self.migrations_pending,
         }

@@ -119,4 +119,9 @@ def scaling_overlap_stats(backend) -> Optional[dict]:
            "decode_stall_s": float(raw.get("decode_stall_s", 0.0))}
     if raw.get("overlap_efficiency") is not None:
         out["overlap_efficiency"] = float(raw["overlap_efficiency"])
+    if raw.get("scaledown_mode") is not None:
+        # zero-drain scale-down: live KV blocks moved to survivors
+        out["scaledown_mode"] = raw["scaledown_mode"]
+        out["migrated_blocks"] = int(raw.get("migrated_blocks", 0))
+        out["migration_bytes"] = int(raw.get("migration_bytes", 0))
     return out

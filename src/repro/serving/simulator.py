@@ -42,6 +42,7 @@ from repro.configs.base import ModelConfig
 from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost
 from repro.core.topology import ElasticConfig, kv_cache_bytes
 from repro.serving.driver import (ScalePhase, admission_during_scale,
+                                  projected_migration_blocks,
                                   transition_cost)
 from repro.serving.kv_blocks import blocks_for as kv_blocks_for
 from repro.serving.workload import Request, merge_arrivals
@@ -111,6 +112,11 @@ class SimScaleEvent:
     old_ndev: int
     new_ndev: int
     cost: ScalingCost
+    # zero-drain scale-down (scaledown="migrate", paged KV): live KV blocks
+    # modelled as moving off doomed partitions (shared policy:
+    # driver.projected_migration_blocks); 0 for scale-up / drain mode
+    migrated_blocks: int = 0
+    migration_bytes: int = 0
 
 
 class SimScalingTask:
@@ -135,6 +141,9 @@ class SimScalingTask:
         # plan_cost zeroes decode_stall_s on downtime transitions (the
         # outage subsumes the stall), so no re-guarding here
         self.stall_s = event.cost.decode_stall_s
+        # mirror the engine task's completion metrics (DriverEvent fill-in)
+        self.migrated_blocks = event.migrated_blocks
+        self.migration_bytes = event.migration_bytes
 
     @property
     def done(self) -> bool:
@@ -166,7 +175,8 @@ class ServingSimulator:
                  hw: Optional[HardwareModel] = None, kv_seq_len: int = 4096,
                  preinit: bool = True, kv_mode: str = "dense",
                  pool_blocks: Optional[int] = None,
-                 expert_mode: str = "dense", staging: str = "serial"):
+                 expert_mode: str = "dense", staging: str = "serial",
+                 scaledown: str = "migrate"):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
@@ -193,6 +203,17 @@ class ServingSimulator:
         # the same memory-pressure signal on both backends.
         assert kv_mode in ("dense", "paged")
         self.kv_mode = kv_mode
+        # scale-down policy, mirroring ElasticServer(scaledown=...):
+        # 'migrate' (default, paged only) costs scale-downs as live
+        # KV-block migration bytes via the shared
+        # projected_migration_blocks policy; 'drain' extends t_ready until
+        # the doomed share of in-flight requests would have finished —
+        # latency bounded by the longest evicted sequence, the behaviour
+        # migration replaces.  Dense KV is coerced to 'drain' exactly like
+        # the engine (no block indirection to migrate), so projection and
+        # execution report — and cost — the same policy.
+        assert scaledown in ("migrate", "drain")
+        self.scaledown_mode = scaledown if kv_mode == "paged" else "drain"
         self._pool_blocks_override = pool_blocks
         self.preemptions = 0
         # note: baselines also run with a warm engine (pre-provisioned
@@ -226,16 +247,40 @@ class ServingSimulator:
                             tuple(range(self.ndev)))
         if self.strategy in ("extravagant", "horizontal"):
             self.extra_devices_during_scale = target.ndev
+        down = target.ndev < self.ndev
+        mig_blocks = 0
+        if down and self.kv_mode == "paged" \
+                and self.scaledown_mode == "migrate":
+            mig_blocks = projected_migration_blocks(
+                self.used_blocks(), old.dp, target.dp)
+        mig_bytes = mig_blocks * self.perf._kv_block_bytes
         cost = transition_cost(self.mcfg, self.tp, old, target,
                                strategy=self.strategy, hw=self.hw,
                                preinit=self.preinit,
                                kv_seq_len=self.perf.kv_seq_len,
                                expert_mode=self.expert_mode,
-                               staging=self.staging_mode)
+                               staging=self.staging_mode,
+                               kv_migration_bytes=mig_bytes)
+        t_ready = self.t + cost.scale_time_s
+        if down and self.scaledown_mode == "drain" and self.running:
+            # legacy drain: the doomed share of in-flight requests (the
+            # youngest, mirroring eviction order) must run to completion
+            # before their devices release — overlapping the staging window
+            n_doomed = math.ceil(len(self.running)
+                                 * (old.dp - target.dp) / old.dp)
+            doomed = sorted(self.running, key=lambda e: -e[1])[:n_doomed]
+            if doomed:
+                # the doomed sequences' finishes are about to be shifted by
+                # the modelled decode stall (below) — drain must wait for
+                # the SHIFTED completion, or devices release early
+                t_ready = max(t_ready,
+                              max(f for f, _, _, _ in doomed)
+                              + cost.decode_stall_s)
         event = SimScaleEvent(
-            t_command=self.t, t_ready=self.t + cost.scale_time_s,
+            t_command=self.t, t_ready=t_ready,
             downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,
-            old_ndev=self.ndev, new_ndev=target.ndev, cost=cost)
+            old_ndev=self.ndev, new_ndev=target.ndev, cost=cost,
+            migrated_blocks=mig_blocks, migration_bytes=mig_bytes)
         self.events.append(event)
         if cost.downtime_s:
             # in-flight requests are stalled for the whole outage (§3 L2)
@@ -316,10 +361,15 @@ class ServingSimulator:
         effs = [e.cost.breakdown["op_s"] / max(e.cost.scale_time_s, 1e-9)
                 for e in self.events if e.cost.breakdown.get("op_s")]
         return {"staging_mode": self.staging_mode,
+                "scaledown_mode": self.scaledown_mode,
                 "decode_stall_s": sum(e.cost.decode_stall_s
                                       for e in self.events),
                 "overlap_efficiency":
-                    sum(effs) / len(effs) if effs else None}
+                    sum(effs) / len(effs) if effs else None,
+                "migrated_blocks": sum(e.migrated_blocks
+                                       for e in self.events),
+                "migration_bytes": sum(e.migration_bytes
+                                       for e in self.events)}
 
     def kv_stats(self) -> Optional[Dict[str, float]]:
         """Block-pool stats (None in dense mode); serving/metrics.py."""
@@ -330,7 +380,10 @@ class ServingSimulator:
         return {"num_blocks": pool, "used_blocks": used,
                 "utilization": used / max(pool, 1),
                 "preemptions": self.preemptions,
-                "live_seqs": len(self.running)}
+                "live_seqs": len(self.running),
+                "block_bytes": self.perf._kv_block_bytes,
+                "migrated_blocks": sum(e.migrated_blocks
+                                       for e in self.events)}
 
     def step(self, now: float) -> List[Request]:
         """One simulation quantum at time ``now`` (driver.ServingBackend):

@@ -116,6 +116,131 @@ def test_grow_and_shrink_partitions():
     m.check_invariants()
 
 
+# ------------------------------------------- live migration (zero-drain)
+
+def test_migration_moves_component_and_preserves_sharing():
+    """A CoW-sharing component migrates whole: tables remapped, refcounts
+    moved block-for-block, and the prefix registry re-keyed so NEW requests
+    in the destination partition still share the moved prefix."""
+    m = KVBlockManager(3, 8, 4)
+    toks = list(range(10))
+    src_blocks = list(m.allocate(1, 10, partition=2, tokens=toks).blocks)
+    m.allocate(2, 10, partition=2, tokens=toks)       # fully shared
+    m.allocate(3, 5, partition=2, tokens=[9, 8, 7, 6, 5])
+    assert m.share_components(2) == [[1, 2], [3]]
+    t = m.begin_migration([1, 2], 0)
+    assert t.num_blocks == 3                          # shared counted once
+    assert m.migrating(1) and not m.migrating(3)
+    m.check_invariants()                              # mid-flight
+    released = m.commit_migration(t)
+    m.check_invariants()
+    assert sorted(released) == sorted(src_blocks)
+    assert m.seq(1).partition == 0
+    assert m.seq(1).blocks == m.seq(2).blocks         # sharing survived
+    assert all(b // 8 == 0 for b in m.seq(1).blocks)
+    # prefix registry followed the blocks into the new partition
+    d = m.allocate(4, 10, partition=0, tokens=toks)
+    assert d.num_shared == 3 and d.blocks == m.seq(1).blocks
+    # CoW still forks on append after the move
+    r = m.append(2)
+    assert r is not None and r.cow_src is not None
+    m.check_invariants()
+    for s in (1, 2, 3, 4):
+        m.free(s)
+    assert m.used_blocks() == 0
+    m.shrink_partitions(2)
+    m.check_invariants()
+
+
+def test_migration_abort_restores_everything():
+    m = KVBlockManager(2, 6, 4)
+    src_blocks = list(m.allocate(1, 12, partition=1).blocks)
+    free_before = m.free_blocks(0)
+    t = m.begin_migration([1], 0)
+    assert m.free_blocks(0) == free_before - 3        # reserved
+    m.check_invariants()
+    m.abort_migration(t)
+    m.abort_migration(t)                              # idempotent
+    assert m.free_blocks(0) == free_before
+    assert m.seq(1).blocks == src_blocks and m.seq(1).partition == 1
+    m.check_invariants()
+    # a fresh migration after the abort succeeds
+    m.commit_migration(m.begin_migration([1], 0))
+    assert m.seq(1).partition == 0
+    m.check_invariants()
+
+
+def test_migration_guards():
+    """Dst dry -> MemoryError (the engine's preempt fallback); a component
+    torn apart, a frozen append, and a shrink with a pending ticket are
+    caller bugs -> assertion."""
+    m = KVBlockManager(2, 4, 4)
+    m.allocate(1, 16, partition=0)                    # partition 0 full
+    m.allocate(2, 8, partition=1)
+    with pytest.raises(MemoryError):
+        m.begin_migration([2], 0)
+    m.check_invariants()                              # failed begin leaks nothing
+    toks = list(range(8))
+    m.free(1)
+    m.allocate(3, 8, partition=1, tokens=toks)
+    m.allocate(4, 8, partition=1, tokens=toks)        # shares with 3
+    with pytest.raises(AssertionError):
+        m.begin_migration([3], 0)                     # co-owner left behind
+    t = m.begin_migration([2], 0)
+    with pytest.raises(AssertionError):
+        m.append(2)                                   # frozen mid-migration
+    with pytest.raises(AssertionError):
+        m.shrink_partitions(1)                        # ticket pending
+    assert m.victim(candidates=[2, 3]) == 3           # migrating excluded
+    m.abort_migration(t)
+    m.check_invariants()
+
+
+def test_migration_random_walk_conserves():
+    """Deterministic random interleaving of alloc/append/free/migrate/
+    abort across 3 partitions: conservation holds at every step."""
+    import random
+    rng = random.Random(7)
+    m = KVBlockManager(3, 10, 4)
+    nxt = 0
+    for step in range(400):
+        op = rng.random()
+        live = [s for s in m.live_seqs() if not m.migrating(s)]
+        if op < 0.35:
+            p = rng.randrange(3)
+            if m.can_allocate(6, p):
+                m.allocate(nxt, 6, partition=p)
+                nxt += 1
+        elif op < 0.6 and live:
+            s = rng.choice(live)
+            try:
+                m.append(s)
+            except MemoryError:
+                m.preempt(s)
+        elif op < 0.75 and live:
+            m.free(rng.choice(live))
+        elif live:
+            s = rng.choice(live)
+            src = m.seq(s).partition
+            dst = rng.choice([q for q in range(3) if q != src])
+            comp = next(c for c in m.share_components(src) if s in c)
+            if all(not m.migrating(x) for x in comp):
+                try:
+                    t = m.begin_migration(comp, dst)
+                except MemoryError:
+                    continue
+                m.check_invariants()
+                if rng.random() < 0.3:
+                    m.abort_migration(t)
+                else:
+                    m.commit_migration(t)
+        m.check_invariants()
+    for s in list(m.live_seqs()):
+        m.free(s)
+    assert m.used_blocks() == 0
+    m.check_invariants()
+
+
 # ------------------------------------------------- simulator under pressure
 
 def test_simulator_paged_preempts_and_completes():

@@ -1,0 +1,290 @@
+"""Zero-drain scale-down: live KV-block migration (real JAX, subprocess):
+
+* determinism matrix mirroring the scale-up one — tokens bit-identical for
+  sequences migrated mid-decode vs an unscaled run at the target config,
+  across (dense | pooled experts) x paged KV,
+* abort-mid-migration restores tables, resumes the paused sequences in
+  place, and leaks no blocks (``check_invariants``),
+* survivors lacking free blocks fall back to recompute-preemption (the
+  only case that still recomputes),
+* the coordinator cooldown regression (stale confirm timer) and the
+  admissible-capacity utilization signal,
+* simulator + driver share the migration policy and surface
+  ``migrated_blocks`` / ``migration_bytes`` on their events.
+"""
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+MIG_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.driver import ScalePhase
+from repro.serving.workload import Request
+
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+
+def mixed_reqs(outs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, 0.0, 16, o, prompt=rng.integers(0, 128, 16))
+            for i, o in enumerate(outs)]
+"""
+
+
+@pytest.mark.slow
+def test_scaledown_migration_determinism_matrix():
+    """Scale 6->4 mid-decode with live sequences in the doomed slots: the
+    MIGRATING phase re-homes them onto survivors and every token matches
+    the unscaled run bit for bit — for dense AND pooled expert weights
+    over paged KV.  No drain: the long doomed sequences are still decoding
+    when the devices release."""
+    out = run_with_devices(MIG_COMMON + """
+from repro.serving.metrics import summarize
+
+# short rids 0-1 free their survivor slots early; long rids 4-5 sit in the
+# doomed partition and are still mid-decode when the scale-down commits
+OUTS = [6, 6, 30, 30, 60, 60]
+
+def run(expert_mode, scale):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0, kv_mode="paged",
+                        kv_block_size=16, expert_mode=expert_mode)
+    assert srv.scaledown_mode == "migrate"      # the default for paged KV
+    srv.boot(c6 if scale else c4)
+    reqs = mixed_reqs(OUTS)
+    for r in reqs: srv.submit(r)
+    t, n, task, mig_polls = 0.0, 0, None, 0
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 10 and task is None:
+            # the doomed sequences have decoded for several ticks already
+            assert all(srv.engine.slots[s].active for s in (4, 5))
+            task = srv.start_scale(c4)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+            if task.phase is ScalePhase.MIGRATING:
+                mig_polls += 1
+        assert n < 2000, [r.finish_s for r in reqs]
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv, task, \
+        mig_polls, reqs
+
+for mode in ("dense", "pooled"):
+    ref, _, _, _, _ = run(mode, scale=False)
+    got, srv, task, mig_polls, reqs = run(mode, scale=True)
+    assert srv.hmm.active_cfg.ndev == 4
+    assert srv.hmm.kv_blocks.num_partitions == 2
+    assert mig_polls > 0, "MIGRATING phase never observed"
+    assert task.migrated_blocks > 0
+    assert task.migration_bytes == task.migrated_blocks * \
+        srv.engine.block_nbytes()
+    assert srv.engine.preemptions == 0          # migrated, not recomputed
+    srv.hmm.kv_blocks.check_invariants()
+    assert srv.engine.kv_stats()["used_blocks"] == 0
+    ev = srv.events[-1]
+    assert ev.migrated_blocks == task.migrated_blocks
+    assert ev.migration_bytes == task.migration_bytes
+    summ = summarize(reqs, backend=srv)
+    assert summ["scaledown_mode"] == "migrate"
+    assert summ["migrated_blocks"] == task.migrated_blocks
+    for rid in ref:
+        assert ref[rid] == got[rid], (mode, rid)
+    print(f"MATRIX-{mode}-OK", task.migrated_blocks)
+print("SCALEDOWN-DETERMINISM-OK")
+""")
+    assert "MATRIX-dense-OK" in out
+    assert "MATRIX-pooled-OK" in out
+    assert "SCALEDOWN-DETERMINISM-OK" in out
+
+
+@pytest.mark.slow
+def test_abort_mid_migration_restores_and_leaks_nothing():
+    """Abort with per-block copy ops literally in flight: the copy session
+    is cancel-or-joined, tickets unwind, block tables were never flipped
+    (device truth unchanged), the paused sequences resume in place on the
+    OLD config, and the pool conserves."""
+    out = run_with_devices(MIG_COMMON + """
+import time
+
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, kv_mode="paged",
+                    kv_block_size=16)
+srv.boot(c6)
+reqs = mixed_reqs([6, 6, 30, 30, 60, 60])
+for r in reqs: srv.submit(r)
+orig = srv.engine._copy_block
+def slow_copy(src, dst):
+    time.sleep(0.05)                 # keep ops in flight across a tick
+    orig(src, dst)
+srv.engine.copy_block = slow_copy
+
+t, n, task, aborted, before = 0.0, 0, None, False, None
+while any(r.finish_s is None for r in reqs):
+    if n == 10 and task is None:
+        task = srv.start_scale(c4)
+    srv.tick(t); t += .1; n += 1
+    if task is not None and not task.done:
+        task.advance(t)
+        if not aborted and task.phase is ScalePhase.MIGRATING \
+                and task._mig_inflight:
+            mig_slots = [i for i, s in enumerate(srv.engine.slots)
+                         if s.migrating]
+            assert mig_slots, "no slot paused while copies in flight"
+            before = srv.engine.block_tables[mig_slots].copy()
+            task.abort(); aborted = True
+            after = srv.engine.block_tables[mig_slots]
+            assert (before == after).all()       # tables never flipped
+            assert not any(s.migrating or s.reserved
+                           for s in srv.engine.slots)
+            srv.hmm.kv_blocks.check_invariants()
+            assert srv.hmm.kv_blocks.migrations_pending == 0
+            assert srv.engine.admit_limit is None
+    assert n < 3000
+assert aborted and task.phase is ScalePhase.ABORTED
+assert srv.hmm.active_cfg.ndev == 6              # still on the old config
+assert srv.engine.kv_stats()["used_blocks"] == 0
+srv.hmm.kv_blocks.check_invariants()
+for r in reqs:                                   # every sequence completed
+    assert len(srv.engine.generated[r.rid]) == r.output_len
+print("ABORT-MID-MIGRATION-OK")
+""")
+    assert "ABORT-MID-MIGRATION-OK" in out
+
+
+@pytest.mark.slow
+def test_migration_falls_back_to_preemption_when_survivors_full():
+    """Survivor partitions too full to host the doomed blocks: the engine
+    preempts (recompute) instead of deadlocking, everything completes on
+    the shrunk config, and the pool conserves."""
+    out = run_with_devices(MIG_COMMON + """
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, kv_mode="paged",
+                    kv_block_size=16, kv_blocks_per_replica=8)
+srv.boot(c6)
+reqs = mixed_reqs([40] * 6, seed=1)
+for r in reqs: srv.submit(r)
+t, n, task = 0.0, 0, None
+while any(r.finish_s is None for r in reqs):
+    if n == 5 and task is None:
+        task = srv.start_scale(c4)
+    srv.tick(t); t += .1; n += 1
+    if task is not None and not task.done:
+        task.advance(t)
+    assert n < 3000, [r.finish_s for r in reqs]
+assert task.done and srv.hmm.active_cfg.ndev == 4
+assert srv.engine.preemptions > 0, "fallback never exercised"
+srv.hmm.kv_blocks.check_invariants()
+assert srv.engine.kv_stats()["used_blocks"] == 0
+for r in reqs:
+    assert len(srv.engine.generated[r.rid]) == r.output_len
+print("PREEMPT-FALLBACK-OK", srv.engine.preemptions)
+""")
+    assert "PREEMPT-FALLBACK-OK" in out
+
+
+# ---------------------------------------------------- fast in-process units
+
+def test_cooldown_clears_stale_confirm_timer():
+    """Regression (coordinator): a confirm timer tracked before a cooldown
+    must not survive it — the first post-cooldown blip would instantly
+    satisfy ``confirm_s`` even though the signal flapped in between."""
+    from repro.core.coordinator import LoadEstimator, ScalingPolicy
+    from repro.serving.metrics import SLO
+    from repro.serving.workload import Request
+
+    pol = ScalingPolicy(slo=SLO(1.0, 1.0), window=8, cooldown_s=10.0,
+                        confirm_s=2.0)
+    est = LoadEstimator(pol)
+    for i in range(8):                     # healthy window -> raw 'down'
+        r = Request(i, 0.0, 10, 5)
+        r.first_token_s = 0.1
+        r.finish_s = 0.5
+        est.record(r)
+    # a 'down' confirm timer is running when a cooldown begins (e.g. the
+    # operator scaled manually / a prior decision committed elsewhere)
+    est._sig_dir, est._sig_t0 = "down", 0.0
+    est.last_action_t = 5.0
+    # the signal flaps away DURING the cooldown (high utilization)...
+    assert est.decide(6.0, queue_depth=0, utilization=0.9) is None
+    # ...and reappears right after it: the stale t0 (0.0) would satisfy
+    # confirm_s instantly — the fix restarts the confirm window instead
+    assert est.decide(16.0, queue_depth=0, utilization=0.1) is None
+    assert est._sig_t0 == 16.0
+    # continuous presence from here on confirms normally
+    assert est.decide(18.5, queue_depth=0, utilization=0.1) == "down"
+
+
+def test_utilization_over_admissible_capacity():
+    """During a scale-down the load signal must be computed over the
+    capacity that SURVIVES (admit_limit slots / partitions) — counting
+    doomed slots deflates it exactly while the estimator watches."""
+    from repro.configs.base import ModelConfig
+    from repro.core.topology import ElasticConfig
+    from repro.serving.engine import InferenceEngine, SlotState
+    from repro.serving.kv_blocks import KVBlockManager
+
+    mcfg = ModelConfig(name="t", arch_type="dense", num_layers=1, d_model=8,
+                       vocab_size=16, num_heads=1, num_kv_heads=1,
+                       head_dim=8, d_ff=8)
+    # dense: 2 active of 6 slots = 1/3; of the 4 admissible = 1/2
+    eng = InferenceEngine(mcfg, batch_per_replica=2, max_len=64)
+    eng.cfg = ElasticConfig(dp=3, tp=1, devices=(0, 1, 2))
+    eng.slots = [SlotState(active=i < 2) for i in range(6)]
+    assert eng.utilization() == pytest.approx(2 / 6)
+    eng.admit_limit = 4
+    assert eng.utilization() == pytest.approx(2 / 4)
+    eng.admit_limit = None
+    # paged: occupancy over the surviving partitions' blocks only
+    eng.kv = KVBlockManager(3, 8, 16)
+    eng.kv.allocate(1, 6 * 16, partition=0)
+    assert eng.utilization() == pytest.approx(6 / 24)
+    eng.admit_limit = 4                      # 2 surviving partitions
+    assert eng.utilization() == pytest.approx(6 / 16)
+    eng.admit_limit = None
+    assert eng.utilization() == pytest.approx(6 / 24)
+
+
+def test_simulator_migration_policy_and_events():
+    """The simulator costs migrate-mode scale-downs as migration bytes via
+    the SAME projected_migration_blocks policy the driver projects with,
+    records them on its events, and drain mode is bounded by the doomed
+    sequences' completion instead."""
+    from repro.configs import get_config
+    from repro.serving.driver import projected_migration_blocks
+    from repro.serving.metrics import summarize
+    from repro.serving.simulator import ServingSimulator
+    from repro.serving.workload import Request
+
+    mcfg = get_config("deepseek-v2-lite-16b")
+
+    def loaded(scaledown):
+        sim = ServingSimulator(mcfg, tp=2, ndev=8, kv_mode="paged",
+                               pool_blocks=4000, scaledown=scaledown)
+        for i in range(8):
+            sim.submit(Request(i, 0.0, 4096, 4000))
+        sim.step(0.0)
+        assert sim.used_blocks() > 0
+        return sim
+
+    sim = loaded("migrate")
+    expect = projected_migration_blocks(sim.used_blocks(), 4, 2)
+    task = sim.command_scale(4)
+    ev = sim.events[-1]
+    assert ev.migrated_blocks == expect > 0
+    assert ev.migration_bytes == expect * sim.perf._kv_block_bytes
+    assert ev.cost.breakdown["kv_migration"] > 0
+    assert ev.cost.migration_bytes == ev.migration_bytes
+    assert task.migrated_blocks == expect        # DriverEvent fill-in path
+    t_migrate = ev.t_ready
+
+    sim_d = loaded("drain")
+    sim_d.command_scale(4)
+    ev_d = sim_d.events[-1]
+    assert ev_d.migrated_blocks == 0
+    # drain waits for the doomed share of in-flight sequences to finish —
+    # with 4000-token outputs that dwarfs the staging window
+    assert ev_d.t_ready > t_migrate
+    st = summarize([], backend=sim)
+    assert st["scaledown_mode"] == "migrate"
+    assert st["migrated_blocks"] == expect
