@@ -44,6 +44,9 @@ def main() -> None:
         ("table1+3", ablation),
         ("table2", throughput_windows),
         ("kv_pressure", kv_pressure),
+        # chunked-prefill ITL flatness A/B (same module, own entry so CI
+        # can smoke it via --only without the slower admission sweep)
+        ("chunked_itl", kv_pressure),
         ("expert_remap", expert_remap),
         ("overlap", overlap),
         # measured drain-vs-migrate scale-down on the real engine (the
@@ -65,6 +68,8 @@ def main() -> None:
                 outs = [mod.run(True), mod.run(False), mod.run_closed_loop()]
             elif name == "scaledown_migrate":
                 outs = [mod.run_measured()]
+            elif name == "chunked_itl":
+                outs = [mod.run_itl()]
             else:
                 out = mod.run()
                 outs = out if isinstance(out, list) else [out]

@@ -311,9 +311,16 @@ class ElasticServer:
                  expert_mode: str = "dense",
                  expert_pool_pages: Optional[int] = None,
                  staging: str = "serial", transfer_workers: int = 4,
-                 scaledown: str = "migrate"):
+                 scaledown: str = "migrate",
+                 prefill_chunk: int = 0,
+                 prefill_budget: Optional[int] = None):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
+        # continuous batching: prefill_chunk > 0 splits prompt processing
+        # into fixed-size token chunks interleaved with decode ticks under
+        # a per-tick budget (serving/scheduler.py); 0 keeps the monolithic
+        # prefill-at-admission path
+        self.prefill_chunk = prefill_chunk
         # scale-down policy: 'migrate' (paged KV only — live sequences'
         # blocks device-copy onto survivor partitions, devices release in
         # seconds) or 'drain' (evicted slots run to completion; latency
@@ -338,10 +345,13 @@ class ElasticServer:
                        expert_pool_pages=expert_pool_pages,
                        staging=staging, transfer_workers=transfer_workers)
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
-                       max_len=max_len, prefill_buckets=prefill_buckets)
+                       max_len=max_len, prefill_buckets=prefill_buckets,
+                       prefill_chunk=prefill_chunk)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,
                                       max_len=max_len,
-                                      prefill_bucket=min(prefill_buckets))
+                                      prefill_bucket=min(prefill_buckets),
+                                      prefill_chunk=prefill_chunk,
+                                      prefill_budget=prefill_budget)
         self.estimator = LoadEstimator(policy) if policy else None
         self.queue: List[Request] = []
         self.requests: Dict[int, Request] = {}
@@ -449,13 +459,18 @@ class ElasticServer:
         free = self.engine.free_slots()
         while admitting and self.queue and free:
             req = self.queue[0]
-            slot = next((s for s in free
+            # prefix-cache-aware placement: try slots whose partition
+            # already holds the longest registered prefix of this prompt
+            slot = next((s for s in
+                         self.engine.preferred_slots(req, req.prompt, free)
                          if self.engine.can_admit(req, req.prompt, s)), None)
             if slot is None:
                 break                   # head-of-line blocks; no skipping
             free.remove(slot)
             self.queue.pop(0)
-            self.engine.start_request(req, req.prompt, slot)
+            first = self.engine.start_request(req, req.prompt, slot)
+            if first is None:
+                continue    # chunked: first token arrives from decode_tick
             if req.first_token_s is None:
                 req.first_token_s = now
                 req.token_times = [now]
@@ -470,7 +485,11 @@ class ElasticServer:
                 self.estimator.record(req)
         for rid, tok, fin in self.engine.decode_tick():
             req = self.requests[rid]
-            if req.token_times is not None:
+            if req.first_token_s is None:
+                # chunked prefill: the final chunk's token is the TTFT mark
+                req.first_token_s = now
+                req.token_times = [now]
+            elif req.token_times is not None:
                 req.token_times.append(now)
             if fin:
                 req.finish_s = now

@@ -44,12 +44,16 @@ class StandbyInstance:
 class IMM:
     def __init__(self, mcfg: ModelConfig, hmm: HMM, *,
                  batch_per_replica: int, max_len: int,
-                 prefill_buckets=(64,), lru_capacity: int = 4):
+                 prefill_buckets=(64,), prefill_chunk: int = 0,
+                 lru_capacity: int = 4):
         self.mcfg = mcfg
         self.hmm = hmm
         self.batch_per_replica = batch_per_replica
         self.max_len = max_len
         self.prefill_buckets = tuple(prefill_buckets)
+        # continuous batching: >0 also pre-compiles the chunk-prefill
+        # executable per instance (engine.prefill_chunk)
+        self.prefill_chunk = prefill_chunk
         self.lru_capacity = lru_capacity
         self._cache: "OrderedDict[Tuple, StandbyInstance]" = OrderedDict()
         self.stats = {"preinit_hits": 0, "preinit_misses": 0,
@@ -78,6 +82,7 @@ class IMM:
             self.mcfg, cfg, mesh, params_sds, cache_sds,
             batch_per_replica=self.batch_per_replica, max_len=self.max_len,
             prefill_buckets=self.prefill_buckets,
+            prefill_chunk=self.prefill_chunk,
             kv_mode=self.hmm.kv_mode,
             kv_block_size=self.hmm.kv_block_size)
         inst = StandbyInstance(cfg, mesh, compiled, dt)

@@ -75,6 +75,27 @@ def block_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
     return _block_paged(q, k_pool, v_pool, block_tables, lengths, **kw)
 
 
+def mixed_block_paged_attention(q, k_pool, v_pool, block_tables, ctx_lens,
+                                q_lens, **kw):
+    """Mixed chunked-prefill / decode attention over the block pool (the
+    continuous-batching hot path; see serving/scheduler.py).
+
+    Same impl switch as ``block_paged_decode_attention``: ``impl='kernel'``
+    forces the Pallas kernel, ``'ref'`` the jnp gather oracle, and the
+    default ``'auto'`` (overridable via ``REPRO_PAGED_IMPL``) picks the
+    kernel on accelerators and the reference on CPU; the two are
+    parity-tested in test_kernels.py."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_PAGED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import mixed_block_paged_attention_ref
+        return mixed_block_paged_attention_ref(q, k_pool, v_pool,
+                                               block_tables, ctx_lens, q_lens)
+    from repro.kernels.paged_attention import \
+        mixed_block_paged_attention as _mixed
+    kw.setdefault("interpret", _INTERPRET)
+    return _mixed(q, k_pool, v_pool, block_tables, ctx_lens, q_lens, **kw)
+
+
 def ssd_scan(x, dt, A, Bm, Cm, **kw):
     kw.setdefault("interpret", _INTERPRET)
     return _ssd(x, dt, A, Bm, Cm, **kw)

@@ -161,3 +161,109 @@ def block_paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         interpret=interpret,
     )(lengths, block_tables.astype(jnp.int32), qg, k_pool, v_pool)
     return out.reshape(B, H, hd)
+
+
+def _mixed_kernel(ctx_ref, qlen_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, block_k, n_k, G):
+    # block table is consumed by the BlockSpec index maps
+    del bt_ref
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    q_len = qlen_ref[b]
+
+    @pl.when(ki * block_k < ctx)
+    def _step():
+        q3 = q_ref[0, 0].astype(jnp.float32)                 # [Sq, G, hd]
+        sq = q3.shape[0]
+        q2 = q3.reshape(sq * G, q3.shape[2])                 # [Sq*G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        # query row qi sits at absolute position ctx - q_len + qi; padding
+        # rows (qi >= q_len) degrade to full-context decode masking so every
+        # row keeps a sane softmax (block 0 is always live: ctx >= 1)
+        q_abs = ctx - q_len + qi
+        s = jnp.where((pos < ctx) & (pos <= q_abs), s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = o.reshape(o_ref.shape[2], G,
+                                o.shape[-1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mixed_block_paged_attention(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_tables: jax.Array,
+                                ctx_lens: jax.Array, q_lens: jax.Array, *,
+                                interpret: bool = False) -> jax.Array:
+    """Mixed chunked-prefill / decode attention (continuous batching).
+
+    q [B,Sq,H,hd]; k/v_pool [NB,bs,KVH,hd]; block_tables [B,MB];
+    ctx_lens [B] (total context incl. the chunk, already written to the
+    pool); q_lens [B] (valid chunk rows) -> [B,Sq,H,hd].
+
+    Query row ``i`` of sequence ``b`` attends causally from absolute
+    position ``ctx_lens[b] - q_lens[b] + i``; ``q_lens == 1`` is exactly
+    paged decode, so one kernel serves interleaved prefill+decode buckets.
+    Sentinel (``NB``) block-table rows are clamped in-bounds before the
+    index_map dereference and position-masked inert; blocks at or beyond
+    ``ctx_lens[b]`` are skipped entirely.  Oracle:
+    ``ref.mixed_block_paged_attention_ref``.
+    """
+    B, Sq, H, hd = q.shape
+    NB, bs, KVH = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    bt = jnp.minimum(block_tables.astype(jnp.int32), NB - 1)
+    qg = q.reshape(B, Sq, KVH, G, hd).transpose(0, 2, 1, 3, 4)
+
+    out = pl.pallas_call(
+        functools.partial(_mixed_kernel, scale=scale, block_k=bs, n_k=MB,
+                          G=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, KVH, MB),
+            in_specs=[
+                pl.BlockSpec((1, 1, Sq, G, hd),
+                             lambda b, h, ki, C, Q, BT: (b, h, 0, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Sq, G, hd),
+                                   lambda b, h, ki, C, Q, BT:
+                                   (b, h, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Sq * G,), jnp.float32),
+                pltpu.VMEM((Sq * G,), jnp.float32),
+                pltpu.VMEM((Sq * G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, Sq, G, hd), q.dtype),
+        interpret=interpret,
+    )(ctx_lens.astype(jnp.int32), q_lens.astype(jnp.int32), bt,
+      qg, k_pool, v_pool)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)

@@ -69,6 +69,39 @@ def block_paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
     return paged_decode_attention_ref(q, k, v, lengths)
 
 
+def mixed_block_paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                    ctx_lens, q_lens):
+    """Mixed chunked-prefill / decode attention over the block pool.
+
+    q [B,Sq,H,hd]: row ``i`` of sequence ``b`` is the query at absolute
+    position ``ctx_lens[b] - q_lens[b] + i`` — a prefill chunk is the last
+    ``q_lens[b]`` tokens of a context of ``ctx_lens[b]`` tokens whose K/V
+    (including the chunk's own) already sit in the pool.  ``q_lens[b] == 1``
+    degenerates to plain paged decode.  Rows ``i >= q_lens[b]`` are padding;
+    they attend over the full context (mask ``t < ctx``) so the output is
+    deterministic, but callers discard them.  Sentinel block-table entries
+    (``NB``) are clamped in-bounds; position masking keeps them inert.
+    """
+    B, Sq, H, hd = q.shape
+    NB, bs, KVH = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    G = H // KVH
+    bt = jnp.minimum(block_tables, NB - 1)
+    k = k_pool[bt].reshape(B, MB * bs, KVH, hd)
+    v = v_pool[bt].reshape(B, MB * bs, KVH, hd)
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_abs = (ctx_lens - q_lens)[:, None] + jnp.arange(Sq)[None]     # [B,Sq]
+    t = jnp.arange(MB * bs)
+    mask = (t[None, None, None, None, :] < ctx_lens[:, None, None, None, None]) \
+        & (t[None, None, None, None, :] <= q_abs[:, None, None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Sequential (exact) SSD recurrence.  x [B,S,H,P], dt [B,S,H], A [H],
     Bm/Cm [B,S,N] -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""

@@ -248,6 +248,79 @@ def paged_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
     return y, (k_pool, v_pool)
 
 
+def paged_chunk_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
+                                block_tables, chunk_block_ids, ctx_len,
+                                q_len):
+    """Chunked-prefill attention over the paged KV pool (one sequence).
+
+    x [1,C,D] is one prefill chunk — the last ``q_len`` (<= C) of the
+    sequence's first ``ctx_len`` tokens; ``positions`` [1,C] are their
+    absolute positions.  The chunk's k/v are scattered into the pool rows
+    ``chunk_block_ids`` [C/bs] first (``NB`` marks padding beyond the prompt
+    and CoW-shared prefix blocks — those writes drop), then the chunk
+    attends causally over the whole context through ``block_tables`` [1,MB]
+    via the mixed prefill/decode kernel.  Returns (y, (k_pool', v_pool')).
+    """
+    from repro.kernels import ops
+
+    B, C, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    bs = k_pool.shape[1]
+
+    q = linear(p["q"], x).reshape(B, C, H, hd)
+    k = linear(p["k"], x).reshape(B, C, KVH, hd)
+    v = linear(p["v"], x).reshape(B, C, KVH, hd)
+    rot_dim = int(cfg.resolved_head_dim * cfg.rope_fraction) // 2 * 2
+    if rot_dim:
+        cos, sin = rope_tables(positions, rot_dim)
+        q = apply_rope(q, cos, sin, rot_dim)
+        k = apply_rope(k, cos, sin, rot_dim)
+
+    k_pool = k_pool.at[chunk_block_ids].set(
+        k[0].reshape(C // bs, bs, KVH, hd).astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[chunk_block_ids].set(
+        v[0].reshape(C // bs, bs, KVH, hd).astype(v_pool.dtype), mode="drop")
+    NB = k_pool.shape[0]
+    o = ops.mixed_block_paged_attention(
+        q, k_pool, v_pool, jnp.minimum(block_tables, NB - 1),
+        jnp.reshape(ctx_len, (1,)), jnp.reshape(q_len, (1,)))
+    y = linear(p["o"], o.reshape(B, C, H * hd))
+    return y, (k_pool, v_pool)
+
+
+def chunk_attention_apply(cfg, p, x, positions, *, k_row, v_row, start):
+    """Chunked-prefill attention over a slot-contiguous dense cache row.
+
+    x [1,C,D] is one prefill chunk at absolute positions ``positions``
+    [1,C] (= start..start+C-1); k_row/v_row [1,S_max,KVH,hd] is the slot's
+    cache row.  The chunk's k/v are written at [start, start+C) first, then
+    the chunk attends causally over the row — position masking keeps stale
+    rows beyond each query's position inert, exactly as monolithic prefill
+    masks its padding.  Returns (y, (k_row', v_row')).
+    """
+    B, C, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    S_max = k_row.shape[1]
+
+    q = linear(p["q"], x).reshape(B, C, H, hd)
+    k = linear(p["k"], x).reshape(B, C, KVH, hd)
+    v = linear(p["v"], x).reshape(B, C, KVH, hd)
+    rot_dim = int(cfg.resolved_head_dim * cfg.rope_fraction) // 2 * 2
+    if rot_dim:
+        cos, sin = rope_tables(positions, rot_dim)
+        q = apply_rope(q, cos, sin, rot_dim)
+        k = apply_rope(k, cos, sin, rot_dim)
+
+    k_row = jax.lax.dynamic_update_slice(k_row, k.astype(k_row.dtype),
+                                         (0, start, 0, 0))
+    v_row = jax.lax.dynamic_update_slice(v_row, v.astype(v_row.dtype),
+                                         (0, start, 0, 0))
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
+    y = mha(q, k_row, v_row, q_pos=positions, kv_pos=kv_pos, causal=True,
+            window=cfg.attn_window)
+    return linear(p["o"], y.reshape(B, C, H * hd)), (k_row, v_row)
+
+
 # ----------------------------------------------------------------------- mlp
 
 def mlp_init(rng, d_model, d_ff, dtype, gated=True):

@@ -418,6 +418,132 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
     return logits, new_cache
 
 
+def chunk_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs per-chunk-appendable KV with explicit position
+    masking — the same family the paged layout covers (dense + MoE standard
+    attention), for both KV layouts; DESIGN.md §8."""
+    return (cfg.has_decode and cfg.arch_type in ("dense", "moe")
+            and not cfg.use_mla and cfg.attn_window is None)
+
+
+def paged_chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache,
+                             start, length, block_tables, chunk_block_ids,
+                             *, parallel=None):
+    """One chunked-prefill step for a single sequence over the paged pool.
+
+    tokens [1,C] — one prompt chunk at absolute positions start..start+C-1
+    (rows at or beyond the prompt length are padding); ``start`` scalar =
+    chunk offset (block-aligned); ``length`` scalar = context tokens after
+    this chunk (= min(start+C, prompt_len)); block_tables [1,MB] = the
+    sequence's full table; chunk_block_ids [C/bs] = pool rows receiving this
+    chunk's k/v (NB for padding/CoW-shared rows -> dropped).  Returns
+    (logits [1,V] at position ``length-1``, cache') — the final chunk's
+    logits sample the first output token, exactly like monolithic prefill.
+    """
+    from repro.models.layers import paged_chunk_attention_apply
+
+    C = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = start + jnp.broadcast_to(jnp.arange(C)[None], (1, C))
+    q_len = length - start
+    moe = cfg.is_moe
+
+    def block(bp, x, kp, vp):
+        h = apply_norm(bp["ln1"], x, cfg.norm_type)
+        a, (kp, vp) = paged_chunk_attention_apply(
+            cfg, bp["attn"], h, positions, k_pool=kp, v_pool=vp,
+            block_tables=block_tables, chunk_block_ids=chunk_block_ids,
+            ctx_len=length, q_len=q_len)
+        x = x + a
+        h = apply_norm(bp["ln2"], x, cfg.norm_type)
+        y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
+                         moe=moe and "moe" in bp,
+                         moe_pool=params.get("moe_pool"))
+        return x + y, kp, vp
+
+    nk = cfg.first_k_dense if moe else 0
+    new_k, new_v = [], []
+    for i in range(nk):
+        x, kp, vp = block(params["dense_prefix"][i], x,
+                          cache["k"][i], cache["v"][i])
+        new_k.append(kp)
+        new_v.append(vp)
+
+    def body(x, inp):
+        bp, kp, vp = inp
+        x, kp, vp = block(bp, x, kp, vp)
+        return x, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                         cache["k"][nk:], cache["v"][nk:]))
+    if nk:
+        ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
+        vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
+    new_cache = {"k": ks, "v": vs}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    last = jax.lax.dynamic_index_in_dim(x, q_len - 1, axis=1, keepdims=False)
+    logits = linear(params["lm_head"], last)
+    return logits, new_cache
+
+
+def chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache,
+                       start, length, slot, *, parallel=None):
+    """Dense-layout twin of :func:`paged_chunk_prefill_step`: the chunk's
+    k/v land in slot row ``slot`` of the slot-contiguous cache
+    {'k','v': [L,B,S_max,KVH,hd]} at [start, start+C), and the chunk attends
+    causally over the row.  Returns (logits [1,V] at ``length-1``, cache').
+    """
+    from repro.models.layers import chunk_attention_apply
+
+    C = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = start + jnp.broadcast_to(jnp.arange(C)[None], (1, C))
+    q_len = length - start
+    moe = cfg.is_moe
+
+    def block(bp, x, kfull, vfull):
+        k_row = jax.lax.dynamic_slice_in_dim(kfull, slot, 1, axis=0)
+        v_row = jax.lax.dynamic_slice_in_dim(vfull, slot, 1, axis=0)
+        h = apply_norm(bp["ln1"], x, cfg.norm_type)
+        a, (k_row, v_row) = chunk_attention_apply(
+            cfg, bp["attn"], h, positions, k_row=k_row, v_row=v_row,
+            start=start)
+        kfull = jax.lax.dynamic_update_slice_in_dim(kfull, k_row, slot, axis=0)
+        vfull = jax.lax.dynamic_update_slice_in_dim(vfull, v_row, slot, axis=0)
+        x = x + a
+        h = apply_norm(bp["ln2"], x, cfg.norm_type)
+        y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
+                         moe=moe and "moe" in bp,
+                         moe_pool=params.get("moe_pool"))
+        return x + y, kfull, vfull
+
+    nk = cfg.first_k_dense if moe else 0
+    new_k, new_v = [], []
+    for i in range(nk):
+        x, kf, vf = block(params["dense_prefix"][i], x,
+                          cache["k"][i], cache["v"][i])
+        new_k.append(kf)
+        new_v.append(vf)
+
+    def body(x, inp):
+        bp, kf, vf = inp
+        x, kf, vf = block(bp, x, kf, vf)
+        return x, (kf, vf)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                         cache["k"][nk:], cache["v"][nk:]))
+    if nk:
+        ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
+        vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
+    new_cache = {"k": ks, "v": vs}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    last = jax.lax.dynamic_index_in_dim(x, q_len - 1, axis=1, keepdims=False)
+    logits = linear(params["lm_head"], last)
+    return logits, new_cache
+
+
 def _cache_slot(cfg, lengths):
     """KV write slot for each sequence (ring-buffered under attn_window)."""
     if cfg.attn_window is None:

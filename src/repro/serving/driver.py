@@ -50,6 +50,7 @@ from repro.core.coordinator import LoadEstimator, ScalingPolicy
 from repro.core.costmodel import DEFAULT_HW, HardwareModel, plan_cost
 from repro.core.scaling_plan import STRATEGIES, placement
 from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
+from repro.serving.metrics import latency_percentiles
 from repro.serving.workload import Request, merge_arrivals
 
 
@@ -244,6 +245,12 @@ class DriverEvent:
     overlap_eff: Optional[float] = None
     migrated_blocks: Optional[int] = None
     migration_bytes: Optional[int] = None
+    # serving-latency snapshot at decision time (finished requests so far;
+    # NaN until the first finish): metrics.latency_percentiles
+    ttft_p50: Optional[float] = None
+    ttft_p99: Optional[float] = None
+    itl_p50: Optional[float] = None
+    itl_p99: Optional[float] = None
 
 
 class ClusterDriver:
@@ -457,7 +464,8 @@ class ClusterDriver:
                             kv_util=(kv or {}).get("utilization"),
                             preemptions=int((kv or {}).get(
                                 "preemptions", 0)),
-                            staging=self._staging))
+                            staging=self._staging,
+                            **latency_percentiles(self.finished)))
                         self.task = self.backend.start_scale(target)
                         if cfgd.prewarm_next and decision == "up" \
                                 and not self._disjoint:

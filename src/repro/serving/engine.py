@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import OrderedDict
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -47,6 +48,8 @@ from repro.core.topology import ElasticConfig
 from repro.distributed.sharding import ParallelCtx
 from repro.models import model as M
 from repro.serving.kv_blocks import KVBlockManager, MigrationTicket
+from repro.serving.scheduler import (PrefillJob, TokenBudgetScheduler,
+                                     prefix_skip)
 
 
 def engine_parallel_ctx(mesh) -> ParallelCtx:
@@ -119,6 +122,32 @@ def _paged_prefill_fn(mcfg: ModelConfig, parallel, params, cache, tokens,
     return first, cache
 
 
+def _chunk_prefill_fn(mcfg: ModelConfig, parallel, params, cache, tokens,
+                      start, length, slot):
+    """One dense-KV prefill chunk: tokens [1, C] are prompt positions
+    [start, start+C) of cache row ``slot``; ``length`` is the prompt length
+    covered so far (start + valid tokens in this chunk).  The returned token
+    is the argmax at the last valid position — only meaningful on the final
+    chunk (continuous batching, serving/scheduler.py)."""
+    logits, cache = M.chunk_prefill_step(mcfg, params, tokens, cache, start,
+                                         length, slot, parallel=parallel)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+    return first, cache
+
+
+def _paged_chunk_prefill_fn(mcfg: ModelConfig, parallel, params, cache,
+                            tokens, start, length, block_tables, chunk_ids):
+    """One paged prefill chunk: the chunk's KV scatters into pool rows
+    ``chunk_ids`` (NB sentinel = padding or CoW-shared block; dropped) and
+    attention reads the whole context through ``block_tables`` [1, MB] via
+    the mixed prefill/decode kernel."""
+    logits, cache = M.paged_chunk_prefill_step(mcfg, params, tokens, cache,
+                                               start, length, block_tables,
+                                               chunk_ids, parallel=parallel)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+    return first, cache
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def _cow_copy(cache, src, dst):
     """Copy pool block row ``src`` -> ``dst`` in every layer of every pool
@@ -140,6 +169,9 @@ class SlotState:
     # slot is the migration's destination and must not admit anything else
     migrating: bool = False
     reserved: bool = False
+    # chunked prefill: admitted but not fully prefilled — occupies the slot
+    # (and its KV blocks) but is excluded from decode until the final chunk
+    prefilling: bool = False
 
 
 @dataclasses.dataclass
@@ -160,12 +192,31 @@ class InferenceEngine:
     partitions, so surviving tables need no translation).
     """
 
+    #: max lazily-compiled prefill buckets retained (satellite fix: the
+    #: bucket cache used to grow without bound as preemption resumes pushed
+    #: effective prompt lengths through ever-new buckets — each entry is a
+    #: full XLA executable, and via the IMM's aliased ``compiled`` dict the
+    #: leak outlived rebinds; AOT-precompiled buckets are never evicted)
+    MAX_LAZY_PREFILL = 8
+
     def __init__(self, mcfg: ModelConfig, *, batch_per_replica: int,
-                 max_len: int, prefill_bucket: int = 64):
+                 max_len: int, prefill_bucket: int = 64,
+                 prefill_chunk: int = 0,
+                 prefill_budget: Optional[int] = None):
         self.mcfg = mcfg
         self.batch_per_replica = batch_per_replica
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
+        # continuous batching: >0 splits prefill into fixed `prefill_chunk`-
+        # token buckets interleaved with decode ticks under a per-tick token
+        # budget (serving/scheduler.py); 0 = monolithic prefill at admission
+        self.prefill_chunk = prefill_chunk
+        self.scheduler = (TokenBudgetScheduler(prefill_chunk, prefill_budget)
+                          if prefill_chunk > 0 else None)
+        self._prefilling: List[PrefillJob] = []       # FIFO, admission order
+        # slot -> (full prompt, resumed): host-side context for chunk jobs
+        self._chunk_ctx: Dict[int, Tuple[np.ndarray, bool]] = {}
+        self._lazy_prefill: "OrderedDict[str, None]" = OrderedDict()
         self.cfg: Optional[ElasticConfig] = None
         self.params = None
         self.cache = None
@@ -211,10 +262,15 @@ class InferenceEngine:
         self.slots = [SlotState() for _ in range(n)]
         self.lengths = np.zeros((n,), np.int32)
         self.tokens = np.zeros((n,), np.int32)
+        if self.prefill_chunk:
+            assert M.chunk_prefill_supported(self.mcfg), \
+                "chunked prefill unsupported for this model config"
         if self.paged:
             bs = self.kv.block_size
             assert self.max_len % bs == 0 and self.prefill_bucket % bs == 0, \
                 "max_len and prefill buckets must be block-size multiples"
+            assert self.prefill_chunk % bs == 0, \
+                "prefill_chunk must be a block-size multiple (paged KV)"
             # padding rows hold the NB sentinel (never block id 0, which is
             # a valid pool row); NB tracks the *current* pool size, so
             # tables are rebuilt from the block manager on every rebind
@@ -229,6 +285,14 @@ class InferenceEngine:
                     and self.slots[i].active:
                 tbl = self.kv.block_table(self.slots[i].rid)
                 self.block_tables[i, :len(tbl)] = tbl
+        # chunk jobs survive rebinds slot-for-slot (scale-down migrates or
+        # drains their slots first, so none can reference a dropped slot)
+        self._prefilling = [j for j in self._prefilling if j.slot < n]
+        self._chunk_ctx = {s: c for s, c in self._chunk_ctx.items() if s < n}
+        # the new instance's compiled dict may not carry the old lazily-
+        # compiled buckets; keep LRU bookkeeping consistent with it
+        self._lazy_prefill = OrderedDict(
+            (k, None) for k in self._lazy_prefill if k in compiled)
 
     def free_slots(self) -> List[int]:
         lim = self.admit_limit if self.admit_limit is not None else len(self.slots)
@@ -293,7 +357,31 @@ class InferenceEngine:
         return self.kv.can_allocate(len(full) + 1, self._partition(slot),
                                     tokens=[int(t) for t in full])
 
+    def preferred_slots(self, req, prompt: np.ndarray,
+                        free: List[int]) -> List[int]:
+        """Prefix-cache-aware admission order: free slots sorted so
+        partitions already holding the longest registered prefix of this
+        prompt come first — binding there turns the shared prefix into a
+        refcount bump plus a prefill skip instead of recomputation (sharing
+        is partition-local, kv_blocks.py).  Ties keep slot order, so the
+        dense layout and prefix-free workloads are byte-identical to the
+        old first-free-slot policy."""
+        if not self.paged or len(free) <= 1:
+            return list(free)
+        full = self._full_prompt(req, prompt)
+        toks = [int(t) for t in full]
+        score = {p: len(self.kv.prefix_match_blocks(p, toks))
+                 for p in {self._partition(s) for s in free}}
+        return sorted(free, key=lambda s: (-score[self._partition(s)], s))
+
     def start_request(self, req, prompt: np.ndarray, slot: int):
+        """Admit ``req`` into ``slot``.  Monolithic mode (prefill_chunk=0)
+        runs the whole padded prompt here and returns the first generated
+        token; chunked mode only allocates KV + enqueues a PrefillJob and
+        returns None — the first token arrives from ``decode_tick`` when the
+        final chunk lands."""
+        if self.prefill_chunk:
+            return self._start_request_chunked(req, prompt, slot)
         resume = req.rid in self._resume_rids
         full = self._full_prompt(req, prompt)
         S = len(full)
@@ -350,6 +438,41 @@ class InferenceEngine:
             self._finished_at_admission.append(req.rid)
         return first
 
+    def _start_request_chunked(self, req, prompt: np.ndarray, slot: int):
+        """Chunked admission: no model compute runs here.  Paged KV is
+        allocated up-front (occupancy-gated exactly like the monolithic
+        path, so ``can_admit`` is unchanged) but prefix chains register only
+        as chunks are written (``register_written``) — a matching arrival
+        must never bind to blocks whose contents are still pending.  The
+        job starts past the CoW-shared prefix (``prefix_skip``), charging
+        only the non-shared tail against the token budget."""
+        resume = req.rid in self._resume_rids
+        full = self._full_prompt(req, prompt)
+        S = len(full)
+        start = 0
+        if self.paged:
+            alloc = self.kv.allocate(req.rid, S,
+                                     partition=self._partition(slot),
+                                     priority=getattr(req, "priority", 0),
+                                     tokens=[int(t) for t in full],
+                                     register=False)
+            self.block_tables[slot, :] = self.kv.num_blocks
+            self.block_tables[slot, :len(alloc.blocks)] = alloc.blocks
+            start = prefix_skip(alloc.num_shared, self.kv.block_size, S)
+        produced = len(self.generated.get(req.rid, [])) if resume else 0
+        remaining = req.output_len - produced - 1
+        self.slots[slot] = SlotState(rid=req.rid, remaining=remaining,
+                                     active=True, prefilling=True,
+                                     priority=getattr(req, "priority", 0))
+        self.lengths[slot] = S
+        if resume:
+            self._resume_rids.discard(req.rid)
+        self._chunk_ctx[slot] = (full,
+                                 resume and bool(self.generated.get(req.rid)))
+        self._prefilling.append(PrefillJob(slot=slot, rid=req.rid,
+                                           pos=start, total=S))
+        return None
+
     def drain_finished_at_admission(self) -> List[int]:
         """Requests whose prefill produced their final token this tick."""
         out, self._finished_at_admission = self._finished_at_admission, []
@@ -358,23 +481,65 @@ class InferenceEngine:
     def _prefill(self, S_pad: int):
         """Compiled prefill for a bucket; paged mode lazily compiles unseen
         buckets (preemption resume grows effective prompts past the
-        pre-compiled set)."""
+        pre-compiled set).  Lazy buckets are LRU-bounded at
+        ``MAX_LAZY_PREFILL`` — AOT-precompiled buckets are never evicted
+        (regression test: tests/test_paged_engine.py)."""
         key = f"prefill_{S_pad}"
+        if key in self.compiled:
+            if key in self._lazy_prefill:
+                self._lazy_prefill.move_to_end(key)
+            return self.compiled[key]
+        assert self.paged, f"no compiled {key}"
+        parallel = engine_parallel_ctx(self.mesh)
+        repl = NamedSharding(self.mesh, P())
+        cache_out = jax.tree.map(lambda x: x.sharding, self.cache)
+        pf = jax.jit(partial(_paged_prefill_fn, self.mcfg, parallel),
+                     donate_argnums=(1,),
+                     out_shardings=(repl, cache_out))
+        bs = self.kv.block_size
+        self.compiled[key] = pf.lower(
+            as_sds(self.params), as_sds(self.cache),
+            jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl),
+            jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
+            jax.ShapeDtypeStruct((S_pad // bs,), jnp.int32,
+                                 sharding=repl)).compile()
+        self._lazy_prefill[key] = None
+        while len(self._lazy_prefill) > self.MAX_LAZY_PREFILL:
+            old, _ = self._lazy_prefill.popitem(last=False)
+            self.compiled.pop(old, None)
+        return self.compiled[key]
+
+    def _chunk_prefill(self):
+        """Compiled chunk-prefill executable (one bucket: ``prefill_chunk``
+        tokens).  AOT-compiled by ``compile_step_functions`` when the
+        instance was built with ``prefill_chunk``; compiled lazily here
+        otherwise (never evicted — there is exactly one chunk shape)."""
+        key = f"chunk_prefill_{self.prefill_chunk}"
         if key not in self.compiled:
-            assert self.paged, f"no compiled {key}"
             parallel = engine_parallel_ctx(self.mesh)
             repl = NamedSharding(self.mesh, P())
             cache_out = jax.tree.map(lambda x: x.sharding, self.cache)
-            pf = jax.jit(partial(_paged_prefill_fn, self.mcfg, parallel),
-                         donate_argnums=(1,),
-                         out_shardings=(repl, cache_out))
-            bs = self.kv.block_size
-            self.compiled[key] = pf.lower(
-                as_sds(self.params), as_sds(self.cache),
-                jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl),
-                jax.ShapeDtypeStruct((), jnp.int32, sharding=repl),
-                jax.ShapeDtypeStruct((S_pad // bs,), jnp.int32,
-                                     sharding=repl)).compile()
+            C = self.prefill_chunk
+
+            def sd(shape):
+                return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=repl)
+
+            if self.paged:
+                pf = jax.jit(
+                    partial(_paged_chunk_prefill_fn, self.mcfg, parallel),
+                    donate_argnums=(1,), out_shardings=(repl, cache_out))
+                bs = self.kv.block_size
+                self.compiled[key] = pf.lower(
+                    as_sds(self.params), as_sds(self.cache), sd((1, C)),
+                    sd(()), sd(()), sd((1, self.max_len // bs)),
+                    sd((C // bs,))).compile()
+            else:
+                pf = jax.jit(partial(_chunk_prefill_fn, self.mcfg, parallel),
+                             donate_argnums=(1,),
+                             out_shardings=(repl, cache_out))
+                self.compiled[key] = pf.lower(
+                    as_sds(self.params), as_sds(self.cache), sd((1, C)),
+                    sd(()), sd(()), sd(())).compile()
         return self.compiled[key]
 
     # -------------------------------------------------- paged bookkeeping
@@ -388,6 +553,12 @@ class InferenceEngine:
         """Evict a sequence under pool pressure: free its blocks, park the
         rid for the server to re-queue; it restarts in recompute mode."""
         s = self.slots[slot]
+        if s.prefilling:
+            # mid-prefill eviction: drop the chunk job — recompute mode
+            # restarts the prompt from scratch on re-admission
+            self._prefilling = [j for j in self._prefilling
+                                if j.slot != slot]
+            self._chunk_ctx.pop(slot, None)
         self.kv.preempt(s.rid)
         self.preemptions += 1
         self._resume_rids.add(s.rid)
@@ -530,6 +701,14 @@ class InferenceEngine:
             self.block_tables[dst, :] = NB
             self.block_tables[dst, :len(tbl)] = tbl
             self.block_tables[src, :] = NB
+            # a mid-prefill sequence resumes chunking on its survivor slot
+            # (chunk ids are re-derived from the committed block table at
+            # execution time, so the move is transparent to the job)
+            for j in self._prefilling:
+                if j.slot == src:
+                    j.slot = dst
+            if src in self._chunk_ctx:
+                self._chunk_ctx[dst] = self._chunk_ctx.pop(src)
 
     def cancel_migration(self, job: MigrationJob) -> None:
         """Abort an in-flight migration: the reservation unwinds, source
@@ -542,12 +721,104 @@ class InferenceEngine:
             if self.slots[dst].reserved:
                 self.slots[dst] = SlotState()
 
+    def _run_prefill_chunks(self) -> List[Tuple[int, int, bool]]:
+        """The tick's prefill phase (continuous batching): consume at most
+        ``prefill_budget`` prompt tokens as ``prefill_chunk``-token buckets
+        in admission order.  Chunk block ids are re-derived from the block
+        manager at execution time (not admission time) so live migration
+        re-homing is transparent.  Returns first-token events for jobs whose
+        final chunk landed this tick."""
+        for job in self._prefilling:
+            job.paused = self.slots[job.slot].migrating
+        plans = self.scheduler.plan(self._prefilling)
+        out: List[Tuple[int, int, bool]] = []
+        C = self.prefill_chunk
+        jobs = {j.slot: j for j in self._prefilling}
+        for plan in plans:
+            slot = plan.slot
+            job = jobs[slot]
+            full, resumed = self._chunk_ctx[slot]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :plan.take] = full[plan.start:plan.start + plan.take]
+            upto = plan.start + plan.take
+            with self._cache_lock:
+                if self.paged:
+                    bs = self.kv.block_size
+                    NB = self.kv.num_blocks
+                    sb = self.kv.seq(job.rid)
+                    j0 = plan.start // bs
+                    # pool rows this chunk writes: the NB sentinel drops
+                    # writes to padding, CoW-shared prefix blocks, and (on
+                    # the rounded-down prefix_skip start) recomputed rows
+                    ids = np.full((C // bs,), NB, np.int32)
+                    for k in range(C // bs):
+                        j = j0 + k
+                        if j < len(sb.blocks) and j >= sb.num_shared:
+                            ids[k] = sb.blocks[j]
+                    tbl = np.full((1, self.max_len // bs), NB, np.int32)
+                    bt = self.kv.block_table(job.rid)
+                    tbl[0, :len(bt)] = bt
+                    first, self.cache = self._chunk_prefill()(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(plan.start, jnp.int32),
+                        jnp.asarray(upto, jnp.int32),
+                        jnp.asarray(tbl), jnp.asarray(ids))
+                else:
+                    first, self.cache = self._chunk_prefill()(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(plan.start, jnp.int32),
+                        jnp.asarray(upto, jnp.int32),
+                        jnp.asarray(slot, jnp.int32))
+            job.pos = upto
+            if self.paged:
+                # written blocks become matchable for later arrivals
+                self.kv.register_written(job.rid, [int(t) for t in full],
+                                         upto)
+            if plan.final:
+                out.append(self._finish_prefill(slot, job, int(first),
+                                                resumed))
+        return out
+
+    def _finish_prefill(self, slot: int, job: PrefillJob, first: int,
+                        resumed: bool) -> Tuple[int, int, bool]:
+        """Final chunk landed: record the first generated token and move the
+        slot into the decode pool (it decodes this same tick — the same
+        cadence as monolithic admission, whose first decode follows the
+        admission-tick prefill immediately)."""
+        s = self.slots[slot]
+        s.prefilling = False
+        self._prefilling.remove(job)
+        self._chunk_ctx.pop(slot, None)
+        self.tokens[slot] = first
+        if resumed:
+            self.generated[s.rid].append(first)
+        else:
+            self.generated[s.rid] = [first]
+        fin = s.remaining <= 0
+        if fin:
+            # output_len 1 (or a resume with only its final token left):
+            # never reaches decode — reported through this tick's events
+            s.active = False
+            if self.paged:
+                self.kv.free(s.rid)
+        return (s.rid, first, fin)
+
     def decode_tick(self) -> List[Tuple[int, int, bool]]:
-        """One decode step for all runnable slots (active and not paused by
-        an in-flight migration — a migrating sequence's blocks are frozen
-        until the copies land, then it resumes on its survivor slot).
-        Returns [(rid, token, finished)] for slots that produced a token."""
-        runnable = [s.active and not s.migrating for s in self.slots]
+        """One engine tick.  With chunked prefill enabled the tick is a
+        token-budget schedule: first the prefill phase (at most
+        ``prefill_budget`` prompt tokens as fixed-size chunks, admission
+        order), then one decode step for all runnable slots — decode runs
+        every tick regardless of prefill backlog, which is the
+        no-starvation guarantee (serving/scheduler.py).  Runnable = active,
+        not mid-prefill, and not paused by an in-flight migration (a
+        migrating sequence's blocks are frozen until the copies land, then
+        it resumes on its survivor slot).  Returns [(rid, token, finished)]
+        for slots that produced a token; prefill completions come first."""
+        pre: List[Tuple[int, int, bool]] = []
+        if self.scheduler is not None and self._prefilling:
+            pre = self._run_prefill_chunks()
+        runnable = [s.active and not s.migrating and not s.prefilling
+                    for s in self.slots]
         if self.paged:
             # highest priority first, oldest first on ties: pressure evicts
             # from the low-priority/young end before it reaches them
@@ -557,9 +828,10 @@ class InferenceEngine:
             for slot in order:
                 if self.slots[slot].active:
                     self._ensure_append(slot)
-            runnable = [s.active and not s.migrating for s in self.slots]
+            runnable = [s.active and not s.migrating and not s.prefilling
+                        for s in self.slots]
         if not any(runnable):
-            return []
+            return pre
         active = np.array(runnable)
         self._step_count = getattr(self, "_step_count", 0) + 1
         rng = jax.random.key_data(jax.random.PRNGKey(self._step_count))
@@ -588,7 +860,7 @@ class InferenceEngine:
                 if self.paged:
                     self.kv.free(s.rid)
             out.append((s.rid, int(nxt[i]), fin))
-        return out
+        return pre + out
 
 
 # ------------------------------------------------------------- compilation
@@ -606,7 +878,8 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
                            prefill_buckets=(64,),
                            temperature: float = 0.0,
                            kv_mode: str = "dense",
-                           kv_block_size: int = 0
+                           kv_block_size: int = 0,
+                           prefill_chunk: int = 0
                            ) -> Tuple[Dict[str, Any], float]:
     """AOT-compile decode + prefill executables for an instance.
 
@@ -614,6 +887,8 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
     weights needed — pre-initialization works without the HMM, exactly the
     paper's CPU-standby instances, §4.5).  ``kv_mode='paged'`` compiles the
     block-table variants (cache_sds is then the pool layout).
+    ``prefill_chunk > 0`` additionally compiles the continuous-batching
+    chunk-prefill executable (one shape — the chunk bucket).
     Returns (executables, seconds).
     """
     t0 = time.perf_counter()
@@ -657,4 +932,28 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
                          out_shardings=(repl, cache_out))
             out[f"prefill_{S_pad}"] = pf.lower(
                 params_sds, cache_sds, toks, len_sd, len_sd).compile()
+    if prefill_chunk:
+        assert M.chunk_prefill_supported(mcfg), \
+            "chunked prefill unsupported for this model config"
+        C = prefill_chunk
+        toks = jax.ShapeDtypeStruct((1, C), jnp.int32, sharding=repl)
+        len_sd = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+        if paged:
+            assert C % kv_block_size == 0
+            MB = max_len // kv_block_size
+            pf = jax.jit(partial(_paged_chunk_prefill_fn, mcfg, parallel),
+                         donate_argnums=(1,),
+                         out_shardings=(repl, cache_out))
+            out[f"chunk_prefill_{C}"] = pf.lower(
+                params_sds, cache_sds, toks, len_sd, len_sd,
+                jax.ShapeDtypeStruct((1, MB), jnp.int32, sharding=repl),
+                jax.ShapeDtypeStruct((C // kv_block_size,), jnp.int32,
+                                     sharding=repl)).compile()
+        else:
+            pf = jax.jit(partial(_chunk_prefill_fn, mcfg, parallel),
+                         donate_argnums=(1,),
+                         out_shardings=(repl, cache_out))
+            out[f"chunk_prefill_{C}"] = pf.lower(
+                params_sds, cache_sds, toks, len_sd, len_sd,
+                len_sd).compile()
     return out, time.perf_counter() - t0

@@ -226,6 +226,32 @@ class KVBlockManager:
                 break
             h = hash((h, chunk))
 
+    def prefix_match_blocks(self, partition: int,
+                            tokens: Sequence[int]) -> List[int]:
+        """Public read-only prefix probe (no state change): the chain of
+        live registered blocks covering the leading chunks of ``tokens``.
+        Prefix-cache-aware admission ranks candidate partitions by this
+        length before binding a request to a slot (engine.preferred_slots)."""
+        return self._match_prefix(partition, tokens)
+
+    def register_written(self, seq: int, tokens: Sequence[int],
+                         upto: int) -> None:
+        """Register prefix chains for the first ``upto`` tokens of ``seq``'s
+        prompt — the chunked-prefill path, where a block only becomes
+        matchable once its KV is actually resident (registering at allocate
+        time, as the monolithic path does, would let a matching arrival bind
+        to blocks whose contents are still pending).  Only fully-written
+        blocks register until ``upto`` reaches the whole prompt, then the
+        partial tail registers too (the CoW-on-append case).  Idempotent."""
+        sb = self._seqs[seq]
+        upto = min(upto, len(tokens))
+        if upto >= len(tokens):
+            self._register_prefix(sb.partition, tokens, sb.blocks)
+        else:
+            nb = upto // self.block_size
+            self._register_prefix(sb.partition, tokens[:nb * self.block_size],
+                                  sb.blocks[:nb])
+
     def _unregister_block(self, block: int) -> None:
         key = self._block_prefix_key.pop(block, None)
         if key is None:
@@ -247,13 +273,16 @@ class KVBlockManager:
 
     def allocate(self, seq: int, num_tokens: int, *, partition: int = 0,
                  priority: int = 0,
-                 tokens: Optional[Sequence[int]] = None) -> SeqBlocks:
+                 tokens: Optional[Sequence[int]] = None,
+                 register: bool = True) -> SeqBlocks:
         """Blocks for a prompt of ``num_tokens`` tokens.  With ``tokens``
         (the prompt ids), leading blocks already resident for another live
         sequence in the same partition are *shared* (refcount bump, no
         allocation, no write) — copy-on-write happens lazily at ``append``.
-        Raises MemoryError when the partition's pool is dry (caller
-        preempts and retries)."""
+        ``register=False`` defers prefix registration (chunked prefill
+        registers progressively via ``register_written`` as chunks land —
+        an unwritten block must never be matchable).  Raises MemoryError
+        when the partition's pool is dry (caller preempts and retries)."""
         assert seq not in self._seqs, f"seq {seq} already allocated"
         need = self.blocks_needed(num_tokens)
         shared: List[int] = []
@@ -275,7 +304,7 @@ class KVBlockManager:
                        blocks=shared + fresh, num_tokens=num_tokens,
                        num_shared=len(shared))
         self._seqs[seq] = sb
-        if tokens is not None:
+        if tokens is not None and register:
             self._register_prefix(partition, tokens, sb.blocks)
         return sb
 

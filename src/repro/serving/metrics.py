@@ -53,6 +53,32 @@ def slo_attainment_timeline(reqs: Sequence[Request], slo: SLO,
     return ts, np.array(att)
 
 
+def iter_itls(reqs: Sequence[Request]) -> Iterable[float]:
+    """Inter-token latencies: consecutive ``token_times`` gaps across all
+    requests.  The real engine records wall-clock token times; the simulator
+    synthesizes them from its modelled decode rate plus prefill stalls —
+    either way ITL p99 is the headline continuous-batching metric (a
+    monolithic prefill stalls every running decode for the whole prompt,
+    chunked prefill bounds the stall at one chunk; serving/scheduler.py)."""
+    for r in reqs:
+        if r.token_times and len(r.token_times) > 1:
+            for a, b in zip(r.token_times, r.token_times[1:]):
+                yield b - a
+
+
+def latency_percentiles(reqs: Sequence[Request]) -> dict:
+    """TTFT/ITL p50/p99 snapshot (NaN when no samples) — the scale-event
+    annotation (DriverEvent / SimScaleEvent) and the summarize core."""
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    itls = list(iter_itls(reqs))
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    return {"ttft_p50": pct(ttfts, 50), "ttft_p99": pct(ttfts, 99),
+            "itl_p50": pct(itls, 50), "itl_p99": pct(itls, 99)}
+
+
 def throughput_rps(reqs: Sequence[Request], t0: float, t1: float) -> float:
     n = sum(1 for r in reqs if r.finish_s is not None and t0 <= r.finish_s < t1)
     return n / max(t1 - t0, 1e-9)
@@ -84,12 +110,15 @@ def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
               backend=None) -> dict:
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
     tpots = [r.tpot for r in reqs if r.tpot is not None]
+    lat = latency_percentiles(reqs)
     out = {
         "n": len(reqs),
         "finished": sum(1 for r in reqs if r.finish_s is not None),
         "ttft_p50": float(np.median(ttfts)) if ttfts else float("nan"),
         "ttft_p99": float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
         "tpot_p50": float(np.median(tpots)) if tpots else float("nan"),
+        "itl_p50": lat["itl_p50"],
+        "itl_p99": lat["itl_p99"],
     }
     if slo:
         out["slo_attainment"] = slo_attainment(reqs, slo)

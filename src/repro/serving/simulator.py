@@ -45,6 +45,8 @@ from repro.serving.driver import (ScalePhase, admission_during_scale,
                                   projected_migration_blocks,
                                   transition_cost)
 from repro.serving.kv_blocks import blocks_for as kv_blocks_for
+from repro.serving.metrics import latency_percentiles
+from repro.serving.scheduler import PrefillJob, TokenBudgetScheduler
 from repro.serving.workload import Request, merge_arrivals
 
 
@@ -117,6 +119,12 @@ class SimScaleEvent:
     # driver.projected_migration_blocks); 0 for scale-up / drain mode
     migrated_blocks: int = 0
     migration_bytes: int = 0
+    # serving-latency snapshot at command time (finished requests so far;
+    # NaN until the first finish): metrics.latency_percentiles
+    ttft_p50: float = float("nan")
+    ttft_p99: float = float("nan")
+    itl_p50: float = float("nan")
+    itl_p99: float = float("nan")
 
 
 class SimScalingTask:
@@ -176,7 +184,9 @@ class ServingSimulator:
                  preinit: bool = True, kv_mode: str = "dense",
                  pool_blocks: Optional[int] = None,
                  expert_mode: str = "dense", staging: str = "serial",
-                 scaledown: str = "migrate"):
+                 scaledown: str = "migrate",
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
@@ -225,6 +235,22 @@ class ServingSimulator:
         if strategy == "colocated":
             self.perf = dataclasses.replace(self.perf,
                                             sys_eff=self.perf.sys_eff * 0.6)
+        # continuous batching (mirrors InferenceEngine.prefill_chunk):
+        #   None -> legacy instant-prefill admission (bit-identical to the
+        #           pre-chunking simulator; no token_times synthesized);
+        #   0    -> monolithic prefill with decode-stall modelling: admitting
+        #           a prompt stalls every running decode for the whole
+        #           prefill_s(prompt_len) — the ITL spike chunking removes;
+        #   > 0  -> chunked prefill through the SAME TokenBudgetScheduler
+        #           the real engine runs (serving/scheduler.py), stalling
+        #           decodes one token-budget chunk at a time.
+        self.prefill_chunk = prefill_chunk
+        self.scheduler = (TokenBudgetScheduler(prefill_chunk, prefill_budget)
+                          if prefill_chunk else None)
+        self._prefilling: List[PrefillJob] = []
+        self._prefill_reqs: Dict[int, Request] = {}
+        self._itl_base: Dict[int, float] = {}
+        self._stall_gaps: Dict[int, List[float]] = {}
         self._pending: List[Request] = []
         self._pi = 0
         self.t = 0.0
@@ -280,7 +306,8 @@ class ServingSimulator:
             t_command=self.t, t_ready=t_ready,
             downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,
             old_ndev=self.ndev, new_ndev=target.ndev, cost=cost,
-            migrated_blocks=mig_blocks, migration_bytes=mig_bytes)
+            migrated_blocks=mig_blocks, migration_bytes=mig_bytes,
+            **latency_percentiles(self.finished))
         self.events.append(event)
         if cost.downtime_s:
             # in-flight requests are stalled for the whole outage (§3 L2)
@@ -288,14 +315,16 @@ class ServingSimulator:
                              s + cost.scale_time_s)
                             for f, rid, r, s in self.running]
             heapq.heapify(self.running)
+            if self.prefill_chunk is not None:
+                for _, rid, _, _ in self.running:
+                    self._stall_gaps.setdefault(rid, []).append(
+                        cost.scale_time_s)
         elif cost.decode_stall_s:
             # decode stalls while staging contends for HBM/links: serial
             # staging blocks a serve-loop quantum per increment (the whole
             # transfer time); overlapped staging only the contention share.
             # Modelled as a finish-time shift of the in-flight requests.
-            self.running = [(f + cost.decode_stall_s, rid, r, s)
-                            for f, rid, r, s in self.running]
-            heapq.heapify(self.running)
+            self._stall_running(cost.decode_stall_s)
         self.scale = SimScalingTask(self, target, event)
         return self.scale
 
@@ -337,8 +366,13 @@ class ServingSimulator:
         return req.prompt_len + int(req.output_len * frac)
 
     def used_blocks(self) -> int:
-        return sum(self.perf.blocks_for(self._tokens_now(f, r, s))
+        live = sum(self.perf.blocks_for(self._tokens_now(f, r, s))
                    for f, _, r, s in self.running)
+        # chunked mode: sequences mid-prefill already hold their prompt's
+        # blocks (the engine allocates at admission and registers chunks as
+        # they are written; serving/kv_blocks.py)
+        live += sum(self.perf.blocks_for(j.total) for j in self._prefilling)
+        return live
 
     def _preempt_for_pressure(self, pool: int) -> None:
         """Evict lowest-priority / youngest running requests until the pool
@@ -351,7 +385,38 @@ class ServingSimulator:
             self.running.remove(victim)
             heapq.heapify(self.running)
             self.queue.insert(0, victim[2])
+            self._itl_base.pop(victim[2].rid, None)
+            self._stall_gaps.pop(victim[2].rid, None)
             self.preemptions += 1
+
+    def _stall_running(self, delta: float) -> None:
+        """Shift every in-flight finish by ``delta`` (a modelled decode
+        stall — prefill compute or staging contention) and record the gap
+        per request so synthesized token_times carry the ITL spike."""
+        if delta <= 0 or not self.running:
+            return
+        self.running = [(f + delta, rid, r, s)
+                        for f, rid, r, s in self.running]
+        heapq.heapify(self.running)
+        if self.prefill_chunk is not None:
+            for _, rid, _, _ in self.running:
+                self._stall_gaps.setdefault(rid, []).append(delta)
+
+    def _synth_token_times(self, req: Request) -> None:
+        """Reconstruct per-token wall-clock times from the modelled decode
+        rate plus any recorded stall gaps, so ``metrics.iter_itls`` sees
+        the same ITL surface the real engine measures."""
+        base = self._itl_base.pop(req.rid, None)
+        gaps = self._stall_gaps.pop(req.rid, [])
+        if base is None or req.first_token_s is None:
+            return
+        n = max(req.output_len - 1, 0)
+        deltas = [base + g for g in gaps[:n]]
+        deltas += [base] * (n - len(deltas))
+        times = [req.first_token_s]
+        for d in deltas:
+            times.append(times[-1] + d)
+        req.token_times = times
 
     def scaling_summary(self) -> Optional[Dict[str, float]]:
         """Modelled staging-overlap metrics over completed scale events
@@ -380,7 +445,7 @@ class ServingSimulator:
         return {"num_blocks": pool, "used_blocks": used,
                 "utilization": used / max(pool, 1),
                 "preemptions": self.preemptions,
-                "live_seqs": len(self.running),
+                "live_seqs": len(self.running) + len(self._prefilling),
                 "block_bytes": self.perf._kv_block_bytes,
                 "migrated_blocks": sum(e.migrated_blocks
                                        for e in self.events)}
@@ -401,28 +466,73 @@ class ServingSimulator:
                 self._preempt_for_pressure(pool)
                 used = self.used_blocks()
             # admit from queue
-            while admit and self.queue and len(self.running) < slot_cap:
+            while admit and self.queue \
+                    and len(self.running) + len(self._prefilling) < slot_cap:
                 req = self.queue[0]
                 if self.kv_mode == "paged":
                     need = self.perf.blocks_for(req.prompt_len + 1)
                     if used + need > pool:
                         break
                     used += need
-                elif len(self.running) >= self.perf.max_batch(ndev,
-                                                              self.kv_frac):
+                elif (len(self.running) + len(self._prefilling)
+                      >= self.perf.max_batch(ndev, self.kv_frac)):
                     break
                 self.queue.pop(0)
+                if self.scheduler is not None:
+                    # chunked: prefill advances chunk-by-chunk below; the
+                    # first token only lands when the last chunk does
+                    self._prefilling.append(PrefillJob(
+                        slot=req.rid, rid=req.rid, pos=0,
+                        total=req.prompt_len))
+                    self._prefill_reqs[req.rid] = req
+                    continue
                 t_first = self.t + self.perf.prefill_s(req.prompt_len, ndev)
                 if req.first_token_s is None:
                     req.first_token_s = t_first
-                dur = req.output_len * self.perf.decode_step_s(
+                base = self.perf.decode_step_s(
                     max(len(self.running) + 1, 1), ndev)
+                if self.prefill_chunk == 0:
+                    # monolithic prefill blocks the serve loop: every
+                    # running decode stalls for the whole prompt — the
+                    # long-tail ITL spike chunked prefill bounds
+                    self._stall_running(t_first - self.t)
+                    self._itl_base[req.rid] = base
                 heapq.heappush(self.running,
-                               (t_first + dur, req.rid, req, t_first))
+                               (t_first + req.output_len * base,
+                                req.rid, req, t_first))
+            # chunked prefill: run this quantum's token-budget plan (the
+            # SAME scheduler.plan the engine tick uses).  Each chunk's
+            # compute stalls the running decodes for one chunk — not a
+            # whole prompt — and a job landing its final chunk starts
+            # decoding immediately (engine._run_prefill_chunks cadence).
+            if self.scheduler is not None and self._prefilling:
+                plans = self.scheduler.plan(self._prefilling)
+                jobs = {j.rid: j for j in self._prefilling}
+                self._stall_running(sum(self.perf.prefill_s(p.take, ndev)
+                                        for p in plans))
+                done_t = self.t
+                for plan in plans:
+                    done_t += self.perf.prefill_s(plan.take, ndev)
+                    job = jobs[plan.rid]
+                    job.pos = plan.start + plan.take
+                    if plan.final:
+                        self._prefilling.remove(job)
+                        req = self._prefill_reqs.pop(plan.rid)
+                        if req.first_token_s is None:
+                            req.first_token_s = done_t
+                        base = self.perf.decode_step_s(
+                            max(len(self.running) + 1, 1), ndev)
+                        self._itl_base[req.rid] = base
+                        heapq.heappush(
+                            self.running,
+                            (done_t + req.output_len * base,
+                             req.rid, req, done_t))
             # complete requests
             while self.running and self.running[0][0] <= self.t:
                 _, _, req, _ = heapq.heappop(self.running)
                 req.finish_s = self.t
+                if self.prefill_chunk is not None:
+                    self._synth_token_times(req)
                 done.append(req)
         self.finished.extend(done)
         return done
@@ -454,7 +564,7 @@ class ServingSimulator:
         if self.kv_mode == "paged":
             return self.used_blocks() / max(self.pool_blocks(), 1)
         cap = self.perf.max_batch(self.ndev, self.kv_frac)
-        return len(self.running) / max(cap, 1)
+        return (len(self.running) + len(self._prefilling)) / max(cap, 1)
 
     def current_config(self) -> ElasticConfig:
         return ElasticConfig(self.ndev // self.tp, self.tp,

@@ -1,0 +1,234 @@
+"""Continuous batching with chunked prefill (real JAX, subprocess):
+
+* bit-identical-token parity, chunked vs monolithic, over the full
+  (dense | pooled experts) x (dense | paged KV) matrix — including a
+  request whose prefill token is its only token,
+* prefix-cache-aware admission under chunked deferred registration:
+  staggered shared-prefix arrivals still share blocks, tokens still match
+  the monolithic run bit for bit,
+* a scale-up committing while prompts are mid-chunk: jobs keep chunking
+  through the staging window and every token matches the unscaled run,
+* a migrate-mode scale-down landing mid-chunk: jobs in doomed slots pause
+  while their blocks move, resume re-homed on survivors, no recompute,
+* recompute-preemption under pool pressure with chunked admission.
+
+Mirrors the PR 4/5 determinism-matrix idiom (tests/test_paged_engine.py,
+tests/test_scaledown_migration.py).
+"""
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+CHUNK_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request, shared_prefix_workload
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def build(kv_mode, expert_mode="dense", chunk=0, budget=None, boot=c4, **kw):
+    kw.setdefault("prefill_buckets", (32, 64, 96))
+    kw.setdefault("batch_per_replica", 4)
+    kw.setdefault("max_len", 128)
+    srv = ElasticServer(MCFG, tp=2,
+                        seed=0, kv_mode=kv_mode, kv_block_size=16,
+                        expert_mode=expert_mode, prefill_chunk=chunk,
+                        prefill_budget=budget, **kw)
+    if boot is not None:
+        srv.boot(boot)
+    return srv
+
+def drive(srv, reqs, tmax=3000):
+    pending = sorted(reqs, key=lambda r: r.arrival_s)
+    t, n, i = 0.0, 0, 0
+    while any(r.finish_s is None for r in reqs):
+        while i < len(pending) and pending[i].arrival_s <= t:
+            srv.submit(pending[i]); i += 1
+        srv.tick(t); t += .1; n += 1
+        assert n < tmax, [r.finish_s for r in reqs]
+    return srv
+
+def mixed_reqs(seed=0):
+    # prompt lengths straddle chunk (32) and block (16) boundaries; rid 3
+    # has output_len 1 (its first token is its only token — the
+    # finished-at-prefill path must still report completion)
+    rng = np.random.default_rng(seed)
+    lens = [10, 37, 90, 16, 64, 45]
+    outs = [8, 12, 16, 1, 10, 6]
+    return [Request(i, 0.2 * i, L, o, prompt=rng.integers(0, 128, L))
+            for i, (L, o) in enumerate(zip(lens, outs))]
+"""
+
+
+@pytest.mark.slow
+def test_chunked_matches_monolithic_matrix():
+    """Chunked prefill must be a pure scheduling change: for every
+    (expert layout) x (KV layout) combination the generated tokens equal
+    the monolithic engine's bit for bit."""
+    out = run_with_devices(CHUNK_COMMON + """
+for kv in ("dense", "paged"):
+    for em in ("dense", "pooled"):
+        mono = drive(build(kv, em), mixed_reqs())
+        chnk = drive(build(kv, em, chunk=32, budget=64), mixed_reqs())
+        assert set(mono.engine.generated) == set(chnk.engine.generated)
+        for rid in mono.engine.generated:
+            assert mono.engine.generated[rid] == chnk.engine.generated[rid], \
+                (kv, em, rid)
+        assert len(chnk.engine.generated[3]) == 1      # output_len-1 request
+        if kv == "paged":
+            assert chnk.engine.kv_stats()["used_blocks"] == 0
+            chnk.hmm.kv_blocks.check_invariants()
+        print(f"CHUNK-MATRIX-{kv}-{em}-OK")
+print("CHUNK-PARITY-MATRIX-OK")
+""", ndev=4)
+    for kv in ("dense", "paged"):
+        for em in ("dense", "pooled"):
+            assert f"CHUNK-MATRIX-{kv}-{em}-OK" in out
+    assert "CHUNK-PARITY-MATRIX-OK" in out
+
+
+@pytest.mark.slow
+def test_chunked_prefix_sharing_parity():
+    """Deferred registration: arrivals staggered across ticks still bind to
+    the partition holding their written prefix (shared_block_hits > 0) and
+    the skipped-prefix prefill produces tokens identical to the monolithic
+    engine that recomputes over sentinel rows."""
+    out = run_with_devices(CHUNK_COMMON + """
+# one arrival every 4 ticks: each prompt's prefix blocks are fully written
+# (registered) before the next arrival queries the registry — same-tick
+# arrivals must NOT share (their blocks hold no data yet)
+reqs = lambda: shared_prefix_workload(
+    [(0.0, 1), (0.4, 1), (0.8, 1), (1.2, 1), (1.6, 1)], prefix_len=40,
+    suffix_range=(0, 6), vocab_size=128, seed=2, output_range=(10, 20))
+
+mono = drive(build("paged"), reqs())
+chnk = drive(build("paged", chunk=32, budget=32), reqs())
+st = chnk.engine.kv_stats()
+assert st["shared_block_hits"] > 0, st
+assert st["used_blocks"] == 0, st
+chnk.hmm.kv_blocks.check_invariants()
+for rid in mono.engine.generated:
+    assert mono.engine.generated[rid] == chnk.engine.generated[rid], rid
+print("CHUNK-PREFIX-SHARING-OK", st["shared_block_hits"])
+""", ndev=4)
+    assert "CHUNK-PREFIX-SHARING-OK" in out
+
+
+@pytest.mark.slow
+def test_chunked_tokens_identical_across_scaleup():
+    """Scale 4->6 devices while long prompts are mid-chunk: jobs keep
+    chunking through the staging window (no pause on scale-up), survive the
+    switchover rebind verbatim, and every token matches a run that started
+    on the target config."""
+    out = run_with_devices(CHUNK_COMMON + """
+def run(scale):
+    srv = build("paged", chunk=32, budget=32, prefill_buckets=(32,),
+                batch_per_replica=2, boot=c4 if scale else c6)
+    rng = np.random.default_rng(0)
+    lens = [16, 90, 90, 37]
+    reqs = [Request(i, 0.0, L, 30, prompt=rng.integers(0, 128, L))
+            for i, L in enumerate(lens)]
+    for r in reqs: srv.submit(r)
+    t, n, task, overlapped = 0.0, 0, None, False
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 1 and task is None:
+            assert any(s.prefilling for s in srv.engine.slots if s.rid >= 0)
+            task = srv.start_scale(c6)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+            if srv.engine._prefilling:
+                overlapped = True
+        assert n < 800, [r.finish_s for r in reqs]
+    if scale:
+        assert overlapped, "no prefill job was in flight during the scale"
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv
+
+ref_toks, _ = run(False)
+got_toks, srv = run(True)
+assert srv.hmm.kv_blocks.num_partitions == 3
+assert srv.engine.preemptions == 0
+srv.hmm.kv_blocks.check_invariants()
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], rid
+print("CHUNK-SCALEUP-DETERMINISM-OK")
+""")
+    assert "CHUNK-SCALEUP-DETERMINISM-OK" in out
+
+
+@pytest.mark.slow
+def test_chunked_migrate_scaledown_lands_mid_chunk():
+    """Migrate-mode scale-down 6->4 with prompts still chunking in the
+    doomed partition: their jobs pause while blocks move (no chunk writes
+    into frozen blocks), resume re-homed on survivor slots, nothing is
+    recomputed, and tokens match the unscaled run at the target config."""
+    out = run_with_devices(CHUNK_COMMON + """
+from repro.serving.driver import ScalePhase
+
+def run(scale):
+    # chunk=16 (one block) with budget=16: the FIFO backlog drains one
+    # chunk per tick, so the doomed 200-token prompts stay mid-prefill
+    # well past the staging window into MIGRATING (~tick 16)
+    srv = build("paged", chunk=16, budget=16, prefill_buckets=(32,),
+                batch_per_replica=2, max_len=256, boot=c6 if scale else c4)
+    assert srv.scaledown_mode == "migrate"
+    rng = np.random.default_rng(0)
+    # rids 0-1: short, free their survivor slots early; rids 4-5: long
+    # prompts landing in the doomed partition, mid-chunk at scale time
+    lens = [10, 10, 16, 16, 200, 200]
+    outs = [2, 2, 30, 30, 30, 30]
+    reqs = [Request(i, 0.0, L, o, prompt=rng.integers(0, 128, L))
+            for i, (L, o) in enumerate(zip(lens, outs))]
+    for r in reqs: srv.submit(r)
+    t, n, task, paused_mid_chunk = 0.0, 0, None, False
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 1 and task is None:
+            task = srv.start_scale(c4)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+            if any(s.prefilling and s.migrating for s in srv.engine.slots):
+                paused_mid_chunk = True
+        assert n < 2000, [r.finish_s for r in reqs]
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv, task, \
+        paused_mid_chunk
+
+ref_toks, _, _, _ = run(False)
+got_toks, srv, task, paused = run(True)
+assert srv.hmm.active_cfg.ndev == 4
+assert srv.hmm.kv_blocks.num_partitions == 2
+assert paused, "no prefill job was paused by a live migration"
+assert task.migrated_blocks > 0
+assert srv.engine.preemptions == 0              # migrated, never recomputed
+assert srv.engine.kv_stats()["used_blocks"] == 0
+srv.hmm.kv_blocks.check_invariants()
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], rid
+print("CHUNK-MIGRATE-MID-CHUNK-OK", task.migrated_blocks)
+""")
+    assert "CHUNK-MIGRATE-MID-CHUNK-OK" in out
+
+
+@pytest.mark.slow
+def test_chunked_preempts_under_pressure_and_completes():
+    """Chunked admission holds a prompt's blocks from allocation: under an
+    over-committed pool the engine still preempts (recompute) rather than
+    deadlocking, resumed requests re-chunk prompt+generated, and the pool
+    drains clean."""
+    out = run_with_devices(CHUNK_COMMON + """
+srv = build("paged", chunk=32, budget=32, prefill_buckets=(32,),
+            kv_blocks_per_replica=8)
+rng = np.random.default_rng(1)
+reqs = [Request(i, 0.0, 16, 60, prompt=rng.integers(0, 128, 16))
+        for i in range(8)]
+drive(srv, reqs)
+assert srv.engine.preemptions > 0
+assert srv.engine.kv_stats()["used_blocks"] == 0
+srv.hmm.kv_blocks.check_invariants()
+for r in reqs:
+    assert len(srv.engine.generated[r.rid]) == r.output_len, r.rid
+print("CHUNK-PREEMPT-OK", srv.engine.preemptions)
+""", ndev=4)
+    assert "CHUNK-PREEMPT-OK" in out

@@ -190,6 +190,114 @@ def test_block_paged_decode_attention(B, H, KVH, hd, NB, bs, MB, dtype):
                                np.asarray(want, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,NB,bs,MB,Sq", [
+    (2, 4, 2, 64, 12, 64, 4, 32),
+    (1, 8, 4, 128, 8, 128, 2, 48),
+    (3, 4, 1, 80, 20, 32, 6, 16),
+])
+def test_mixed_block_paged_attention(B, H, KVH, hd, NB, bs, MB, Sq, dtype):
+    """Mixed chunked-prefill/decode kernel vs the jnp gather oracle, with
+    per-sequence chunk lengths deliberately unaligned to both the compiled
+    ``Sq`` bucket and the block size.  Only valid chunk rows are compared —
+    padding rows degrade to full-context decode masking by design."""
+    from repro.kernels.paged_attention import mixed_block_paged_attention
+    q = jnp.asarray(RNG.standard_normal((B, Sq, H, hd)), dtype)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), dtype)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB)
+                     .astype(np.int32))
+    q_lens = RNG.integers(1, Sq + 1, B)
+    ctx = np.array([RNG.integers(ql, MB * bs + 1) for ql in q_lens])
+    q_lens, ctx = jnp.asarray(q_lens, jnp.int32), jnp.asarray(ctx, jnp.int32)
+    want = ref.mixed_block_paged_attention_ref(q, kp, vp, bt, ctx, q_lens)
+    got = mixed_block_paged_attention(q, kp, vp, bt, ctx, q_lens,
+                                      interpret=True)
+    got_ops = ops.mixed_block_paged_attention(q, kp, vp, bt, ctx, q_lens)
+    for b in range(B):
+        n = int(q_lens[b])
+        np.testing.assert_allclose(np.asarray(got[b, :n], np.float32),
+                                   np.asarray(want[b, :n], np.float32),
+                                   **tol(dtype))
+        # ops export: ref fallback on CPU (REPRO_PAGED_IMPL) must agree too
+        np.testing.assert_allclose(np.asarray(got_ops[b, :n], np.float32),
+                                   np.asarray(want[b, :n], np.float32),
+                                   **tol(dtype))
+
+
+def test_mixed_sentinel_block_rows_are_inert():
+    """Block-table entries past a sequence's context may hold the NB
+    sentinel (padding / CoW-dropped rows).  They are clamped in-bounds and
+    position-masked, so swapping them for arbitrary live rows must not
+    change a single output bit."""
+    from repro.kernels.paged_attention import mixed_block_paged_attention
+    B, H, KVH, hd, NB, bs, MB, Sq = 2, 4, 2, 64, 10, 32, 5, 16
+    q = jnp.asarray(RNG.standard_normal((B, Sq, H, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    ctx = jnp.asarray([40, 70], jnp.int32)              # 2 and 3 live blocks
+    q_lens = jnp.asarray([7, 16], jnp.int32)
+    base_bt = RNG.permutation(NB)[:B * MB].reshape(B, MB).astype(np.int32)
+    sent = base_bt.copy()
+    junk = base_bt.copy()
+    for b in range(B):
+        live = (int(ctx[b]) + bs - 1) // bs
+        sent[b, live:] = NB                              # sentinel rows
+        junk[b, live:] = RNG.integers(0, NB, MB - live)  # arbitrary rows
+    outs = [mixed_block_paged_attention(q, kp, vp, jnp.asarray(t), ctx,
+                                        q_lens, interpret=True)
+            for t in (sent, junk, base_bt)]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[2]))
+    want = ref.mixed_block_paged_attention_ref(q, kp, vp, jnp.asarray(sent),
+                                               ctx, q_lens)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mixed_qlen1_is_exactly_paged_decode():
+    """``q_lens == 1`` collapses the mixed mask to plain paged decode — the
+    property that lets one kernel serve interleaved prefill+decode ticks."""
+    from repro.kernels.paged_attention import mixed_block_paged_attention
+    B, H, KVH, hd, NB, bs, MB = 3, 8, 2, 64, 12, 64, 4
+    q = jnp.asarray(RNG.standard_normal((B, 1, H, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB)
+                     .astype(np.int32))
+    ctx = jnp.asarray(RNG.integers(1, MB * bs + 1, B), jnp.int32)
+    ones = jnp.ones((B,), jnp.int32)
+    got = mixed_block_paged_attention(q, kp, vp, bt, ctx, ones,
+                                      interpret=True)
+    want = ref.block_paged_decode_attention_ref(q[:, 0], kp, vp, bt, ctx)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mixed_bf16_vs_f32_oracle():
+    """bf16 mixed kernel against the f32 oracle: the paged indirection and
+    online softmax must not add error beyond bf16 input rounding."""
+    from repro.kernels.paged_attention import mixed_block_paged_attention
+    B, H, KVH, hd, NB, bs, MB, Sq = 2, 4, 2, 64, 8, 64, 3, 24
+    q32 = jnp.asarray(RNG.standard_normal((B, Sq, H, hd)), jnp.float32)
+    kp32 = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    vp32 = jnp.asarray(RNG.standard_normal((NB, bs, KVH, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB)
+                     .astype(np.int32))
+    ctx = jnp.asarray([100, 192], jnp.int32)
+    q_lens = jnp.asarray([24, 13], jnp.int32)
+    got = mixed_block_paged_attention(
+        q32.astype(jnp.bfloat16), kp32.astype(jnp.bfloat16),
+        vp32.astype(jnp.bfloat16), bt, ctx, q_lens, interpret=True)
+    want = ref.mixed_block_paged_attention_ref(q32, kp32, vp32, bt, ctx,
+                                               q_lens)
+    for b in range(B):
+        n = int(q_lens[b])
+        np.testing.assert_allclose(np.asarray(got[b, :n], np.float32),
+                                   np.asarray(want[b, :n], np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
 def test_block_paged_decode_remap_invariance():
     """Permuting pool rows + rewriting the tables must not change results —
     the zero-copy-remap guarantee at kernel level (what makes the HMM's

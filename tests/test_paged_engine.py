@@ -184,3 +184,46 @@ except ValueError:
 print("PAGED-PREEMPT-OK", srv.engine.preemptions)
 """, ndev=4)
     assert "PAGED-PREEMPT-OK" in out
+
+
+@pytest.mark.slow
+def test_lazy_prefill_bucket_cache_is_bounded():
+    """Regression: paged mode lazily compiles a prefill executable per
+    unseen padded length, and resumed-after-preemption prompts keep growing,
+    so the cache must be LRU-bounded.  AOT-precompiled buckets are pinned;
+    a recently-hit lazy bucket outlives an older one; an evicted bucket is
+    transparently recompiled when a prompt needs it again."""
+    out = run_with_devices(PAGED_COMMON + """
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=4, max_len=512,
+                    prefill_buckets=(32,), seed=0, kv_mode="paged",
+                    kv_block_size=16)
+srv.boot(c4)
+eng = srv.engine
+cap = eng.MAX_LAZY_PREFILL
+assert cap == 8
+# fill the lazy cache exactly to capacity: buckets 64, 96, ..., 288
+for i in range(2, 2 + cap):
+    eng._prefill(32 * i)
+    assert len(eng._lazy_prefill) <= cap
+assert len(eng._lazy_prefill) == cap
+before = set(eng.compiled)
+eng._prefill(64)                      # cache hit — refreshes 64's recency
+assert set(eng.compiled) == before    # a hit never compiles or evicts
+eng._prefill(320)                     # one past capacity -> one eviction
+assert len(eng._lazy_prefill) == cap
+assert "prefill_96" not in eng.compiled     # oldest unrefreshed: evicted
+assert "prefill_64" in eng.compiled         # refreshed: survived (LRU)
+assert "prefill_32" in eng.compiled         # AOT bucket: never evictable
+assert "prefill_32" not in eng._lazy_prefill
+# the evicted bucket is recompiled on demand: a 70-token prompt pads to 96
+rng = np.random.default_rng(3)
+reqs = [Request(0, 0.0, 70, 8, prompt=rng.integers(0, 128, 70))]
+drive(srv, reqs)
+assert "prefill_96" in eng.compiled
+assert len(eng._lazy_prefill) <= cap
+assert len(eng.generated[0]) == 8
+assert eng.kv_stats()["used_blocks"] == 0
+srv.hmm.kv_blocks.check_invariants()
+print("LAZY-PREFILL-LRU-OK", sorted(eng._lazy_prefill))
+""", ndev=4)
+    assert "LAZY-PREFILL-LRU-OK" in out

@@ -1,0 +1,250 @@
+"""Hypothesis property suite for the token-budget chunk scheduler and its
+interaction with the paged KV pool (DESIGN.md §8).
+
+Scheduler contracts (serving/scheduler.py):
+* the per-tick prefill budget is never exceeded, and every planned chunk is
+  at most one compiled bucket wide;
+* each job's chunks arrive strictly in order and exactly cover
+  ``[skip, total)`` — one ``final`` chunk per job, landing on ``total``;
+* FIFO no-skipping: a later job never receives budget while an earlier
+  unpaused job was denied;
+* progress / no starvation: whenever any unpaused work remains, at least
+  one chunk is planned (budget >= chunk), so prefill drains in a bounded
+  number of ticks while decode — which is never charged against the
+  budget — runs every tick by construction.
+
+Pool contracts under chunked prefill (serving/kv_blocks.py): random
+admit / chunk / preempt / finish / append interleavings with deferred
+registration (``allocate(register=False)`` + progressive
+``register_written``) keep ``check_invariants`` green, and — the CoW
+soundness property the deferral exists for — ``prefix_match_blocks`` never
+returns a block whose content has not been written yet.
+
+CI runs this file as a dedicated tier-1 step under the fixed profile
+registered below (deadline disabled, derandomized) so it cannot flake.
+"""
+import math
+import os
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.kv_blocks import KVBlockManager, blocks_for
+from repro.serving.scheduler import (PrefillJob, TokenBudgetScheduler,
+                                     prefix_skip)
+
+settings.register_profile("repro-ci", deadline=None, derandomize=True,
+                          max_examples=40)
+settings.register_profile("repro-ci-thorough", deadline=None,
+                          derandomize=True, max_examples=300)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro-ci"))
+
+
+# ------------------------------------------------------ scheduler properties
+
+@given(chunk=st.sampled_from([1, 4, 16, 32]),
+       budget_chunks=st.integers(1, 4),
+       specs=st.lists(st.tuples(st.integers(1, 100), st.integers(0, 3)),
+                      min_size=1, max_size=8),
+       pauses=st.lists(st.integers(0, 7), max_size=4))
+def test_budget_order_coverage_and_progress(chunk, budget_chunks, specs,
+                                            pauses):
+    """Drive plan/apply ticks until every job drains; check all four
+    scheduler contracts on the way.  ``specs`` are (total, skip_blocks);
+    ``pauses`` toggles jobs paused for one tick mid-run (migration)."""
+    budget = chunk * budget_chunks
+    sched = TokenBudgetScheduler(chunk, budget)
+    jobs = []
+    for i, (total, skip_blocks) in enumerate(specs):
+        skip = prefix_skip(skip_blocks, chunk, total)
+        jobs.append(PrefillJob(slot=i, rid=i, pos=skip, total=total))
+    chunks_seen = {j.rid: [] for j in jobs}
+    start_pos = {j.rid: j.pos for j in jobs}
+    # pauses can waste every other tick (a paused job makes no progress),
+    # so the drain bound is 2x the chunk count — still finite, which is
+    # the point: prefill always drains, decode never waits on it
+    ticks, tick_bound = 0, 2 * sum(
+        math.ceil(j.remaining / chunk) for j in jobs) + len(pauses) + 4
+    while any(j.remaining > 0 for j in jobs):
+        for p in pauses:                       # freeze a rotating subset
+            jobs[p % len(jobs)].paused = (ticks % 2 == 0)
+        plans = sched.plan(jobs)
+        # budget never exceeded; chunks never wider than the bucket
+        assert sum(p.take for p in plans) <= budget
+        assert all(0 < p.take <= chunk for p in plans)
+        # FIFO no-skipping: the distinct planned rids are exactly a prefix
+        # of the unpaused, unfinished jobs in admission order — a later job
+        # never receives budget while an earlier one was denied
+        planned = list(dict.fromkeys(p.rid for p in plans))
+        eligible = [j.rid for j in jobs if not j.paused and j.remaining > 0]
+        assert planned == eligible[:len(planned)]
+        # progress whenever anything is runnable
+        if eligible:
+            assert plans, "runnable work but empty plan (starvation)"
+        by_rid = {j.rid: j for j in jobs}
+        for p in plans:
+            job = by_rid[p.rid]
+            assert p.start == job.pos, "out-of-order chunk"
+            assert p.final == (p.start + p.take == job.total)
+            chunks_seen[p.rid].append((p.start, p.take, p.final))
+            job.pos = p.start + p.take
+        for j in jobs:
+            j.paused = False
+        ticks += 1
+        assert ticks <= tick_bound, "scheduler failed to drain in bound"
+    for rid, got in chunks_seen.items():
+        total = next(j.total for j in jobs if j.rid == rid)
+        # exact coverage of [skip, total): contiguous, one final at the end
+        pos = start_pos[rid]
+        for k, (start, take, final) in enumerate(got):
+            assert start == pos
+            pos += take
+            assert final == (k == len(got) - 1)
+        assert pos == total
+
+
+@given(num_shared=st.integers(0, 20), bs=st.sampled_from([1, 4, 16, 256]),
+       prompt_len=st.integers(1, 4096))
+def test_prefix_skip_always_leaves_work(num_shared, bs, prompt_len):
+    """The prefix-cache seed position is block-aligned, never exceeds the
+    matched prefix, and always leaves at least one token to compute (the
+    last position's logits produce the first output token)."""
+    skip = prefix_skip(num_shared, bs, prompt_len)
+    assert 0 <= skip < prompt_len
+    assert skip % bs == 0
+    assert skip <= num_shared * bs
+
+
+def test_budget_below_one_chunk_rejected():
+    with pytest.raises(AssertionError):
+        TokenBudgetScheduler(32, 16)
+    assert TokenBudgetScheduler(32).budget == 32
+
+
+# --------------------------------------- pool invariants under interleavings
+
+@given(data=st.data())
+def test_kv_pool_invariants_under_chunked_interleavings(data):
+    """Random admit/chunk/append/preempt/finish interleavings with deferred
+    registration: ``check_invariants`` holds after every operation, and an
+    arriving prompt can only ever match blocks whose content was already
+    registered as written — never a block still waiting for its chunk."""
+    bs = data.draw(st.sampled_from([2, 4]), label="block_size")
+    mgr = KVBlockManager(num_partitions=2, blocks_per_partition=8,
+                         block_size=bs)
+    sched = TokenBudgetScheduler(bs, 2 * bs)
+    state = {}          # rid -> dict(tokens, sb, done)
+    jobs = []           # PrefillJob list, admission order
+    registered = set()  # block ids whose content is registered (model)
+    next_rid = 0
+
+    def mirror_register(rid, upto):
+        sb = state[rid]["sb"]
+        toks = state[rid]["tokens"]
+        nb = len(sb.blocks) if upto >= len(toks) else upto // bs
+        registered.update(sb.blocks[:nb])
+
+    def drop(rid):
+        released = mgr.preempt(rid) if not state[rid]["done"] \
+            else mgr.free(rid)
+        registered.difference_update(released)
+        state.pop(rid)
+        jobs[:] = [j for j in jobs if j.rid != rid]
+
+    actions = data.draw(st.lists(
+        st.sampled_from(["admit", "chunk", "chunk", "append", "preempt",
+                         "finish"]), min_size=4, max_size=50),
+        label="actions")
+    for act in actions:
+        if act == "admit":
+            part = data.draw(st.integers(0, 1), label="partition")
+            n = data.draw(st.integers(1, 3 * bs), label="prompt_len")
+            toks = data.draw(st.lists(st.integers(0, 1), min_size=n,
+                                      max_size=n), label="tokens")
+            hits = mgr.prefix_match_blocks(part, toks)
+            # CoW soundness: only written (registered) blocks are matchable
+            assert set(hits) <= registered, (hits, registered)
+            if not mgr.can_allocate(n, part, tokens=toks):
+                mgr.check_invariants()
+                continue
+            rid = next_rid
+            next_rid += 1
+            sb = mgr.allocate(rid, n, partition=part, tokens=toks,
+                              register=False)
+            assert sb.num_shared == len(hits) or sb.num_shared <= len(hits)
+            skip = prefix_skip(sb.num_shared, bs, n)
+            state[rid] = {"tokens": toks, "sb": sb, "done": False}
+            jobs.append(PrefillJob(slot=rid, rid=rid, pos=skip, total=n))
+        elif act == "chunk" and jobs:
+            plans = sched.plan(jobs)
+            by_rid = {j.rid: j for j in jobs}
+            for p in plans:
+                job = by_rid[p.rid]
+                upto = p.start + p.take
+                mgr.register_written(p.rid, state[p.rid]["tokens"], upto)
+                mirror_register(p.rid, upto)
+                job.pos = upto
+                if p.final:
+                    state[p.rid]["done"] = True
+            jobs[:] = [j for j in jobs if j.remaining > 0]
+        elif act == "append" and any(s["done"] for s in state.values()):
+            rid = data.draw(st.sampled_from(
+                sorted(r for r, s in state.items() if s["done"])),
+                label="append_rid")
+            try:
+                res = mgr.append(rid)
+            except MemoryError:
+                victim = mgr.victim(exclude=[rid])
+                if victim is not None:
+                    drop(victim)
+                mgr.check_invariants()
+                continue
+            sb = state[rid]["sb"]
+            if res is None:
+                # in-place tail write: that block's registered content is
+                # stale — the manager unregistered it; mirror that
+                registered.discard(sb.blocks[(sb.num_tokens - 1) // bs])
+            elif res.cow_src is not None:
+                registered.discard(res.block)
+        elif act == "preempt" and state:
+            rid = data.draw(st.sampled_from(sorted(state)),
+                            label="preempt_rid")
+            drop(rid)
+        elif act == "finish" and any(s["done"] for s in state.values()):
+            rid = data.draw(st.sampled_from(
+                sorted(r for r, s in state.items() if s["done"])),
+                label="finish_rid")
+            drop(rid)
+        mgr.check_invariants()
+    for rid in sorted(state):
+        drop(rid)
+    mgr.check_invariants()
+    assert mgr.used_blocks() == 0, "pool leaked after full drain"
+
+
+@given(bs=st.sampled_from([2, 4]), n=st.integers(1, 12),
+       cut=st.integers(0, 14))
+def test_register_written_is_progressive_and_idempotent(bs, n, cut):
+    """Registering the same prefix twice (or registering beyond the prompt)
+    is a no-op; partial registration exposes exactly the full blocks."""
+    mgr = KVBlockManager(num_partitions=1, blocks_per_partition=16,
+                         block_size=bs)
+    toks = [1] * n
+    mgr.allocate(0, n, tokens=toks, register=False)
+    assert mgr.prefix_match_blocks(0, toks) == []
+    upto = min(cut, n)
+    mgr.register_written(0, toks, upto)
+    mgr.register_written(0, toks, upto)              # idempotent
+    hits = mgr.prefix_match_blocks(0, toks)
+    if upto >= n:
+        assert len(hits) == blocks_for(n, bs)        # tail matchable too
+    else:
+        assert len(hits) == upto // bs
+    mgr.check_invariants()
+    mgr.register_written(0, toks, n)                 # finish registration
+    assert len(mgr.prefix_match_blocks(0, toks)) == blocks_for(n, bs)
+    mgr.free(0)
+    mgr.check_invariants()
