@@ -30,7 +30,7 @@ def main() -> None:
                             latency_breakdown, memory_vs_ep, overlap,
                             peak_memory, scaledown_latency, scaleup_latency,
                             slo_compliance, slo_dynamics,
-                            throughput_windows)
+                            throughput_windows, trace_overhead)
     modules = [
         ("fig1", granularity),
         ("fig4a", bootup_breakdown),
@@ -53,6 +53,8 @@ def main() -> None:
         # fig12 entry above is the cost-model projection)
         ("scaledown_migrate", scaledown_latency),
         ("measured", engine_measured),
+        # tracing disabled-vs-enabled throughput A/B + trace artifact
+        ("trace_overhead", trace_overhead),
     ]
     if args.only:
         modules = [(n, m) for n, m in modules if n == args.only]

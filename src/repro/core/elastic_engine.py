@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.coordinator import LoadEstimator, ScalingPolicy
 from repro.core.hmm import HMM, TransferStats
@@ -119,6 +120,26 @@ class EngineScalingTask:
             # overlaps the staging increments instead of following them
             server.engine.admit_limit = self._keep
         server._active_task = self
+
+    @property
+    def phase(self) -> ScalePhase:
+        return self._phase
+
+    @phase.setter
+    def phase(self, new: ScalePhase) -> None:
+        """Every phase transition emits one ``scale.<PHASE>`` span on the
+        "scale" lane — the per-ScalePhase timeline of the trace layer.
+        Captures ABORTED unwinds too, since those also assign here."""
+        tr = obs.get_tracer()
+        now = tr.now()
+        old = getattr(self, "_phase", None)
+        self._phase = new
+        if old is not None and old is not new:
+            tr.complete(f"scale.{old.name}", self._phase_t0, now,
+                        cat="scale", tid="scale",
+                        args={"target": self.target.describe(),
+                              "next": new.name})
+        self._phase_t0 = now
 
     @property
     def done(self) -> bool:
@@ -313,7 +334,8 @@ class ElasticServer:
                  staging: str = "serial", transfer_workers: int = 4,
                  scaledown: str = "migrate",
                  prefill_chunk: int = 0,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 routing_sample_every: int = 0):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
         # continuous batching: prefill_chunk > 0 splits prompt processing
@@ -344,14 +366,21 @@ class ElasticServer:
                        expert_mode=expert_mode,
                        expert_pool_pages=expert_pool_pages,
                        staging=staging, transfer_workers=transfer_workers)
+        # routing telemetry: every Nth decode tick runs the counts-emitting
+        # executable and accumulates per-(layer, expert) histograms
+        # (models/moe.py; exposed via routing_stats()).  0 disables — no
+        # extra executable is compiled, the decode path is untouched.
+        self.routing_sample_every = routing_sample_every
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
                        max_len=max_len, prefill_buckets=prefill_buckets,
-                       prefill_chunk=prefill_chunk)
+                       prefill_chunk=prefill_chunk,
+                       collect_routing=routing_sample_every > 0)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,
                                       max_len=max_len,
                                       prefill_bucket=min(prefill_buckets),
                                       prefill_chunk=prefill_chunk,
-                                      prefill_budget=prefill_budget)
+                                      prefill_budget=prefill_budget,
+                                      routing_sample_every=routing_sample_every)
         self.estimator = LoadEstimator(policy) if policy else None
         self.queue: List[Request] = []
         self.requests: Dict[int, Request] = {}
@@ -452,6 +481,7 @@ class ElasticServer:
         target slot's partition (FIFO: the head request tries every free
         slot before admission stalls), and sequences preempted under pool
         pressure re-enter at the *front* of the queue."""
+        tr = obs.get_tracer()
         admitting = True
         if self._active_task is not None \
                 and not self._active_task.phase.terminal:
@@ -468,12 +498,16 @@ class ElasticServer:
                 break                   # head-of-line blocks; no skipping
             free.remove(slot)
             self.queue.pop(0)
+            tr.instant("req.admit", cat="req",
+                       args={"rid": req.rid, "slot": slot})
             first = self.engine.start_request(req, req.prompt, slot)
             if first is None:
                 continue    # chunked: first token arrives from decode_tick
             if req.first_token_s is None:
                 req.first_token_s = now
                 req.token_times = [now]
+                tr.instant("req.first_token", cat="req",
+                           args={"rid": req.rid})
             elif req.token_times is not None:   # preemption resume
                 req.token_times.append(now)
         finished = []
@@ -481,6 +515,7 @@ class ElasticServer:
             req = self.requests[rid]
             req.finish_s = now
             finished.append(rid)
+            tr.instant("req.finish", cat="req", args={"rid": rid})
             if self.estimator:
                 self.estimator.record(req)
         for rid, tok, fin in self.engine.decode_tick():
@@ -489,11 +524,13 @@ class ElasticServer:
                 # chunked prefill: the final chunk's token is the TTFT mark
                 req.first_token_s = now
                 req.token_times = [now]
+                tr.instant("req.first_token", cat="req", args={"rid": rid})
             elif req.token_times is not None:
                 req.token_times.append(now)
             if fin:
                 req.finish_s = now
                 finished.append(rid)
+                tr.instant("req.finish", cat="req", args={"rid": rid})
                 if self.estimator:
                     self.estimator.record(req)
         preempted = self.engine.drain_preempted()
@@ -521,6 +558,12 @@ class ElasticServer:
     def kv_stats(self):
         """Block-pool stats (None in dense mode); serving/metrics.py."""
         return self.engine.kv_stats()
+
+    def routing_stats(self) -> Optional[dict]:
+        """Per-expert routing histogram accumulated from sampled decode
+        ticks (None when sampling is off or no sample has landed yet);
+        serving/metrics.py, DESIGN.md §9."""
+        return self.engine.routing_stats()
 
     def scaling_summary(self) -> Optional[dict]:
         """Aggregate staging-overlap metrics over completed scale events

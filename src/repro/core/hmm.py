@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.expert_pages import ExpertPageTable
 from repro.core.topology import ElasticConfig
@@ -425,6 +426,7 @@ class HMM:
         return dense
 
     # ----------------------------------------------------------------- boot
+    @obs.traced("hmm.boot", cat="hmm")
     def boot(self, cfg: ElasticConfig) -> TransferStats:
         """First boot: 'disk load' = host init + device_put (counted as disk
         bytes by the caller's cost model)."""
@@ -487,6 +489,7 @@ class HMM:
                 pass
         return self.last_stats
 
+    @obs.traced("hmm.begin_scale", cat="hmm")
     def begin_scale(self, new_cfg: ElasticConfig) -> int:
         """Open a staging session toward ``new_cfg``.
 
@@ -632,6 +635,7 @@ class HMM:
 
         return run
 
+    @obs.traced("hmm.stage_increment", cat="hmm")
     def stage_increment(self, max_tensors: int = 1) -> bool:
         """Serial mode: reshard up to ``max_tensors`` parameter tensors
         toward the target opened by ``begin_scale``.  Safe to interleave
@@ -860,6 +864,7 @@ class HMM:
                 make_instance_mesh(self.active_cfg, self.all_devices),
                 self.params, self.cache)
 
+    @obs.traced("hmm.commit", cat="hmm")
     def commit(self, live_cache=None) -> TransferStats:
         """Switchover: staged weights become active, and the *live* KV cache
         (surviving slots' buffers reused as-is, new slots zero-init) is grown
@@ -898,6 +903,7 @@ class HMM:
             self.last_stats.merge(stats)
         return stats
 
+    @obs.traced("hmm.abort", cat="hmm")
     def abort(self):
         """Abandon any staged state — including a staging session with
         transfer ops still in flight on the background engine.

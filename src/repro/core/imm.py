@@ -45,7 +45,7 @@ class IMM:
     def __init__(self, mcfg: ModelConfig, hmm: HMM, *,
                  batch_per_replica: int, max_len: int,
                  prefill_buckets=(64,), prefill_chunk: int = 0,
-                 lru_capacity: int = 4):
+                 lru_capacity: int = 4, collect_routing: bool = False):
         self.mcfg = mcfg
         self.hmm = hmm
         self.batch_per_replica = batch_per_replica
@@ -54,6 +54,9 @@ class IMM:
         # continuous batching: >0 also pre-compiles the chunk-prefill
         # executable per instance (engine.prefill_chunk)
         self.prefill_chunk = prefill_chunk
+        # routing telemetry: also pre-compile the count-returning decode
+        # twin ("decode_routed"; DESIGN.md §9)
+        self.collect_routing = collect_routing
         self.lru_capacity = lru_capacity
         self._cache: "OrderedDict[Tuple, StandbyInstance]" = OrderedDict()
         self.stats = {"preinit_hits": 0, "preinit_misses": 0,
@@ -84,7 +87,8 @@ class IMM:
             prefill_buckets=self.prefill_buckets,
             prefill_chunk=self.prefill_chunk,
             kv_mode=self.hmm.kv_mode,
-            kv_block_size=self.hmm.kv_block_size)
+            kv_block_size=self.hmm.kv_block_size,
+            collect_routing=self.collect_routing)
         inst = StandbyInstance(cfg, mesh, compiled, dt)
         self._cache[key] = inst
         self.stats["compile_s_total"] += dt

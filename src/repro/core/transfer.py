@@ -29,6 +29,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from concurrent.futures import wait as _futures_wait
 from typing import Any, Callable, List, Optional
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class TransferOp:
@@ -127,6 +129,13 @@ class TransferEngine:
         finally:
             op.t_done = time.perf_counter()
             op.seconds = op.t_done - t0
+            # span lands on the worker thread's lane (obs captures the
+            # "hmm-transfer-*" thread name lazily); timestamps are the
+            # already-measured perf_counter interval, not re-clocked
+            obs.get_tracer().complete(op.label, t0, op.t_done,
+                                      cat="transfer",
+                                      args={"state": op.state,
+                                            "index": op.index})
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)

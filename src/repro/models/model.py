@@ -116,41 +116,56 @@ def init_params(cfg: ModelConfig, rng, dtype=None) -> Params:
 # -------------------------------------------------------------- block apply
 
 def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None,
-              moe_pool=None):
-    """Post-attention feed-forward (+MoE).  Returns (y, aux).
+              moe_pool=None, return_counts=False):
+    """Post-attention feed-forward (+MoE).  Returns (y, aux) — or
+    (y, aux, counts [E] int32) with ``return_counts`` (routing telemetry,
+    DESIGN.md §9; zeros for non-MoE layers).
 
     ``moe_pool``: the pooled expert weight store (``params["moe_pool"]``,
     shared across layers) when the HMM runs ``expert_mode="pooled"``; the
     per-layer ``bp["moe"]`` then carries page-table index arrays instead of
     dense [E, D, F] banks (models/moe.py)."""
     aux = jnp.zeros((), jnp.float32)
+    counts = jnp.zeros((cfg.num_experts,), jnp.int32)
     if moe:
         if parallel is not None:
-            y, aux = moe_ep(cfg, bp["moe"], h, parallel, capacity=moe_capacity,
-                            pool=moe_pool)
+            out = moe_ep(cfg, bp["moe"], h, parallel, capacity=moe_capacity,
+                         pool=moe_pool, return_counts=return_counts)
+            y, aux = out[0], out[1]
+            if return_counts:
+                counts = out[2]
         else:
             B, S, D = h.shape
             if moe_pool is not None and "tables" in bp["moe"]:
-                yf, aux = moe_local_pooled(cfg, bp["moe"], moe_pool,
-                                           h.reshape(B * S, D),
-                                           capacity=moe_capacity)
+                out = moe_local_pooled(cfg, bp["moe"], moe_pool,
+                                       h.reshape(B * S, D),
+                                       capacity=moe_capacity,
+                                       return_counts=return_counts)
             else:
-                yf, aux = moe_local(cfg, bp["moe"], h.reshape(B * S, D),
-                                    capacity=moe_capacity)
+                out = moe_local(cfg, bp["moe"], h.reshape(B * S, D),
+                                capacity=moe_capacity,
+                                return_counts=return_counts)
+            yf, aux = out[0], out[1]
+            if return_counts:
+                counts = out[2]
             y = yf.reshape(B, S, D)
         if cfg.dense_residual:
             y = y + mlp_apply(bp["mlp"], h, cfg.mlp_gated)
     else:
         y = mlp_apply(bp["mlp"], h, cfg.mlp_gated)
+    if return_counts:
+        return y, aux, counts
     return y, aux
 
 
 def _attn_block(cfg, bp, x, positions, *, cache=None, write_pos=None,
                 kv_valid_len=None, image_kv=None, image_x=None,
-                parallel=None, moe=False, moe_capacity=None, moe_pool=None):
+                parallel=None, moe=False, moe_capacity=None, moe_pool=None,
+                collect_routing=False):
     """Generic (self-attn [+cross-attn] + ffn/moe) block.
 
-    Returns (x', new_kv_cache, new_image_kv, aux).
+    Returns (x', new_kv_cache, new_image_kv, aux) — plus a trailing
+    per-expert routing-count vector [E] when ``collect_routing``.
     """
     h = apply_norm(bp["ln1"], x, cfg.norm_type)
     if cfg.use_mla:
@@ -176,8 +191,13 @@ def _attn_block(cfg, bp, x, positions, *, cache=None, write_pos=None,
                 causal=False, rope=False)
         x = x + jnp.tanh(bp["xgate"]) * cx
     h = apply_norm(bp["ln2"], x, cfg.norm_type)
-    y, aux = _ffn_part(cfg, bp, h, parallel=parallel, moe=moe,
-                       moe_capacity=moe_capacity, moe_pool=moe_pool)
+    out = _ffn_part(cfg, bp, h, parallel=parallel, moe=moe,
+                    moe_capacity=moe_capacity, moe_pool=moe_pool,
+                    return_counts=collect_routing)
+    if collect_routing:
+        y, aux, counts = out
+        return x + y, new_kv, new_image_kv, aux, counts
+    y, aux = out
     return x + y, new_kv, new_image_kv, aux
 
 
@@ -321,6 +341,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     return cache
 
 
+def routing_stats_supported(cfg: ModelConfig) -> bool:
+    """Per-expert routing telemetry rides the decode step as an extra
+    [L_moe, E] count output (``decode_step(..., collect_routing=True)``);
+    covered family = standard-attention MoE decoders — the same scanned MoE
+    decode paths the serving engine compiles; DESIGN.md §9."""
+    return (cfg.has_decode and cfg.arch_type == "moe"
+            and not cfg.use_mla and cfg.attn_window is None)
+
+
 def paged_cache_supported(cfg: ModelConfig) -> bool:
     """The block-managed KV layout covers standard-attention decoders
     (dense + MoE).  MLA/SSM/hybrid/VLM state and windowed attention keep the
@@ -368,19 +397,25 @@ def write_prefill_to_blocks(cache, dense_cache, block_ids):
 
 
 def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
-                      lengths, block_tables, write_block, *, parallel=None):
+                      lengths, block_tables, write_block, *, parallel=None,
+                      collect_routing=False):
     """One decode step over the paged KV pool.  tokens [B,1]; lengths [B];
     block_tables [B,MB] (pool rows per sequence, position-ordered);
     write_block [B] = row receiving this token's k/v (== NB for inactive
-    slots -> dropped).  Returns (logits [B,V], cache')."""
+    slots -> dropped).  Returns (logits [B,V], cache') — plus per-layer
+    routing counts [L_moe, E] when ``collect_routing`` (dense-prefix layers
+    have no router and contribute no row)."""
     from repro.models.layers import paged_attention_apply
 
+    if collect_routing:
+        assert routing_stats_supported(cfg), \
+            f"{cfg.name}: routing telemetry unsupported"
     B = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)
     positions = lengths[:, None]
     moe = cfg.is_moe
 
-    def block(bp, x, kp, vp):
+    def block(bp, x, kp, vp, want_counts=False):
         h = apply_norm(bp["ln1"], x, cfg.norm_type)
         a, (kp, vp) = paged_attention_apply(
             cfg, bp["attn"], h, positions, k_pool=kp, v_pool=vp,
@@ -388,9 +423,14 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
             lengths=lengths)
         x = x + a
         h = apply_norm(bp["ln2"], x, cfg.norm_type)
-        y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
-                         moe=moe and "moe" in bp,
-                         moe_pool=params.get("moe_pool"))
+        out = _ffn_part(cfg, bp, h, parallel=parallel,
+                        moe=moe and "moe" in bp,
+                        moe_pool=params.get("moe_pool"),
+                        return_counts=want_counts)
+        if want_counts:
+            y, _, cnt = out
+            return x + y, kp, vp, cnt
+        y, _ = out
         return x + y, kp, vp
 
     nk = cfg.first_k_dense if moe else 0
@@ -403,11 +443,19 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
     def body(x, inp):
         bp, kp, vp = inp
+        if collect_routing:
+            x, kp, vp, cnt = block(bp, x, kp, vp, want_counts=True)
+            return x, (kp, vp, cnt)
         x, kp, vp = block(bp, x, kp, vp)
         return x, (kp, vp)
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
-                                         cache["k"][nk:], cache["v"][nk:]))
+    x, scanned = jax.lax.scan(body, x, (params["blocks"],
+                                        cache["k"][nk:], cache["v"][nk:]))
+    counts = None
+    if collect_routing:
+        ks, vs, counts = scanned
+    else:
+        ks, vs = scanned
     if nk:
         ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
         vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
@@ -415,6 +463,8 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
     x = apply_norm(params["final_norm"], x, cfg.norm_type)
     logits = linear(params["lm_head"], x[:, 0])
+    if collect_routing:
+        return logits, new_cache, counts
     return logits, new_cache
 
 
@@ -685,11 +735,16 @@ def prefill(cfg: ModelConfig, params: Params, batch, max_len: int,
 # ------------------------------------------------------------------- decode
 
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache, lengths,
-                *, parallel=None):
+                *, parallel=None, collect_routing=False):
     """One decode step.  tokens [B,1]; lengths [B] = number of tokens already
     in the cache (the new token is written at slot ``lengths``).
-    Returns (logits [B,V], cache')."""
+    Returns (logits [B,V], cache') — plus per-layer routing counts
+    [L_moe, E] when ``collect_routing`` (gated on
+    :func:`routing_stats_supported`)."""
     assert cfg.has_decode
+    if collect_routing:
+        assert routing_stats_supported(cfg), \
+            f"{cfg.name}: routing telemetry unsupported"
     B = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)
     positions = lengths[:, None]
@@ -798,16 +853,27 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache, lengths,
             def body(carry, inp):
                 x = carry
                 bp, k, v = inp
-                x, kv, _, _ = _attn_block(cfg, bp, x, positions, cache=(k, v),
-                                          write_pos=wp, kv_valid_len=vl,
-                                          parallel=parallel, moe=moe,
-                                          moe_pool=params.get("moe_pool"))
+                out = _attn_block(cfg, bp, x, positions, cache=(k, v),
+                                  write_pos=wp, kv_valid_len=vl,
+                                  parallel=parallel, moe=moe,
+                                  moe_pool=params.get("moe_pool"),
+                                  collect_routing=collect_routing)
+                if collect_routing:
+                    x, kv, _, _, cnt = out
+                    return x, (kv[0], kv[1], cnt)
+                x, kv, _, _ = out
                 return x, (kv[0], kv[1])
-            x, (ks2, vs2) = jax.lax.scan(body, x,
-                                         (params["blocks"], cache["k"],
-                                          cache["v"]))
+            x, scanned = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["k"],
+                                       cache["v"]))
+            if collect_routing:
+                ks2, vs2, routed_counts = scanned
+            else:
+                ks2, vs2 = scanned
             new_cache = {"k": ks2, "v": vs2}
 
     x = apply_norm(params["final_norm"], x, cfg.norm_type)
     logits = linear(params["lm_head"], x[:, 0])
+    if collect_routing:
+        return logits, new_cache, routed_counts
     return logits, new_cache

@@ -122,10 +122,22 @@ def capacity_for(tokens, cfg):
 
 # ------------------------------------------------------------- local path
 
-def _moe_local_body(cfg, p, x, capacity, expert_ffn):
+def routing_counts(topk_idx, num_experts):
+    """topk_idx [T, k] -> per-expert routed-token counts [E] int32 — the
+    telemetry histogram (obs, DESIGN.md §9).  Pure bincount: capacity
+    dropping is intentionally ignored, this measures router demand."""
+    return jnp.zeros((num_experts,), jnp.int32).at[
+        topk_idx.reshape(-1)].add(1)
+
+
+def _moe_local_body(cfg, p, x, capacity, expert_ffn, return_counts=False):
     """Shared single-shard dispatch/combine; ``expert_ffn(xg [E, C, D]) ->
     [E, C, D]`` is the only thing that differs between the dense banks and
-    the pooled store (which is what makes their outputs bit-identical)."""
+    the pooled store (which is what makes their outputs bit-identical).
+
+    ``return_counts`` additionally returns the router's per-expert token
+    counts [E] (routing telemetry; the default two-tuple return is
+    untouched so every existing call site is byte-identical)."""
     T, D = x.shape
     E, k = cfg.num_experts, cfg.top_k
     C = capacity or capacity_for(T, cfg)
@@ -144,17 +156,20 @@ def _moe_local_body(cfg, p, x, capacity, expert_ffn):
     if "shared" in p:
         from repro.models.layers import mlp_apply
         y = y + mlp_apply(p["shared"], x)
+    if return_counts:
+        return y, aux, routing_counts(topk_idx, E)
     return y, aux
 
 
-def moe_local(cfg, p, x, capacity=None):
+def moe_local(cfg, p, x, capacity=None, return_counts=False):
     """x [T, D] -> ([T, D], aux_loss).  Single-shard dispatch/combine."""
     return _moe_local_body(
         cfg, p, x, capacity,
-        lambda xg: _expert_ffn(xg, p["wi"], p["wg"], p["wo"]))
+        lambda xg: _expert_ffn(xg, p["wi"], p["wg"], p["wo"]),
+        return_counts=return_counts)
 
 
-def moe_local_pooled(cfg, p, pool, x, capacity=None):
+def moe_local_pooled(cfg, p, pool, x, capacity=None, return_counts=False):
     """Single-shard MoE over the pooled weight store.
 
     ``p`` holds the per-layer index arrays (``gtable`` [E]: global pool row
@@ -169,7 +184,8 @@ def moe_local_pooled(cfg, p, pool, x, capacity=None):
     return _moe_local_body(
         cfg, p, x, capacity,
         lambda xg: ops.paged_expert_ffn(gt, gt, gt, pool["wi"], pool["wg"],
-                                        pool["wo"], xg))
+                                        pool["wo"], xg),
+        return_counts=return_counts)
 
 
 # ---------------------------------------------------------------- EP path
@@ -330,7 +346,8 @@ def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
     return y, aux
 
 
-def moe_ep(cfg, p, x, parallel, capacity=None, pool=None):
+def moe_ep(cfg, p, x, parallel, capacity=None, pool=None,
+           return_counts=False):
     """Expert-parallel MoE over a mesh described by ``parallel``
     (repro.distributed.sharding.ParallelCtx).
 
@@ -401,4 +418,12 @@ def moe_ep(cfg, p, x, parallel, capacity=None, pool=None):
     if "shared" in p:
         from repro.models.layers import mlp_apply
         y = y + mlp_apply(p["shared"], x)
+    if return_counts:
+        # Telemetry replays the router on the replicated activations outside
+        # shard_map (one tiny [T, E] matmul; decode T = B).  Restricting to
+        # the first T rows excludes the zero-padding rows, whose uniform
+        # softmax would otherwise pollute the first-k experts' bins.
+        topk_idx, _, _ = route(p["router"], xf, cfg.top_k)
+        counts = routing_counts(topk_idx[:T], cfg.num_experts)
+        return y, jnp.mean(aux), counts
     return y, jnp.mean(aux)

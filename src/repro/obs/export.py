@@ -1,0 +1,93 @@
+"""Chrome-trace / Perfetto JSON export (DESIGN.md §9).
+
+Converts a :class:`~repro.obs.tracer.Tracer`'s event buffer into the
+Trace Event Format consumed by ``chrome://tracing``, Perfetto UI and
+``tools/trace_report.py``:
+
+    {"traceEvents": [{"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                      "args"}, ...],
+     "displayTimeUnit": "ms"}
+
+Timestamps are exported in **microseconds relative to the earliest
+event** so real-clock (``perf_counter``) and sim-clock traces both start
+near zero.  Lanes: integer ``tid``s are OS thread idents (named from the
+tracer's lazy thread-name capture — the ``hmm-transfer-*`` workers get
+their own rows); string lanes (``"scale"``, ``"sim"``) are mapped to
+stable synthetic tids with ``thread_name`` metadata.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Union
+
+from repro.obs.tracer import NullTracer, TraceEvent, Tracer
+
+PID = 1
+
+
+def chrome_trace(tracer: Union[Tracer, NullTracer],
+                 extra_metadata: Optional[dict] = None) -> dict:
+    """Render the tracer's buffered events as a Chrome-trace document."""
+    events = tracer.events()
+    t_base = min((e.t0 for e in events), default=0.0)
+    lane_ids: Dict[str, int] = {}
+    out: List[dict] = [{"ph": "M", "name": "process_name", "pid": PID,
+                        "tid": 0, "args": {"name": "repro"}}]
+
+    def lane(tid) -> int:
+        if isinstance(tid, str):
+            if tid not in lane_ids:
+                # synthetic lanes get small negative tids: they sort ahead
+                # of OS-thread rows and can never collide with an ident
+                lane_ids[tid] = -(len(lane_ids) + 1)
+                out.append({"ph": "M", "name": "thread_name", "pid": PID,
+                            "tid": lane_ids[tid], "args": {"name": tid}})
+            return lane_ids[tid]
+        return tid
+
+    for ident, name in tracer.thread_names().items():
+        out.append({"ph": "M", "name": "thread_name", "pid": PID,
+                    "tid": ident, "args": {"name": name}})
+    for e in events:
+        ts = (e.t0 - t_base) * 1e6
+        rec = {"name": e.name, "cat": e.cat or "default", "ph": e.ph,
+               "ts": ts, "pid": PID, "tid": lane(e.tid)}
+        if e.ph == "X":
+            rec["dur"] = max(e.t1 - e.t0, 0.0) * 1e6
+        elif e.ph == "i":
+            rec["s"] = "t"  # thread-scoped instant
+        if e.args:
+            rec["args"] = dict(e.args)
+        out.append(rec)
+    doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+    if extra_metadata:
+        doc["metadata"] = dict(extra_metadata)
+    return doc
+
+
+def write_chrome_trace(path: str, tracer: Union[Tracer, NullTracer],
+                       extra_metadata: Optional[dict] = None) -> dict:
+    doc = chrome_trace(tracer, extra_metadata)
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+    return doc
+
+
+def load_trace(path: str) -> dict:
+    """Load and schema-check an exported trace (raises on malformed)."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    validate_trace(doc)
+    return doc
+
+
+def validate_trace(doc: dict) -> None:
+    """Minimal Trace-Event-Format schema check (CI smoke + tests)."""
+    assert isinstance(doc, dict) and "traceEvents" in doc, \
+        "not a Chrome-trace document"
+    for rec in doc["traceEvents"]:
+        assert {"ph", "pid", "tid"} <= rec.keys(), rec
+        if rec["ph"] in ("X", "i", "C"):
+            assert "ts" in rec and "name" in rec, rec
+        if rec["ph"] == "X":
+            assert "dur" in rec and rec["dur"] >= 0, rec

@@ -1,0 +1,258 @@
+"""Lock-cheap, thread-safe span tracer (DESIGN.md §9).
+
+One process-global :class:`Tracer` (installed via :func:`install`) collects
+timeline events from every layer of the serving stack — scale-phase spans,
+per-``TransferOp`` worker-thread spans, decode-tick spans, request
+lifecycle instants, routing-skew counters — into a bounded ring buffer.
+
+Design constraints, in order:
+
+* **true no-op when disabled** — the default global is a
+  :data:`NULL_TRACER` singleton whose methods return immediately; hot
+  paths pay one module-global read plus an attribute call.  The
+  :func:`traced` decorator additionally short-circuits on an identity
+  check so wrapped methods skip even the context-manager protocol.
+* **thread-safe without a hot-path lock** — events land in a
+  ``collections.deque(maxlen=...)``; ``deque.append`` is atomic under the
+  GIL, so ``TransferEngine`` worker threads and the serve loop record
+  concurrently without contention.  The only lock guards the (rare)
+  first-sighting registration of a thread name.
+* **monotonic, injectable clock** — defaults to ``time.perf_counter``;
+  the simulator installs a tracer whose clock reads modelled time, and
+  every recording method also accepts explicit timestamps so
+  already-measured intervals (``TransferOp.t_done``) and sim-time spans
+  (``SimScaleEvent.t_command``..``t_ready``) export losslessly.
+
+Timestamps are stored in **seconds** (clock domain of the installed
+clock); the Chrome-trace exporter (obs/export.py) converts to µs.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Union
+
+Lane = Union[int, str]
+
+
+class TraceEvent:
+    """One recorded event.  ``ph`` follows the Chrome-trace phase codes:
+    ``"X"`` complete span (``t0``..``t1``), ``"i"`` instant (``t0``),
+    ``"C"`` counter sample (``t0``, value in ``args``)."""
+
+    __slots__ = ("name", "cat", "ph", "t0", "t1", "tid", "args")
+
+    def __init__(self, name: str, cat: str, ph: str, t0: float, t1: float,
+                 tid: Lane, args: Optional[dict]):
+        self.name = name
+        self.cat = cat
+        self.ph = ph
+        self.t0 = t0
+        self.t1 = t1
+        self.tid = tid
+        self.args = args
+
+    @property
+    def dur(self) -> float:
+        return self.t1 - self.t0
+
+    def __repr__(self) -> str:  # debugging/tests
+        return (f"TraceEvent({self.name!r}, cat={self.cat!r}, ph={self.ph!r},"
+                f" t0={self.t0:.6f}, dur={self.dur:.6f}, tid={self.tid!r})")
+
+
+class _Span:
+    """Re-entrant-free context manager emitted by :meth:`Tracer.span`."""
+
+    __slots__ = ("_tr", "_name", "_cat", "_args", "_tid", "_t0")
+
+    def __init__(self, tr: "Tracer", name: str, cat: str,
+                 args: Optional[dict], tid: Optional[Lane]):
+        self._tr = tr
+        self._name = name
+        self._cat = cat
+        self._args = args
+        self._tid = tid
+
+    def __enter__(self) -> "_Span":
+        self._t0 = self._tr._clock()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._tr.complete(self._name, self._t0, self._tr._clock(),
+                          cat=self._cat, args=self._args, tid=self._tid)
+        return False
+
+
+class MetricsRegistry:
+    """Thread-safe counters and gauges, independent of the event buffer
+    (aggregates survive ring-buffer eviction)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+
+    def inc(self, name: str, value: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + value
+
+    def gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {"counters": dict(self._counters),
+                    "gauges": dict(self._gauges)}
+
+
+class Tracer:
+    """Collecting tracer.  All recording methods are safe to call from any
+    thread; events beyond ``capacity`` evict the oldest (bounded memory —
+    a serve loop can run traced indefinitely)."""
+
+    enabled = True
+
+    def __init__(self, *, capacity: int = 65536,
+                 clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self._events: deque = deque(maxlen=capacity)
+        self._thread_names: Dict[int, str] = {}
+        self._name_lock = threading.Lock()
+        self.metrics = MetricsRegistry()
+
+    # ------------------------------------------------------------- clock
+    def now(self) -> float:
+        return self._clock()
+
+    # ------------------------------------------------------------ record
+    def _resolve_tid(self, tid: Optional[Lane]) -> Lane:
+        if tid is not None:
+            return tid
+        ident = threading.get_ident()
+        if ident not in self._thread_names:
+            with self._name_lock:
+                self._thread_names.setdefault(
+                    ident, threading.current_thread().name)
+        return ident
+
+    def complete(self, name: str, t0: float, t1: float, *, cat: str = "",
+                 args: Optional[dict] = None,
+                 tid: Optional[Lane] = None) -> None:
+        """Record an already-measured span (explicit timestamps, in the
+        tracer's clock domain — real seconds or sim seconds)."""
+        self._events.append(TraceEvent(name, cat, "X", t0, t1,
+                                       self._resolve_tid(tid), args))
+
+    def span(self, name: str, *, cat: str = "",
+             args: Optional[dict] = None,
+             tid: Optional[Lane] = None) -> _Span:
+        """``with tracer.span("decode.tick", cat="serve"): ...`` — times
+        the body with the tracer's clock."""
+        return _Span(self, name, cat, args, tid)
+
+    def instant(self, name: str, *, cat: str = "",
+                args: Optional[dict] = None, t: Optional[float] = None,
+                tid: Optional[Lane] = None) -> None:
+        if t is None:
+            t = self._clock()
+        self._events.append(TraceEvent(name, cat, "i", t, t,
+                                       self._resolve_tid(tid), args))
+
+    def counter(self, name: str, value: float, *, cat: str = "",
+                t: Optional[float] = None,
+                tid: Optional[Lane] = None) -> None:
+        if t is None:
+            t = self._clock()
+        self._events.append(TraceEvent(name, cat, "C", t, t,
+                                       self._resolve_tid(tid),
+                                       {"value": value}))
+
+    # ------------------------------------------------------------ access
+    def events(self) -> List[TraceEvent]:
+        return list(self._events)
+
+    def thread_names(self) -> Dict[int, str]:
+        with self._name_lock:
+            return dict(self._thread_names)
+
+    def clear(self) -> None:
+        self._events.clear()
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """The disabled fast path: every method returns immediately.  ``now``
+    still reads the wall clock so call sites can use it unconditionally."""
+
+    enabled = False
+    metrics = None  # sentinel: no aggregation when disabled
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def complete(self, *a: Any, **k: Any) -> None:
+        pass
+
+    def span(self, *a: Any, **k: Any) -> _NullSpan:
+        return _NULL_SPAN
+
+    def instant(self, *a: Any, **k: Any) -> None:
+        pass
+
+    def counter(self, *a: Any, **k: Any) -> None:
+        pass
+
+    def events(self) -> List[TraceEvent]:
+        return []
+
+    def thread_names(self) -> Dict[int, str]:
+        return {}
+
+    def clear(self) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()
+_active: Union[Tracer, NullTracer] = NULL_TRACER
+
+
+def install(tracer: Optional[Tracer]) -> Union[Tracer, NullTracer]:
+    """Install the process-global tracer (``None`` disables tracing)."""
+    global _active
+    _active = tracer if tracer is not None else NULL_TRACER
+    return _active
+
+
+def get_tracer() -> Union[Tracer, NullTracer]:
+    return _active
+
+
+def traced(name: str, cat: str = "") -> Callable:
+    """Decorator form of :meth:`Tracer.span` with a disabled-path
+    short-circuit: one global read + identity check per call."""
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any):
+            tr = _active
+            if tr is NULL_TRACER:
+                return fn(*args, **kwargs)
+            with tr.span(name, cat=cat):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco

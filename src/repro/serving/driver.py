@@ -207,6 +207,13 @@ class ServingBackend(Protocol):
         pressure — not just slot occupancy — drives scaling decisions."""
         ...
 
+    def routing_stats(self) -> Optional[dict]:
+        """Accumulated per-expert routing histogram (samples / counts
+        [L_moe, E] / top_expert_share / expert_cv), or None when the
+        backend collects no routing telemetry (non-MoE model, sampling
+        disabled, or the modelled backend).  DESIGN.md §9."""
+        ...
+
 
 # ------------------------------------------------------------------ driver
 
@@ -251,6 +258,13 @@ class DriverEvent:
     ttft_p99: Optional[float] = None
     itl_p50: Optional[float] = None
     itl_p99: Optional[float] = None
+    # routing-telemetry snapshot at decision time (None when the backend
+    # collects none): sampled ticks, layer-averaged top-expert share and
+    # coefficient of variation — the skew signal a future skew-aware
+    # expert-replication policy would act on (backend.routing_stats())
+    routing_samples: Optional[int] = None
+    routing_top_share: Optional[float] = None
+    routing_cv: Optional[float] = None
 
 
 class ClusterDriver:
@@ -458,6 +472,8 @@ class ClusterDriver:
                         cur = self.backend.current_config()
                         kv = getattr(self.backend, "kv_stats",
                                      lambda: None)()
+                        rt = getattr(self.backend, "routing_stats",
+                                     lambda: None)() or {}
                         self.events.append(DriverEvent(
                             t=t, direction=decision, src=cur.describe(),
                             dst=target.describe(), projected_scale_s=proj,
@@ -465,6 +481,9 @@ class ClusterDriver:
                             preemptions=int((kv or {}).get(
                                 "preemptions", 0)),
                             staging=self._staging,
+                            routing_samples=rt.get("samples"),
+                            routing_top_share=rt.get("top_expert_share"),
+                            routing_cv=rt.get("expert_cv"),
                             **latency_percentiles(self.finished)))
                         self.task = self.backend.start_scale(target)
                         if cfgd.prewarm_next and decision == "up" \

@@ -43,6 +43,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.topology import ElasticConfig
 from repro.distributed.sharding import ParallelCtx
@@ -86,6 +87,28 @@ def _paged_decode_fn(mcfg: ModelConfig, parallel, temperature, params, cache,
                                         lengths, block_tables, wb,
                                         parallel=parallel)
     return _sample(logits, tokens, active, rng, temperature), cache
+
+
+def _decode_routed_fn(mcfg: ModelConfig, parallel, temperature, params,
+                      cache, tokens, lengths, active, rng):
+    """Routing-telemetry decode: identical math plus per-(layer, expert)
+    token counts [L_moe, E] from the MoE routers (models/moe.py)."""
+    logits, cache, counts = M.decode_step(
+        mcfg, params, tokens[:, None], cache, lengths, parallel=parallel,
+        collect_routing=True)
+    return _sample(logits, tokens, active, rng, temperature), cache, counts
+
+
+def _paged_decode_routed_fn(mcfg: ModelConfig, parallel, temperature,
+                            params, cache, tokens, lengths, active,
+                            block_tables, rng):
+    NB, bs = cache["k"].shape[1], cache["k"].shape[2]
+    wb = jnp.take_along_axis(block_tables, (lengths // bs)[:, None], 1)[:, 0]
+    wb = jnp.where(active, wb, NB)
+    logits, cache, counts = M.paged_decode_step(
+        mcfg, params, tokens[:, None], cache, lengths, block_tables, wb,
+        parallel=parallel, collect_routing=True)
+    return _sample(logits, tokens, active, rng, temperature), cache, counts
 
 
 def _prefill_fn(mcfg: ModelConfig, parallel, max_len, params, cache, tokens,
@@ -202,11 +225,18 @@ class InferenceEngine:
     def __init__(self, mcfg: ModelConfig, *, batch_per_replica: int,
                  max_len: int, prefill_bucket: int = 64,
                  prefill_chunk: int = 0,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 routing_sample_every: int = 0):
         self.mcfg = mcfg
         self.batch_per_replica = batch_per_replica
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
+        # routing telemetry: every Nth decode tick runs the counts-emitting
+        # "decode_routed" executable (when the bound instance compiled one)
+        # and accumulates host-side per-(layer, expert) histograms
+        self.routing_sample_every = routing_sample_every
+        self._routing_counts: Optional[np.ndarray] = None
+        self._routing_samples = 0
         # continuous batching: >0 splits prefill into fixed `prefill_chunk`-
         # token buckets interleaved with decode ticks under a per-tick token
         # budget (serving/scheduler.py); 0 = monolithic prefill at admission
@@ -561,6 +591,8 @@ class InferenceEngine:
             self._chunk_ctx.pop(slot, None)
         self.kv.preempt(s.rid)
         self.preemptions += 1
+        obs.get_tracer().instant("preempt", cat="serve",
+                                 args={"rid": s.rid, "slot": slot})
         self._resume_rids.add(s.rid)
         self._preempted_pending.append(s.rid)
         self.slots[slot] = SlotState()
@@ -598,6 +630,9 @@ class InferenceEngine:
         if r is not None:
             if r.cow_src is not None:
                 self._copy_block(r.cow_src, r.block)
+                obs.get_tracer().instant(
+                    "kv.cow_copy", cat="serve",
+                    args={"src": r.cow_src, "dst": r.block})
             j = int(self.lengths[slot]) // self.kv.block_size
             self.block_tables[slot, j] = r.block
         return True
@@ -687,6 +722,10 @@ class InferenceEngine:
         """Cut-over after every pair in ``job.ticket`` was device-copied:
         commit the block-table rewrite, re-home each slot's state to its
         survivor slot, and resume decoding there."""
+        obs.get_tracer().instant(
+            "kv.migrate", cat="serve",
+            args={"rids": sorted(r for r, _, _ in job.moves),
+                  "blocks": len(job.ticket.pairs)})
         self.kv.commit_migration(job.ticket)
         NB = self.kv.num_blocks
         for rid, src, dst in job.moves:
@@ -721,6 +760,7 @@ class InferenceEngine:
             if self.slots[dst].reserved:
                 self.slots[dst] = SlotState()
 
+    @obs.traced("prefill.chunks", cat="serve")
     def _run_prefill_chunks(self) -> List[Tuple[int, int, bool]]:
         """The tick's prefill phase (continuous batching): consume at most
         ``prefill_budget`` prompt tokens as ``prefill_chunk``-token buckets
@@ -803,6 +843,7 @@ class InferenceEngine:
                 self.kv.free(s.rid)
         return (s.rid, first, fin)
 
+    @obs.traced("decode.tick", cat="serve")
     def decode_tick(self) -> List[Tuple[int, int, bool]]:
         """One engine tick.  With chunked prefill enabled the tick is a
         token-budget schedule: first the prefill phase (at most
@@ -834,17 +875,29 @@ class InferenceEngine:
             return pre
         active = np.array(runnable)
         self._step_count = getattr(self, "_step_count", 0) + 1
+        # routing telemetry: every Nth tick runs the counts-emitting twin
+        # executable (same math — only an extra histogram output)
+        routed = (self.routing_sample_every > 0
+                  and "decode_routed" in self.compiled
+                  and self._step_count % self.routing_sample_every == 0)
+        key = "decode_routed" if routed else "decode"
         rng = jax.random.key_data(jax.random.PRNGKey(self._step_count))
         with self._cache_lock:
             if self.paged:
-                nxt, self.cache = self.compiled["decode"](
+                res = self.compiled[key](
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths), jnp.asarray(active),
                     jnp.asarray(self.block_tables), rng)
             else:
-                nxt, self.cache = self.compiled["decode"](
+                res = self.compiled[key](
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths), jnp.asarray(active), rng)
+            if routed:
+                nxt, self.cache, counts = res
+            else:
+                nxt, self.cache = res
+        if routed:
+            self._accumulate_routing(counts)
         nxt = np.asarray(nxt)
         out = []
         for i, s in enumerate(self.slots):
@@ -861,6 +914,41 @@ class InferenceEngine:
                     self.kv.free(s.rid)
             out.append((s.rid, int(nxt[i]), fin))
         return pre + out
+
+    # --------------------------------------------------- routing telemetry
+    def _accumulate_routing(self, counts) -> None:
+        """Fold one sampled tick's [L_moe, E] expert counts into the
+        host-side histogram and emit a skew counter sample."""
+        c = np.asarray(counts, np.int64)
+        if self._routing_counts is None or \
+                self._routing_counts.shape != c.shape:
+            self._routing_counts = np.zeros_like(c)
+        self._routing_counts += c
+        self._routing_samples += 1
+        tr = obs.get_tracer()
+        if tr.enabled:
+            tot = np.maximum(c.sum(axis=-1), 1)
+            tr.counter("routing.top_expert_share",
+                       float((c.max(axis=-1) / tot).mean()), cat="routing")
+
+    def routing_stats(self) -> Optional[dict]:
+        """Accumulated per-expert routing histogram (None until a sampled
+        tick has landed).  ``counts`` is [L_moe, E] token counts;
+        ``top_expert_share`` / ``expert_cv`` are layer-averaged skew
+        metrics (heavy-tailed routing shows up as share >> 1/E and
+        cv >> 0) — the signal the ROADMAP's skew-aware expert replication
+        will act on."""
+        if self._routing_counts is None or self._routing_samples == 0:
+            return None
+        c = self._routing_counts.astype(np.float64)
+        tot = np.maximum(c.sum(axis=-1), 1.0)
+        share = c.max(axis=-1) / tot
+        mean = np.maximum(c.mean(axis=-1), 1e-9)
+        cv = c.std(axis=-1) / mean
+        return {"samples": self._routing_samples,
+                "counts": self._routing_counts.copy(),
+                "top_expert_share": float(share.mean()),
+                "expert_cv": float(cv.mean())}
 
 
 # ------------------------------------------------------------- compilation
@@ -879,7 +967,8 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
                            temperature: float = 0.0,
                            kv_mode: str = "dense",
                            kv_block_size: int = 0,
-                           prefill_chunk: int = 0
+                           prefill_chunk: int = 0,
+                           collect_routing: bool = False
                            ) -> Tuple[Dict[str, Any], float]:
     """AOT-compile decode + prefill executables for an instance.
 
@@ -889,6 +978,9 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
     block-table variants (cache_sds is then the pool layout).
     ``prefill_chunk > 0`` additionally compiles the continuous-batching
     chunk-prefill executable (one shape — the chunk bucket).
+    ``collect_routing`` additionally compiles the "decode_routed" twin that
+    also returns per-(layer, expert) routing counts (obs telemetry); the
+    default decode path is byte-identical either way.
     Returns (executables, seconds).
     """
     t0 = time.perf_counter()
@@ -910,11 +1002,31 @@ def compile_step_functions(mcfg: ModelConfig, cfg: ElasticConfig, mesh,
         bt_sd = jax.ShapeDtypeStruct((B, MB), jnp.int32, sharding=repl)
         out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
                                   act_sd, bt_sd, rng_sd).compile()
+        if collect_routing:
+            assert M.routing_stats_supported(mcfg), \
+                f"{mcfg.name}: routing telemetry unsupported"
+            decr = jax.jit(
+                partial(_paged_decode_routed_fn, mcfg, parallel, temperature),
+                donate_argnums=(1,),
+                out_shardings=(repl, cache_out, repl))
+            out["decode_routed"] = decr.lower(
+                params_sds, cache_sds, tok_sd, tok_sd, act_sd, bt_sd,
+                rng_sd).compile()
     else:
         dec = jax.jit(partial(_decode_fn, mcfg, parallel, temperature),
                       donate_argnums=(1,), out_shardings=(repl, cache_out))
         out["decode"] = dec.lower(params_sds, cache_sds, tok_sd, tok_sd,
                                   act_sd, rng_sd).compile()
+        if collect_routing:
+            assert M.routing_stats_supported(mcfg), \
+                f"{mcfg.name}: routing telemetry unsupported"
+            decr = jax.jit(
+                partial(_decode_routed_fn, mcfg, parallel, temperature),
+                donate_argnums=(1,),
+                out_shardings=(repl, cache_out, repl))
+            out["decode_routed"] = decr.lower(
+                params_sds, cache_sds, tok_sd, tok_sd, act_sd,
+                rng_sd).compile()
     for S_pad in prefill_buckets:
         toks = jax.ShapeDtypeStruct((1, S_pad), jnp.int32, sharding=repl)
         len_sd = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)

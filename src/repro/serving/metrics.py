@@ -38,19 +38,29 @@ def slo_attainment(reqs: Sequence[Request], slo: SLO) -> float:
 
 def slo_attainment_timeline(reqs: Sequence[Request], slo: SLO,
                             window_s: float = 10.0, dt: float = 1.0):
-    """(times, attainment) over sliding windows keyed by finish time."""
+    """(times, attainment) over sliding windows keyed by finish time.
+
+    Each request's verdict is judged once and windows resolve as two
+    sorted-boundary lookups (O(N log N + T log N), not the naive O(T·N)
+    per-window rescan); the window is inclusive at both ends
+    (``t - window_s <= finish_s <= t``) and empty windows are NaN,
+    identical to the original rescan."""
     finished = [r for r in reqs if r.finish_s is not None]
     if not finished:
         return np.array([]), np.array([])
     t_end = max(r.finish_s for r in finished)
     ts = np.arange(0.0, t_end + dt, dt)
-    att = []
-    for t in ts:
-        win = [r for r in finished if t - window_s <= r.finish_s <= t]
-        oks = [meets_slo(r, slo) for r in win]
-        oks = [o for o in oks if o is not None]
-        att.append(sum(oks) / len(oks) if oks else np.nan)
-    return ts, np.array(att)
+    judged = [(r.finish_s, v) for r in finished
+              for v in (meets_slo(r, slo),) if v is not None]
+    judged.sort(key=lambda fv: fv[0])
+    fs = np.array([f for f, _ in judged])
+    ok_cum = np.concatenate([[0], np.cumsum([v for _, v in judged])])
+    hi = np.searchsorted(fs, ts, side="right")       # finish_s <= t
+    lo = np.searchsorted(fs, ts - window_s, side="left")  # >= t - window_s
+    n = hi - lo
+    att = np.where(n > 0, (ok_cum[hi] - ok_cum[lo]) / np.maximum(n, 1),
+                   np.nan)
+    return ts, att
 
 
 def iter_itls(reqs: Sequence[Request]) -> Iterable[float]:
@@ -108,14 +118,15 @@ def kv_pool_stats(backend) -> Optional[KVPoolStats]:
 
 def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
               backend=None) -> dict:
-    ttfts = [r.ttft for r in reqs if r.ttft is not None]
     tpots = [r.tpot for r in reqs if r.tpot is not None]
     lat = latency_percentiles(reqs)
     out = {
         "n": len(reqs),
         "finished": sum(1 for r in reqs if r.finish_s is not None),
-        "ttft_p50": float(np.median(ttfts)) if ttfts else float("nan"),
-        "ttft_p99": float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        # TTFT percentiles come straight from the latency_percentiles core
+        # (np.percentile(x, 50) == np.median; NaN when empty — identical)
+        "ttft_p50": lat["ttft_p50"],
+        "ttft_p99": lat["ttft_p99"],
         "tpot_p50": float(np.median(tpots)) if tpots else float("nan"),
         "itl_p50": lat["itl_p50"],
         "itl_p99": lat["itl_p99"],
@@ -130,6 +141,13 @@ def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
         sc = scaling_overlap_stats(backend)
         if sc is not None:
             out.update(sc)
+        rt = getattr(backend, "routing_stats", lambda: None)()
+        if rt:
+            # expert-routing skew counters (DESIGN.md §9): sampled decode
+            # ticks, layer-averaged top-expert share and per-layer CV
+            out["routing_samples"] = int(rt["samples"])
+            out["routing_top_expert_share"] = float(rt["top_expert_share"])
+            out["routing_expert_cv"] = float(rt["expert_cv"])
     return out
 
 

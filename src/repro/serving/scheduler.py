@@ -24,6 +24,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro import obs
+
 
 @dataclass
 class PrefillJob:
@@ -88,13 +90,25 @@ class TokenBudgetScheduler:
             while pos < job.total:
                 take = min(self.chunk, job.total - pos)
                 if take > left:
-                    return out
+                    return self._record(out)
                 out.append(ChunkPlan(slot=job.slot, rid=job.rid, start=pos,
                                      take=take, final=pos + take == job.total))
                 pos += take
                 left -= take
             if left <= 0:
                 break
+        return self._record(out)
+
+    @staticmethod
+    def _record(out: List[ChunkPlan]) -> List[ChunkPlan]:
+        # shared policy code => one instrumentation point covers both
+        # backends (DESIGN.md §9); no-op under the NULL_TRACER
+        tr = obs.get_tracer()
+        if tr.enabled and out:
+            tr.instant("chunk.plan", cat="serve",
+                       args={"chunks": len(out),
+                             "tokens": sum(p.take for p in out),
+                             "rids": sorted({p.rid for p in out})})
         return out
 
 

@@ -38,6 +38,7 @@ import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost
 from repro.core.topology import ElasticConfig, kv_cache_bytes
@@ -167,11 +168,21 @@ class SimScalingTask:
     def advance(self, now: float) -> ScalePhase:
         if self.phase is ScalePhase.STAGING and now >= self.event.t_ready:
             self.phase = ScalePhase.COMMITTING
+            # sim-time span, explicit timestamps (tracer clock domain is
+            # whatever the installed clock reads — see DESIGN.md §9)
+            obs.get_tracer().complete(
+                "scale.STAGING", self.event.t_command, self.event.t_ready,
+                cat="scale", tid="sim-scale",
+                args={"old_ndev": self.event.old_ndev,
+                      "new_ndev": self.event.new_ndev})
         if self.phase is ScalePhase.COMMITTING:
             self.sim.ndev = self.event.new_ndev
             self.sim.extra_devices_during_scale = 0
             self.sim.scale = None
             self.phase = ScalePhase.DONE
+            obs.get_tracer().instant(
+                "scale.commit", cat="scale", t=now, tid="sim-scale",
+                args={"new_ndev": self.event.new_ndev})
         return self.phase
 
 
@@ -388,6 +399,8 @@ class ServingSimulator:
             self._itl_base.pop(victim[2].rid, None)
             self._stall_gaps.pop(victim[2].rid, None)
             self.preemptions += 1
+            obs.get_tracer().instant("preempt", cat="serve", t=self.t,
+                                     tid="sim", args={"rid": victim[2].rid})
 
     def _stall_running(self, delta: float) -> None:
         """Shift every in-flight finish by ``delta`` (a modelled decode
@@ -436,6 +449,12 @@ class ServingSimulator:
                 "migration_bytes": sum(e.migration_bytes
                                        for e in self.events)}
 
+    def routing_stats(self) -> Optional[Dict[str, float]]:
+        """ServingBackend parity with ``ElasticServer.routing_stats``:
+        the roofline model has no router, so always None (the driver and
+        ``metrics.summarize`` treat None as telemetry-absent)."""
+        return None
+
     def kv_stats(self) -> Optional[Dict[str, float]]:
         """Block-pool stats (None in dense mode); serving/metrics.py."""
         if self.kv_mode != "paged":
@@ -459,6 +478,16 @@ class ServingSimulator:
         self.t = now
         done: List[Request] = []
         ndev, admit = self._serving_capacity()
+        tr = obs.get_tracer()
+        if tr.enabled and ndev > 0 and self.running:
+            # one modelled decode step per quantum — explicit sim-time span
+            # at the roofline-modelled duration, so an overlap trace reads
+            # the same on both backends (DESIGN.md §9)
+            tr.complete(
+                "decode.tick", now,
+                now + self.perf.decode_step_s(len(self.running), ndev),
+                cat="serve", tid="sim",
+                args={"batch": len(self.running), "ndev": ndev})
         if ndev > 0:
             slot_cap = int(self.perf.max_batch_per_dev * ndev * self.kv_frac)
             if self.kv_mode == "paged":
@@ -478,6 +507,8 @@ class ServingSimulator:
                       >= self.perf.max_batch(ndev, self.kv_frac)):
                     break
                 self.queue.pop(0)
+                tr.instant("req.admit", cat="req", t=self.t, tid="sim",
+                           args={"rid": req.rid})
                 if self.scheduler is not None:
                     # chunked: prefill advances chunk-by-chunk below; the
                     # first token only lands when the last chunk does
@@ -489,6 +520,8 @@ class ServingSimulator:
                 t_first = self.t + self.perf.prefill_s(req.prompt_len, ndev)
                 if req.first_token_s is None:
                     req.first_token_s = t_first
+                    tr.instant("req.first_token", cat="req", t=t_first,
+                               tid="sim", args={"rid": req.rid})
                 base = self.perf.decode_step_s(
                     max(len(self.running) + 1, 1), ndev)
                 if self.prefill_chunk == 0:
@@ -520,6 +553,9 @@ class ServingSimulator:
                         req = self._prefill_reqs.pop(plan.rid)
                         if req.first_token_s is None:
                             req.first_token_s = done_t
+                            tr.instant("req.first_token", cat="req",
+                                       t=done_t, tid="sim",
+                                       args={"rid": req.rid})
                         base = self.perf.decode_step_s(
                             max(len(self.running) + 1, 1), ndev)
                         self._itl_base[req.rid] = base
@@ -531,6 +567,8 @@ class ServingSimulator:
             while self.running and self.running[0][0] <= self.t:
                 _, _, req, _ = heapq.heappop(self.running)
                 req.finish_s = self.t
+                tr.instant("req.finish", cat="req", t=self.t, tid="sim",
+                           args={"rid": req.rid})
                 if self.prefill_chunk is not None:
                     self._synth_token_times(req)
                 done.append(req)

@@ -1,0 +1,183 @@
+"""Unit tests for serving/metrics.py: SLO verdicts on partially-complete
+requests, ITL iteration edge cases, backend-stat normalization, and
+old-vs-new parity for the single-pass ``slo_attainment_timeline``."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.metrics import (SLO, iter_itls, kv_pool_stats,
+                                   latency_percentiles, meets_slo,
+                                   scaling_overlap_stats, slo_attainment,
+                                   slo_attainment_timeline, summarize)
+from repro.serving.workload import Request
+
+
+def req(rid, arrival=0.0, first=None, finish=None, out_len=10,
+        token_times=None):
+    r = Request(rid, arrival, prompt_len=8, output_len=out_len)
+    r.first_token_s = first
+    r.finish_s = finish
+    r.token_times = token_times
+    return r
+
+
+SLO_1 = SLO(ttft_s=1.0, tpot_s=0.1)
+
+
+# ---------------------------------------------------------------- meets_slo
+
+def test_meets_slo_partial_completion():
+    assert meets_slo(req(0), SLO_1) is None                    # nothing yet
+    assert meets_slo(req(1, first=0.5), SLO_1) is None         # no finish
+    # finish but no first token (preempted/declined): no ttft -> no verdict
+    assert meets_slo(req(2, finish=3.0), SLO_1) is None
+    assert meets_slo(req(3, first=0.5, finish=1.1), SLO_1) is True
+    assert meets_slo(req(4, first=2.0, finish=2.5), SLO_1) is False  # ttft
+    assert meets_slo(req(5, first=0.5, finish=5.0), SLO_1) is False  # tpot
+    # single-token output: tpot undefined, verdict on ttft alone
+    assert meets_slo(req(6, first=0.5, finish=0.5, out_len=1), SLO_1) is True
+
+
+def test_slo_attainment_ignores_unjudgeable():
+    reqs = [req(0), req(1, first=0.5, finish=1.0), req(2, first=2.0,
+                                                       finish=2.1)]
+    assert slo_attainment(reqs, SLO_1) == 0.5
+    assert math.isnan(slo_attainment([req(0)], SLO_1))
+
+
+# ----------------------------------------------------------------- iter_itls
+
+def test_iter_itls_edge_cases():
+    assert list(iter_itls([])) == []
+    assert list(iter_itls([req(0)])) == []                     # no times
+    assert list(iter_itls([req(0, token_times=[1.0])])) == []  # 1 token
+    got = list(iter_itls([req(0, token_times=[1.0, 1.5, 2.5]),
+                          req(1, token_times=[0.0, 0.25])]))
+    assert got == pytest.approx([0.5, 1.0, 0.25])
+
+
+def test_latency_percentiles_nan_when_empty():
+    lat = latency_percentiles([])
+    assert all(math.isnan(v) for v in lat.values())
+
+
+# -------------------------------------------------- backend normalization
+
+class _Backend:
+    def __init__(self, kv=None, scaling=None, routing=None):
+        self._kv, self._scaling, self._routing = kv, scaling, routing
+
+    def kv_stats(self):
+        return self._kv
+
+    def scaling_summary(self):
+        return self._scaling
+
+    def routing_stats(self):
+        return self._routing
+
+
+def test_kv_pool_stats_normalization():
+    assert kv_pool_stats(object()) is None          # no kv_stats at all
+    assert kv_pool_stats(_Backend()) is None        # dense backend: None
+    st = kv_pool_stats(_Backend(kv={"num_blocks": 8, "used_blocks": 3,
+                                    "utilization": 0.375}))
+    assert (st.num_blocks, st.used_blocks) == (8, 3)
+    assert st.preemptions == 0                      # missing key defaults
+
+
+def test_scaling_overlap_stats_normalization():
+    assert scaling_overlap_stats(object()) is None
+    assert scaling_overlap_stats(_Backend()) is None      # no events yet
+    out = scaling_overlap_stats(_Backend(scaling={"decode_stall_s": 0.5}))
+    assert out == {"staging_mode": "serial", "decode_stall_s": 0.5}
+    out = scaling_overlap_stats(_Backend(scaling={
+        "staging_mode": "overlap", "decode_stall_s": 0.1,
+        "overlap_efficiency": 1.5, "scaledown_mode": "migrate",
+        "migrated_blocks": 4, "migration_bytes": 1024}))
+    assert out["overlap_efficiency"] == 1.5
+    assert out["scaledown_mode"] == "migrate"
+    assert out["migrated_blocks"] == 4 and out["migration_bytes"] == 1024
+
+
+def test_summarize_ttft_matches_percentile_core_and_routing():
+    reqs = [req(i, first=0.1 * (i + 1), finish=1.0 + i) for i in range(5)]
+    out = summarize(reqs, slo=SLO_1)
+    lat = latency_percentiles(reqs)
+    assert out["ttft_p50"] == lat["ttft_p50"]
+    assert out["ttft_p99"] == lat["ttft_p99"]
+    ttfts = [r.ttft for r in reqs]
+    assert out["ttft_p50"] == float(np.median(ttfts))  # p50 == median
+    assert "routing_samples" not in out
+    empty = summarize([])
+    assert math.isnan(empty["ttft_p50"]) and math.isnan(empty["ttft_p99"])
+
+    rt = {"samples": 3, "counts": np.ones((2, 4)),
+          "top_expert_share": 0.25, "expert_cv": 0.0}
+    out = summarize(reqs, backend=_Backend(routing=rt))
+    assert out["routing_samples"] == 3
+    assert out["routing_top_expert_share"] == 0.25
+    assert out["routing_expert_cv"] == 0.0
+    # telemetry-absent backend adds no routing keys
+    out = summarize(reqs, backend=_Backend())
+    assert "routing_samples" not in out
+
+
+# ------------------------------------------------------- timeline parity
+
+def _timeline_reference(reqs, slo, window_s=10.0, dt=1.0):
+    """The original O(T·N) rescan, kept verbatim as the parity oracle."""
+    finished = [r for r in reqs if r.finish_s is not None]
+    if not finished:
+        return np.array([]), np.array([])
+    t_end = max(r.finish_s for r in finished)
+    ts = np.arange(0.0, t_end + dt, dt)
+    att = []
+    for t in ts:
+        win = [r for r in finished if t - window_s <= r.finish_s <= t]
+        oks = [meets_slo(r, slo) for r in win]
+        oks = [o for o in oks if o is not None]
+        att.append(sum(oks) / len(oks) if oks else np.nan)
+    return ts, np.array(att)
+
+
+def _random_reqs(rng, n):
+    reqs = []
+    for i in range(n):
+        finish = float(rng.uniform(0, 60)) if rng.random() < 0.8 else None
+        first = (float(rng.uniform(0, 2.0))
+                 if finish is not None and rng.random() < 0.9 else None)
+        reqs.append(req(i, first=first, finish=finish,
+                        out_len=int(rng.integers(1, 20))))
+    return reqs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("window_s,dt", [(10.0, 1.0), (3.5, 0.7), (0.5, 2.0)])
+def test_timeline_parity_old_vs_new(seed, window_s, dt):
+    rng = np.random.default_rng(seed)
+    reqs = _random_reqs(rng, 40)
+    ts_new, att_new = slo_attainment_timeline(reqs, SLO_1, window_s, dt)
+    ts_ref, att_ref = _timeline_reference(reqs, SLO_1, window_s, dt)
+    np.testing.assert_array_equal(ts_new, ts_ref)
+    np.testing.assert_array_equal(att_new, att_ref)  # NaN positions too
+
+
+def test_timeline_empty_and_unjudgeable():
+    assert slo_attainment_timeline([], SLO_1)[0].size == 0
+    # finishes exist but no verdicts (no first_token): all-NaN timeline
+    ts, att = slo_attainment_timeline([req(0, finish=2.0)], SLO_1)
+    assert ts.size == len(att) and np.isnan(att).all()
+
+
+def test_timeline_window_inclusive_both_ends():
+    r = req(0, first=0.1, finish=5.0, out_len=1)  # tpot undefined: ttft-only
+    ts, att = slo_attainment_timeline([r], SLO_1, window_s=5.0, dt=5.0)
+    # at t=5.0: window [0, 5] includes finish_s == t
+    assert att[-1] == 1.0
+    ts, att = slo_attainment_timeline([r], SLO_1, window_s=2.0, dt=1.0)
+    # at t=7.0 the window [5, 7] still includes it; beyond t_end not sampled
+    assert att[-1] == 1.0

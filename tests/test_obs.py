@@ -1,0 +1,236 @@
+"""Unit tests for the tracing/telemetry layer (repro.obs, DESIGN.md §9):
+ring-buffer bounds, thread lanes, the disabled fast path, the injectable
+clock, Chrome-trace export schema, and tools/trace_report.py."""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.obs import tracer as tracer_mod
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _no_global_tracer():
+    """Tests install their own tracer; always restore the null default."""
+    yield
+    obs.install(None)
+
+
+# ---------------------------------------------------------------- recording
+
+def test_span_complete_instant_counter():
+    t = iter(range(100))
+    tr = obs.Tracer(clock=lambda: float(next(t)))
+    with tr.span("work", cat="serve", args={"k": 1}):
+        pass
+    tr.complete("staged", 10.0, 12.5, cat="transfer")
+    tr.instant("admit", cat="req", args={"rid": 7})
+    tr.counter("depth", 3.0, cat="serve")
+    evs = tr.events()
+    assert [e.ph for e in evs] == ["X", "X", "i", "C"]
+    span = evs[0]
+    assert span.name == "work" and span.cat == "serve"
+    assert (span.t0, span.t1) == (0.0, 1.0) and span.dur == 1.0
+    assert evs[1].dur == 2.5
+    assert evs[3].args == {"value": 3.0}
+
+
+def test_ring_buffer_bounded():
+    tr = obs.Tracer(capacity=16)
+    for i in range(100):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 16
+    assert evs[0].name == "e84" and evs[-1].name == "e99"  # oldest evicted
+    tr.clear()
+    assert tr.events() == []
+
+
+def test_explicit_time_span_out_of_order_ok():
+    tr = obs.Tracer()
+    tr.complete("later", 5.0, 6.0)
+    tr.complete("earlier", 1.0, 2.0)   # explicit timestamps need no ordering
+    assert [e.t0 for e in tr.events()] == [5.0, 1.0]
+
+
+def test_thread_lanes_and_names():
+    tr = obs.Tracer()
+    tr.instant("main-ev")
+
+    def worker():
+        tr.complete("op", 0.0, 1.0, cat="transfer")
+
+    th = threading.Thread(target=worker, name="hmm-transfer-test")
+    th.start()
+    th.join()
+    main_ev, op = tr.events()
+    assert main_ev.tid == threading.get_ident()
+    assert op.tid != main_ev.tid
+    assert tr.thread_names()[op.tid] == "hmm-transfer-test"
+
+
+def test_string_lane_passthrough():
+    tr = obs.Tracer()
+    tr.complete("scale.STAGING", 0.0, 1.0, cat="scale", tid="scale")
+    assert tr.events()[0].tid == "scale"
+
+
+def test_metrics_registry():
+    m = obs.MetricsRegistry()
+    m.inc("ticks")
+    m.inc("ticks", 2)
+    m.gauge("util", 0.5)
+    snap = m.snapshot()
+    assert snap["counters"] == {"ticks": 3}
+    assert snap["gauges"] == {"util": 0.5}
+
+
+# ------------------------------------------------------------ null fast path
+
+def test_null_tracer_is_default_and_noop():
+    assert obs.get_tracer() is obs.NULL_TRACER
+    nt = obs.NULL_TRACER
+    assert nt.enabled is False and nt.metrics is None
+    nt.complete("x", 0, 1)
+    nt.instant("x")
+    nt.counter("x", 1.0)
+    with nt.span("x"):
+        pass
+    assert nt.events() == [] and nt.thread_names() == {}
+    assert nt.now() > 0  # still a usable clock for unconditional call sites
+
+
+def test_install_and_reset():
+    tr = obs.Tracer()
+    assert obs.install(tr) is tr
+    assert obs.get_tracer() is tr
+    assert obs.install(None) is obs.NULL_TRACER
+    assert obs.get_tracer() is obs.NULL_TRACER
+
+
+def test_traced_decorator_short_circuits_when_disabled(monkeypatch):
+    calls = []
+
+    @obs.traced("unit.fn", cat="test")
+    def fn(x):
+        calls.append(x)
+        return x * 2
+
+    # disabled: no span machinery, result passes through
+    assert fn(3) == 6
+    tr = obs.Tracer()
+    obs.install(tr)
+    assert fn(4) == 8
+    assert calls == [3, 4]
+    evs = tr.events()
+    assert len(evs) == 1 and evs[0].name == "unit.fn" and evs[0].cat == "test"
+
+    # sabotage the real span path: the disabled branch must never touch it
+    obs.install(None)
+    monkeypatch.setattr(obs.Tracer, "span",
+                        lambda *a, **k: pytest.fail("span on disabled path"))
+    assert fn(5) == 10
+
+
+# ------------------------------------------------------------------- export
+
+def _sample_tracer():
+    tr = obs.Tracer(clock=lambda: 0.0)
+    tr.complete("scale.STAGING", 100.0, 101.0, cat="scale", tid="scale")
+    tr.complete("decode.tick", 100.2, 100.3, cat="serve")
+    tr.instant("req.admit", cat="req", t=100.1, args={"rid": 1})
+    tr.counter("routing.top_expert_share", 0.25, cat="routing", t=100.4)
+    return tr
+
+
+def test_chrome_trace_schema_and_normalization():
+    tr = _sample_tracer()
+    doc = obs.chrome_trace(tr, extra_metadata={"run": "unit"})
+    obs.validate_trace(doc)
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["metadata"] == {"run": "unit"}
+    evs = [r for r in doc["traceEvents"] if r["ph"] != "M"]
+    # ts normalized to µs relative to the earliest event
+    assert min(r["ts"] for r in evs) == 0.0
+    span = next(r for r in evs if r["name"] == "scale.STAGING")
+    assert span["ph"] == "X" and span["dur"] == pytest.approx(1e6)
+    assert span["tid"] < 0  # synthetic string lane
+    names = [r for r in doc["traceEvents"]
+             if r["ph"] == "M" and r["name"] == "thread_name"]
+    assert any(r["args"]["name"] == "scale" and r["tid"] == span["tid"]
+               for r in names)
+    inst = next(r for r in evs if r["name"] == "req.admit")
+    assert inst["s"] == "t" and inst["args"] == {"rid": 1}
+    ctr = next(r for r in evs if r["ph"] == "C")
+    assert ctr["args"] == {"value": 0.25}
+
+
+def test_write_and_load_roundtrip(tmp_path):
+    tr = _sample_tracer()
+    path = tmp_path / "trace.json"
+    written = obs.write_chrome_trace(str(path), tr)
+    loaded = obs.load_trace(str(path))
+    assert loaded == json.loads(json.dumps(written))
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(AssertionError):
+        obs.validate_trace({"events": []})
+    with pytest.raises(AssertionError):
+        obs.validate_trace({"traceEvents": [{"ph": "X", "pid": 1, "tid": 0,
+                                             "ts": 0, "name": "x"}]})  # no dur
+
+
+def test_sim_clock_domain():
+    sim_t = [0.0]
+    tr = obs.Tracer(clock=lambda: sim_t[0])
+    with tr.span("tick"):
+        sim_t[0] = 2.5
+    ev = tr.events()[0]
+    assert (ev.t0, ev.t1) == (0.0, 2.5)
+
+
+# ------------------------------------------------------------- trace_report
+
+def _report_mod():
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import trace_report
+    finally:
+        sys.path.pop(0)
+    return trace_report
+
+
+def test_trace_report_summary_and_overlap(tmp_path, capsys):
+    rep = _report_mod()
+    tr = obs.Tracer()
+    tr.complete("w0", 0.0, 1.0, cat="transfer", tid="a")
+    tr.complete("w0", 2.0, 3.0, cat="transfer", tid="a")
+    tr.complete("decode.tick", 0.5, 0.6, cat="serve")       # overlaps w0 #1
+    tr.complete("scale.STAGING", 0.0, 3.0, cat="scale", tid="scale")
+    doc = obs.chrome_trace(tr)
+
+    rows = rep.summary_rows(doc)
+    by_name = {r[1]: r for r in rows}
+    assert by_name["w0"][2] == 2                      # count
+    assert by_name["w0"][3] == pytest.approx(2000.0)  # total_ms
+    assert rows[0][1] == "scale.STAGING"              # sorted by total desc
+    only = rep.summary_rows(doc, cat="transfer")
+    assert {r[1] for r in only} == {"w0"}
+
+    n_tr, n_ov, n_ticks = rep.overlap_report(doc)
+    assert (n_tr, n_ov, n_ticks) == (2, 1, 1)
+
+    path = tmp_path / "t.json"
+    path.write_text(json.dumps(doc))
+    assert rep.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "span summary" in out and "phase timeline" in out
+    assert "transfer spans overlapping a decode tick: 1" in out
