@@ -1,0 +1,119 @@
+"""Skew-aware expert rebalancing A/B (beyond-paper CI smoke, DESIGN.md §10).
+
+Zipf-routed pooled workload, same model / devices / arrivals, two arms:
+
+* **unbalanced** — pooled expert store, no rebalancer: every expert serves
+  from its primary page, the hottest rank carries the full Zipf head;
+* **rebalanced** — the shared :class:`RebalancePolicy` replicates hot
+  experts onto the least-loaded ranks and demotes cold experts into the
+  pinned-host tier mid-serving.
+
+Reported per model (``expert_skew_balance``): rebalance passes, pages
+replicated/demoted, and the layer-averaged **max per-rank routed share**
+(``serving.rebalance.max_rank_load`` — 1/ndev is perfect balance) under the
+primary-only vs the replica-aware serving assignment on the *same*
+synthesized histogram.  The rebalanced arm must never be worse.
+
+``expert_skew_scale`` then prices the next scale event with the real
+planner (byte-exact ``plan_elastic_paged``) from each arm's live table:
+with the cold tier populated, demoted movers stream H2D — the cold arm's
+expert-P2P bytes drop and the freed interconnect shows up as ``host_MB``
+(the ``host`` cost-model bucket), with the pinned tier's footprint in
+``tier_MB``.
+"""
+from benchmarks.common import TP_OF, Table, cfg_of
+from repro.configs import get_config
+from repro.core.costmodel import plan_cost
+from repro.core.expert_pages import pooled_layout
+from repro.core.scaling_plan import Op, plan_elastic_paged
+from repro.core.topology import model_tensors
+from repro.serving.rebalance import RebalancePolicy, max_rank_load
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workload import make_workload
+
+# the two small paper MoEs: deepseek-v3's 61x256 table adds nothing to the
+# A/B beyond wall-clock
+MODELS = ["deepseek-v2-lite-16b", "qwen3-30b-a3b"]
+NDEV = 6
+SKEW = 1.2
+TRANSITION = (6, 8)
+
+
+def _arm(name: str, rebalance: bool) -> ServingSimulator:
+    mcfg = get_config(name)
+    pol = RebalancePolicy(min_samples=2, cooldown_s=1.0,
+                          max_actions=32) if rebalance else None
+    sim = ServingSimulator(mcfg, tp=TP_OF.get(name, 2), ndev=NDEV,
+                           expert_mode="pooled", rebalance=pol,
+                           routing_skew=SKEW)
+    reqs = make_workload(duration_s=8.0, rps_fn=lambda t: 4.0,
+                         prompt_len=256, output_range=(64, 64), seed=0)
+    sim.run(reqs, until=12.0)
+    return sim
+
+
+def _expert_bytes(plan, op: Op) -> int:
+    return sum(s.nbytes for s in plan.steps
+               if s.op == op and "/expert" in s.key.tensor)
+
+
+def run():
+    bal = Table("expert_skew_balance",
+                ["model", "passes", "replicated", "demoted",
+                 "max_load_unbal", "max_load_rebal", "improve%"])
+    sca = Table("expert_skew_scale",
+                ["model", "transition", "warm_p2p_MB", "cold_p2p_MB",
+                 "host_MB", "host_s", "tier_MB"])
+    for name in MODELS:
+        mcfg = get_config(name)
+        tp = TP_OF.get(name, 2)
+        unbal = _arm(name, rebalance=False)
+        rebal = _arm(name, rebalance=True)
+        summ = rebal.rebalance_summary()
+        assert summ is not None and summ["replicated"] >= 1 \
+            and summ["demoted"] >= 1, summ
+
+        # balance metric on the shared Zipf shares: primary-only assignment
+        # (the unbalanced arm's layout) vs the replica-aware least-loaded
+        # assignment over the rebalanced arm's copies
+        share = rebal.routing._share
+        L = mcfg.num_layers - mcfg.first_k_dense
+        cfg = rebal.current_config()
+        before = pooled_layout(unbal.expert_pages.active, cfg, L,
+                               mcfg.num_experts, 2 * L * mcfg.num_experts)
+        after = pooled_layout(rebal.expert_pages.active, cfg, L,
+                              mcfg.num_experts, 2 * L * mcfg.num_experts,
+                              replicas=rebal.expert_pages.replicas,
+                              load=share, slots_per_rank=rebal._elm())
+        m0 = max_rank_load(share, before["edest"], cfg.ndev)
+        m1 = max_rank_load(share, after["edest"], cfg.ndev)
+        assert m1 <= m0, (name, m0, m1)
+        bal.add(name, summ["passes"], summ["replicated"], summ["demoted"],
+                m0, m1, 100.0 * (1 - m1 / m0) if m0 else 0.0)
+
+        # scale-event pricing from each arm's LIVE table (clones: don't
+        # disturb the sims).  The cold tier turns demoted movers' P2P into
+        # H2D — byte-exact planner, calibrated cost model.
+        n_old, n_new = TRANSITION
+        old, new = cfg_of(n_old, tp), cfg_of(n_new, tp)
+        tensors = model_tensors(mcfg, tp)
+        warm_plan = plan_elastic_paged(tensors, old, new,
+                                       unbal.expert_pages.clone(),
+                                       first_k_dense=mcfg.first_k_dense)
+        cold_table = rebal.expert_pages.clone()
+        assert cold_table.host, "rebalanced arm must have a cold tier"
+        cold_plan = plan_elastic_paged(tensors, old, new, cold_table,
+                                       first_k_dense=mcfg.first_k_dense)
+        warm_p2p = _expert_bytes(warm_plan, Op.P2P)
+        cold_p2p = _expert_bytes(cold_plan, Op.P2P)
+        cold_host = _expert_bytes(cold_plan, Op.HOST)
+        assert cold_p2p + cold_host > 0 and cold_p2p <= warm_p2p + cold_host
+        sca.add(name, f"{n_old}->{n_new}", warm_p2p / 1e6, cold_p2p / 1e6,
+                cold_host / 1e6, plan_cost(cold_plan).breakdown["host"],
+                summ["host_tier_bytes"] / 1e6)
+    return [bal, sca]
+
+
+if __name__ == "__main__":
+    for t in run():
+        t.show()

@@ -26,10 +26,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation, bootup_breakdown, engine_measured,
-                            expert_remap, granularity, kv_pressure,
-                            latency_breakdown, memory_vs_ep, overlap,
-                            peak_memory, scaledown_latency, scaleup_latency,
-                            slo_compliance, slo_dynamics,
+                            expert_remap, expert_skew, granularity,
+                            kv_pressure, latency_breakdown, memory_vs_ep,
+                            overlap, peak_memory, scaledown_latency,
+                            scaleup_latency, slo_compliance, slo_dynamics,
                             throughput_windows, trace_overhead)
     modules = [
         ("fig1", granularity),
@@ -48,6 +48,9 @@ def main() -> None:
         # can smoke it via --only without the slower admission sweep)
         ("chunked_itl", kv_pressure),
         ("expert_remap", expert_remap),
+        # skew-aware rebalancing A/B: Zipf routing, replicate-hot /
+        # demote-cold mid-serving, scale-event pricing with the cold tier
+        ("expert_skew", expert_skew),
         ("overlap", overlap),
         # measured drain-vs-migrate scale-down on the real engine (the
         # fig12 entry above is the cost-model projection)

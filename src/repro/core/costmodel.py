@@ -23,6 +23,9 @@ class HardwareModel:
     disk_bw: float = 0.4e9          # bytes/s per device, disk -> HBM
     p2p_bw: float = 120e9           # bytes/s per link (Unified Bus class)
     p2p_bw_slow: float = 0.8e9      # without HCCL: staged through host
+    h2d_bw: float = 25e9            # bytes/s, pinned host -> HBM (DMA over
+    # PCIe/host link): the cold-expert tier streams back at this rate and,
+    # unlike P2P, adds zero load on the interconnect or source devices
     hbm_init_bw: float = 400e9      # memset for fresh KV allocations
     zero_copy_per_tensor: float = 2e-5   # handle open/import, seconds
     warmup_s: float = 2.0           # model warmup of the target instance
@@ -120,6 +123,7 @@ def plan_cost(plan: ScalingPlan,
     disk_bytes: Dict[int, int] = {}
     p2p_in: Dict[int, int] = {}
     init_bytes: Dict[int, int] = {}
+    host_bytes: Dict[int, int] = {}
     n_zero_copy = 0
     zero_copy_bytes = 0
 
@@ -137,6 +141,8 @@ def plan_cost(plan: ScalingPlan,
             disk_bytes[s.dst] = disk_bytes.get(s.dst, 0) + s.nbytes
         elif op == Op.P2P:
             p2p_in[s.dst] = p2p_in.get(s.dst, 0) + s.nbytes
+        elif op == Op.HOST:
+            host_bytes[s.dst] = host_bytes.get(s.dst, 0) + s.nbytes
         elif op == Op.INIT:
             init_bytes[s.dst] = init_bytes.get(s.dst, 0) + s.nbytes
         live[s.dst] = live.get(s.dst, 0) + s.nbytes
@@ -156,13 +162,16 @@ def plan_cost(plan: ScalingPlan,
     p2p_bw = hw.p2p_bw if hccl else hw.p2p_bw_slow
     t_disk = max((b / hw.disk_bw for b in disk_bytes.values()), default=0.0)
     t_p2p = max((b / p2p_bw for b in p2p_in.values()), default=0.0)
+    # host-tier H2D streams (demoted experts) ride the host link, NOT the
+    # interconnect: they never contend with P2P and cost no source device
+    t_host = max((b / hw.h2d_bw for b in host_bytes.values()), default=0.0)
     t_init = max((b / hw.hbm_init_bw for b in init_bytes.values()), default=0.0)
     t_mig = kv_migration_bytes / p2p_bw
     t_zc = n_zero_copy * hw.zero_copy_per_tensor
     if not ipc_safe_alloc:
         t_zc += n_zero_copy * hw.zero_copy_per_tensor * 20  # re-registration
 
-    t_transfer = t_disk + t_p2p + t_init + t_mig
+    t_transfer = t_disk + t_p2p + t_host + t_init + t_mig
     if staging == "overlap":
         # background transfers contend with serving -> each op slower; in
         # exchange the warmup/compile window hides under the transfer
@@ -170,8 +179,8 @@ def plan_cost(plan: ScalingPlan,
         t_ops = t_transfer * hw.overlap_contention
         t = max(t_ops, hw.warmup_s) + t_zc
         decode_stall = t_ops * hw.overlap_stall_frac
-        breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
-                     "kv_migration": t_mig,
+        breakdown = {"disk": t_disk, "p2p": t_p2p, "host": t_host,
+                     "init": t_init, "kv_migration": t_mig,
                      "zero_copy": t_zc, "warmup": hw.warmup_s,
                      "op_s": t_ops,
                      "overlap_hidden": t_ops + hw.warmup_s
@@ -183,10 +192,10 @@ def plan_cost(plan: ScalingPlan,
         # copies ride the background TransferEngine in every staging mode
         # (elastic_engine._advance_migration), so they only cost the HBM-
         # contention share, never a serve-loop block
-        decode_stall = (t_disk + t_p2p + t_init
+        decode_stall = (t_disk + t_p2p + t_host + t_init
                         + t_mig * hw.overlap_stall_frac)
-        breakdown = {"disk": t_disk, "p2p": t_p2p, "init": t_init,
-                     "kv_migration": t_mig,
+        breakdown = {"disk": t_disk, "p2p": t_p2p, "host": t_host,
+                     "init": t_init, "kv_migration": t_mig,
                      "zero_copy": t_zc, "warmup": hw.warmup_s,
                      "op_s": t_transfer}
     if not preinit:

@@ -28,6 +28,7 @@ proceed concurrently and the IMM AOT compile overlaps the transfer window
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import Dict, List, Optional
@@ -42,6 +43,7 @@ from repro.core.imm import IMM
 from repro.core.topology import ElasticConfig
 from repro.serving.driver import ScalePhase, admission_during_scale
 from repro.serving.engine import InferenceEngine
+from repro.serving.rebalance import RebalancePolicy
 from repro.serving.workload import Request
 
 
@@ -94,6 +96,10 @@ class EngineScalingTask:
     """
 
     def __init__(self, server: "ElasticServer", target: ElasticConfig):
+        # scale events take priority over background rebalancing: an
+        # in-flight rebalance is aborted (its staged pages freed) before
+        # the remap is staged — the page table forbids both at once
+        server._preempt_rebalance()
         self.server = server
         self.target = target
         self.phase = ScalePhase.STAGING
@@ -323,6 +329,122 @@ class EngineScalingTask:
         self.phase = ScalePhase.ABORTED
 
 
+@dataclasses.dataclass
+class RebalanceEvent:
+    """One completed (or aborted) rebalance pass (DESIGN.md §10)."""
+    t: float
+    actions: int
+    replicated: int = 0
+    demoted: int = 0
+    dropped: int = 0
+    promoted: int = 0
+    stats: Optional[TransferStats] = None
+    aborted: bool = False
+
+
+class RebalanceTask:
+    """Resumable background expert rebalance (DESIGN.md §10).
+
+    Same two-phase discipline as ``EngineScalingTask`` but much smaller:
+    STAGING (replica/demotion rows stream on the HMM's background
+    ``TransferEngine`` while tick() keeps serving) -> COMMITTING (pool
+    banks gain the replica rows, the pooled index tables are swapped in
+    place, the host tier absorbs demoted rows) -> DONE.  ``abort()``
+    at any point before commit frees every staged page and leaves the
+    serving layout untouched — tick() is legal between every ``advance``.
+
+    Unlike a scale event a rebalance never pauses admission: the serving
+    assignment only changes at commit, and commit is atomic with respect
+    to the single-threaded serve loop."""
+
+    def __init__(self, server: "ElasticServer", actions: List,
+                 load=None):
+        self.server = server
+        self.actions = list(actions)
+        self.event: Optional[RebalanceEvent] = None
+        self.stats: Optional[TransferStats] = None
+        self._load = load
+        self.phase = ScalePhase.STAGING
+        try:
+            self.ops_total = server.hmm.begin_rebalance(actions, load=load)
+        except BaseException:
+            self.phase = ScalePhase.ABORTED
+            raise
+        server._rebalance_task = self
+
+    @property
+    def phase(self) -> ScalePhase:
+        return self._phase
+
+    @phase.setter
+    def phase(self, new: ScalePhase) -> None:
+        """Phase transitions emit ``rebalance.<PHASE>`` spans on their own
+        trace lane, parallel to the scale lane's ``scale.<PHASE>``."""
+        tr = obs.get_tracer()
+        now = tr.now()
+        old = getattr(self, "_phase", None)
+        self._phase = new
+        if old is not None and old is not new:
+            tr.complete(f"rebalance.{old.name}", self._phase_t0, now,
+                        cat="rebalance", tid="rebalance",
+                        args={"actions": len(self.actions),
+                              "next": new.name})
+        self._phase_t0 = now
+
+    @property
+    def done(self) -> bool:
+        return self.phase.terminal
+
+    def advance(self, now: float) -> ScalePhase:
+        ph = self.phase
+        if ph is ScalePhase.STAGING:
+            try:
+                if self.server.hmm.poll_rebalance():
+                    self.phase = ScalePhase.COMMITTING
+            except BaseException:
+                # poll_rebalance already aborted the HMM session on a
+                # failed op; just release the task slot
+                self.server._rebalance_task = None
+                self.phase = ScalePhase.ABORTED
+                raise
+        elif ph is ScalePhase.COMMITTING:
+            try:
+                self.stats = self.server.hmm.commit_rebalance(
+                    load=self._load)
+            except BaseException:
+                self.server._rebalance_task = None
+                self.phase = ScalePhase.ABORTED
+                raise
+            # the histogram described the OLD placement — restart it so
+            # the next policy pass sees post-rebalance traffic only
+            # (same staleness fix as scale-event switchover)
+            self.server.engine.reset_routing_stats()
+            self.event = self._record(now)
+            self.server._rebalance_task = None
+            self.phase = ScalePhase.DONE
+        return self.phase
+
+    def _record(self, now: float) -> RebalanceEvent:
+        kinds = [a[0] for a in self.actions]
+        ev = RebalanceEvent(t=now, actions=len(self.actions),
+                            replicated=kinds.count("replicate"),
+                            demoted=kinds.count("demote"),
+                            dropped=kinds.count("drop_replica"),
+                            promoted=kinds.count("promote"),
+                            stats=self.stats)
+        self.server.rebalance_events.append(ev)
+        return ev
+
+    def abort(self):
+        assert self.phase in (ScalePhase.STAGING, ScalePhase.COMMITTING)
+        self.server.hmm.abort_rebalance()
+        self.server._rebalance_task = None
+        self.server.rebalance_events.append(
+            RebalanceEvent(t=time.time(), actions=len(self.actions),
+                           aborted=True))
+        self.phase = ScalePhase.ABORTED
+
+
 class ElasticServer:
     def __init__(self, mcfg: ModelConfig, *, tp: int, batch_per_replica: int,
                  max_len: int, prefill_buckets=(64,), all_devices=None,
@@ -335,7 +457,10 @@ class ElasticServer:
                  scaledown: str = "migrate",
                  prefill_chunk: int = 0,
                  prefill_budget: Optional[int] = None,
-                 routing_sample_every: int = 0):
+                 routing_sample_every: int = 0,
+                 rebalance: Optional[RebalancePolicy] = None,
+                 expert_slot_slack: Optional[int] = None,
+                 expert_host_pages: Optional[int] = None):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
         # continuous batching: prefill_chunk > 0 splits prompt processing
@@ -359,13 +484,24 @@ class ElasticServer:
         # TransferEngine while tick() keeps serving; the driver's cost
         # projections adopt this through the ``staging_mode`` attribute
         self.staging_mode = staging
+        # skew-aware rebalancing (DESIGN.md §10): a RebalancePolicy turns
+        # routing histograms into replicate/demote actions that tick()
+        # drives through a background RebalanceTask.  Replication needs
+        # spare compiled table width, so enabling it defaults the slot
+        # slack to 1 (each rank can serve one extra expert copy); 0 keeps
+        # the legacy byte-identical table shapes.
+        self.rebalance_policy = rebalance
+        if expert_slot_slack is None:
+            expert_slot_slack = 1 if rebalance is not None else 0
         self.hmm = HMM(mcfg, tp, batch_per_replica=batch_per_replica,
                        max_len=max_len, all_devices=all_devices, seed=seed,
                        kv_mode=kv_mode, kv_block_size=kv_block_size,
                        kv_blocks_per_replica=kv_blocks_per_replica,
                        expert_mode=expert_mode,
                        expert_pool_pages=expert_pool_pages,
-                       staging=staging, transfer_workers=transfer_workers)
+                       staging=staging, transfer_workers=transfer_workers,
+                       expert_slot_slack=expert_slot_slack,
+                       expert_host_pages=expert_host_pages)
         # routing telemetry: every Nth decode tick runs the counts-emitting
         # executable and accumulates per-(layer, expert) histograms
         # (models/moe.py; exposed via routing_stats()).  0 disables — no
@@ -385,8 +521,10 @@ class ElasticServer:
         self.queue: List[Request] = []
         self.requests: Dict[int, Request] = {}
         self.events: List[ScaleEvent] = []
+        self.rebalance_events: List[RebalanceEvent] = []
         self._staged_cfg: Optional[ElasticConfig] = None
         self._active_task: Optional[EngineScalingTask] = None
+        self._rebalance_task: Optional[RebalanceTask] = None
 
     # ------------------------------------------------------------ lifecycle
     def boot(self, cfg: ElasticConfig):
@@ -411,6 +549,7 @@ class ElasticServer:
         """Monolithic staging (all increments back-to-back).  The
         incremental path is ``start_scale`` + ``task.advance``; both funnel
         into the same ``_record_stage`` bookkeeping."""
+        self._preempt_rebalance()
         t0 = time.perf_counter()
         self.hmm.scale(new_cfg)                  # weights only; serving free
         return self._record_stage(new_cfg, time.perf_counter() - t0)
@@ -447,6 +586,11 @@ class ElasticServer:
         self.hmm.cache = None
         self.engine.bind(new_cfg, inst.mesh, params, cache, inst.compiled,
                          kv=self.hmm.kv_blocks)
+        # the routing histogram described the OLD placement; carrying it
+        # across the commit would bias the first post-scale rebalance /
+        # autoscale decisions toward experts that may no longer be hot
+        # (or may now live elsewhere), so restart accumulation here
+        self.engine.reset_routing_stats()
         self.engine.admit_limit = None
         self._staged_cfg = None
         if self.events:
@@ -536,6 +680,10 @@ class ElasticServer:
         preempted = self.engine.drain_preempted()
         if preempted:
             self.queue[:0] = [self.requests[r] for r in preempted]
+        # background skew rebalance (DESIGN.md §10): advance an in-flight
+        # session or let the policy open one — transfers run on the HMM's
+        # TransferEngine so this never blocks the tick
+        self._drive_rebalance(now)
         return finished
 
     # ------------------------------------------------------------ decisions
@@ -594,6 +742,75 @@ class ElasticServer:
         """Open a resumable scaling task (the driver advances it one
         increment per tick; ``scale_to`` remains the blocking equivalent)."""
         return EngineScalingTask(self, target)
+
+    # ---------------------------------------------------- expert rebalance
+    def _preempt_rebalance(self) -> None:
+        """Abort an in-flight rebalance (scale events take priority; the
+        page table forbids a remap and a rebalance being staged at once)."""
+        task = self._rebalance_task
+        if task is not None and not task.done:
+            task.abort()
+
+    def start_rebalance(self, actions: List, load=None) -> RebalanceTask:
+        """Open a resumable rebalance session over explicit
+        ``stage_rebalance`` actions; tick() advances it to completion."""
+        assert self._rebalance_task is None or self._rebalance_task.done
+        return RebalanceTask(self, actions, load=load)
+
+    def maybe_rebalance(self, now: float) -> Optional[RebalanceTask]:
+        """One policy pass: feed the routing histogram to the
+        ``RebalancePolicy`` and open a ``RebalanceTask`` if it emits
+        actions.  A pool-exhausted staging attempt is skipped, not fatal —
+        the policy retries after its cooldown with fresh stats."""
+        if self.rebalance_policy is None or self.expert_mode != "pooled":
+            return None
+        stats = self.engine.routing_stats()
+        cfg = self.hmm.active_cfg
+        elm = (math.ceil(self.mcfg.num_experts / cfg.ndev)
+               + self.hmm.expert_slot_slack)
+        actions = self.rebalance_policy.decide(
+            stats, self.hmm.page_table, cfg, now, slots_per_rank=elm)
+        if not actions:
+            return None
+        try:
+            return self.start_rebalance(actions, load=stats["counts"])
+        except MemoryError as err:
+            obs.get_tracer().instant(
+                "rebalance.skip", cat="rebalance",
+                args={"reason": str(err)})
+            return None
+
+    def _drive_rebalance(self, now: float) -> None:
+        """Per-tick rebalance pump: advance the in-flight task, else ask
+        the policy — never while a scale event is in flight."""
+        task = self._rebalance_task
+        if task is not None and not task.done:
+            task.advance(now)
+            return
+        if self.rebalance_policy is None:
+            return
+        if self._active_task is not None \
+                and not self._active_task.phase.terminal:
+            return
+        self.maybe_rebalance(now)
+
+    def rebalance_summary(self) -> Optional[dict]:
+        """Aggregate rebalance telemetry (None before the first pass);
+        consumed by ``metrics.summarize`` and ``benchmarks/expert_skew``."""
+        if not self.rebalance_events:
+            return None
+        done = [ev for ev in self.rebalance_events if not ev.aborted]
+        return {"passes": len(done),
+                "aborted": len(self.rebalance_events) - len(done),
+                "replicated": sum(ev.replicated for ev in done),
+                "demoted": sum(ev.demoted for ev in done),
+                "dropped": sum(ev.dropped for ev in done),
+                "promoted": sum(ev.promoted for ev in done),
+                "replica_bytes": sum(ev.stats.expert_replica_bytes
+                                     for ev in done if ev.stats),
+                "d2h_bytes": sum(ev.stats.expert_d2h_bytes
+                                 for ev in done if ev.stats),
+                "host_tier_bytes": self.hmm.host_tier_bytes()}
 
     def prewarm(self, target: ElasticConfig) -> None:
         self.preinitialize(target)

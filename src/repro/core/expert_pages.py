@@ -14,6 +14,24 @@ Double-buffered tables ("old mappings remain active on source devices until
 the new inference instance takes over", §5.2): ``stage_remap`` builds the
 target table + migration list; ``commit`` atomically swaps it in and returns
 the pages to free.
+
+Skew-aware rebalancing (DESIGN.md §10) extends the table two ways:
+
+* **replica sets** — a (layer, expert) may map to *additional* device
+  ``PageRef``s beyond its primary.  Replicas are byte-identical copies, so
+  which one serves an expert's tokens is a pure host-side layout decision
+  (``pooled_layout`` picks the least-loaded candidate when emitting
+  edest/eslot) — dispatch math is unchanged and tokens stay bit-identical.
+* **a pinned-host page tier** (logical device ``HOST``) — cold experts are
+  *demoted*: their bytes stream D2H into a host page while the device
+  primary keeps serving (correctness never depends on the demotion).  The
+  payoff is at scale events: a host-backed expert that must move is
+  streamed back H2D from the host tier instead of P2P from a device —
+  zero expert P2P for the cold set (costmodel ``Op.HOST``).
+
+Both are staged under the same two-phase discipline as scale remaps
+(``stage_rebalance`` / ``commit_rebalance`` / ``abort_rebalance``), so an
+abort-in-flight conserves the pool — device and host tiers alike.
 """
 from __future__ import annotations
 
@@ -27,56 +45,124 @@ import numpy as np
 from repro.core.topology import ElasticConfig, expert_owner
 
 
+#: logical device id of the pinned-host page tier (never a real device slot)
+HOST = -1
+
+
 @dataclasses.dataclass(frozen=True)
 class PageRef:
     device: int
     page: int          # index into that device's pool
+
+    @property
+    def is_host(self) -> bool:
+        return self.device == HOST
 
 
 @dataclasses.dataclass(frozen=True)
 class Migration:
     layer: int
     expert: int
-    src: PageRef
+    src: PageRef       # src.device == HOST: streamed from the pinned tier
     dst: PageRef
 
 
+@dataclasses.dataclass(frozen=True)
+class RebalanceOp:
+    """One staged rebalance action with its allocated destination.
+
+    kinds (DESIGN.md §10):
+    * ``replicate``    — copy the expert onto ``dst`` (a fresh device page);
+      ``src`` is the primary the bytes stream from.
+    * ``demote``       — stream the expert's bytes D2H into ``dst`` (a fresh
+      pinned-host page); the device primary keeps serving.
+    * ``drop_replica`` — retire the replica ``src`` (no bytes move; the page
+      frees at commit).
+    * ``promote``      — retire the host copy ``src`` (no bytes move; the
+      host page frees at commit — the expert is hot again, so it should P2P
+      at scale events like any other instead of pinning tier capacity).
+    """
+    kind: str
+    layer: int
+    expert: int
+    src: PageRef
+    dst: Optional[PageRef] = None
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.layer, self.expert)
+
+
 class ExpertPageTable:
-    """Tracks (layer, expert) -> PageRef for the active and staged configs."""
+    """Tracks (layer, expert) -> PageRef for the active and staged configs,
+    plus replica sets and the pinned-host cold tier (DESIGN.md §10).
+
+    Invariants: ``active`` always holds exactly one *device* primary per
+    (layer, expert); ``replicas`` hold additional device copies; ``host``
+    holds at most one pinned-host copy per expert.  At most one staging
+    session — a scale remap OR a rebalance — may be open at a time."""
 
     def __init__(self, num_layers: int, num_experts: int,
-                 pool_pages_per_device: int = 0):
+                 pool_pages_per_device: int = 0,
+                 host_pool_pages: Optional[int] = None):
         self.num_layers = num_layers
         self.num_experts = num_experts
         # default: room for every page twice (staging headroom) on one device
         self.pool_pages = pool_pages_per_device or 2 * num_layers * num_experts
+        # pinned-host tier capacity: default fits every (layer, expert) once
+        # — the scale-to-zero limit case (ROADMAP) parks the full expert set
+        self.host_pool_pages = (num_layers * num_experts
+                                if host_pool_pages is None else host_pool_pages)
         self.active: Dict[Tuple[int, int], PageRef] = {}
+        # extra byte-identical device copies per (layer, expert); which copy
+        # serves is decided host-side by pooled_layout (least-loaded pick)
+        self.replicas: Dict[Tuple[int, int], Tuple[PageRef, ...]] = {}
+        # pinned-host copies (device == HOST); bytes live with the HMM
+        self.host: Dict[Tuple[int, int], PageRef] = {}
         self.staged: Optional[Dict[Tuple[int, int], PageRef]] = None
+        self.staged_rebalance: Optional[List[RebalanceOp]] = None
         self._free: Dict[int, List[int]] = {}
 
     # ------------------------------------------------------------- helpers
+    def _pool_size(self, device: int) -> int:
+        return self.host_pool_pages if device == HOST else self.pool_pages
+
     def _ensure_pool(self, device: int):
         if device not in self._free:
-            self._free[device] = list(range(self.pool_pages))
+            self._free[device] = list(range(self._pool_size(device)))
 
     def _alloc(self, device: int) -> int:
         self._ensure_pool(device)
         if not self._free[device]:
-            raise MemoryError(f"page pool exhausted on device {device}")
+            tier = "host page tier" if device == HOST else \
+                f"page pool on device {device}"
+            raise MemoryError(f"{tier} exhausted")
         return self._free[device].pop()
 
     def pages_in_use(self, device: int) -> int:
         self._ensure_pool(device)
-        return self.pool_pages - len(self._free[device])
+        return self._pool_size(device) - len(self._free[device])
+
+    def replica_count(self, layer: int, expert: int) -> int:
+        return len(self.replicas.get((layer, expert), ()))
+
+    def demoted(self) -> List[Tuple[int, int]]:
+        """(layer, expert) keys currently parked in the pinned-host tier."""
+        return sorted(self.host)
 
     def clone(self) -> "ExpertPageTable":
         """Cheap independent copy for what-if staging (cost projections):
         ``PageRef``s are immutable, so only the containers are copied —
         no deep recursion over L*E dataclasses."""
         t = ExpertPageTable(self.num_layers, self.num_experts,
-                            pool_pages_per_device=self.pool_pages)
+                            pool_pages_per_device=self.pool_pages,
+                            host_pool_pages=self.host_pool_pages)
         t.active = dict(self.active)
+        t.replicas = dict(self.replicas)
+        t.host = dict(self.host)
         t.staged = dict(self.staged) if self.staged is not None else None
+        t.staged_rebalance = (list(self.staged_rebalance)
+                              if self.staged_rebalance is not None else None)
         t._free = {d: list(v) for d, v in self._free.items()}
         return t
 
@@ -107,12 +193,26 @@ class ExpertPageTable:
         O(1) per expert either way: unchanged experts keep their *existing*
         page (no copy, no reallocation); moved experts get a fresh page on
         the target device and a P2P migration entry.  The active table keeps
-        serving until commit()."""
+        serving until commit().
+
+        Rebalance interplay (DESIGN.md §10): with ``min_move=True`` an
+        expert may be "kept in place" via *any* of its copies — primary or
+        replica — so a replica landed on a surviving device counts as a
+        zero-move; and an expert that must move sources its migration from
+        the pinned-host tier when a host copy exists (``src.device ==
+        HOST``), which costs H2D bandwidth instead of cross-device P2P.
+        All unchosen replicas retire at commit (the new placement is
+        rebuilt from fresh routing stats by the next rebalance pass)."""
         if self.staged is not None:
             raise RuntimeError(
                 "a staged remap is already open; commit() or abort() it "
                 "before staging another one (double-staging would leak the "
                 "previously allocated pages)")
+        if self.staged_rebalance is not None:
+            raise RuntimeError(
+                "a rebalance session is open; commit_rebalance() or "
+                "abort_rebalance() before staging a scale remap (the two "
+                "sessions race for the same page pools)")
         E = self.num_experts
         devs = list(new_cfg.devices)
         staged: Dict[Tuple[int, int], PageRef] = {}
@@ -137,18 +237,27 @@ class ExpertPageTable:
                         for i, d in enumerate(devs)}
                 pending: List[Tuple[int, PageRef]] = []
                 for e in range(E):
-                    ref = self.active[(l, e)]
-                    if ref.device in caps and caps[ref.device] > 0:
-                        staged[(l, e)] = ref              # stays in place
-                        caps[ref.device] -= 1
+                    # any surviving copy keeps the expert in place: primary
+                    # first (stable), then replicas in creation order
+                    copies = (self.active[(l, e)],) + \
+                        self.replicas.get((l, e), ())
+                    kept = next((c for c in copies
+                                 if c.device in caps and caps[c.device] > 0),
+                                None)
+                    if kept is not None:
+                        staged[(l, e)] = kept             # stays in place
+                        caps[kept.device] -= 1
                     else:
-                        pending.append((e, ref))
+                        pending.append((e, self.active[(l, e)]))
                 for e, ref in pending:                    # most-free first
                     dst_dev = max(caps, key=lambda d: caps[d])
                     caps[dst_dev] -= 1
                     dst = PageRef(dst_dev, self._alloc(dst_dev))
                     staged[(l, e)] = dst
-                    migrations.append(Migration(l, e, ref, dst))
+                    # cold experts stream back from the pinned-host tier:
+                    # zero expert P2P for the demoted set (costmodel Op.HOST)
+                    src = self.host.get((l, e), ref)
+                    migrations.append(Migration(l, e, src, dst))
             self.staged = staged
             return migrations
         except BaseException:
@@ -161,7 +270,10 @@ class ExpertPageTable:
 
     def commit(self) -> List[PageRef]:
         """Switch to the staged table; returns pages to free (old homes of
-        migrated experts)."""
+        migrated experts, plus every replica the new placement didn't adopt
+        — a replica picked as the kept copy is promoted to primary; pinned-
+        host copies survive, weights are immutable so they never go stale).
+        """
         if self.staged is None:
             raise RuntimeError("no staged remap open; call stage_remap() "
                                "before commit()")
@@ -170,6 +282,12 @@ class ExpertPageTable:
             if self.staged[key] != old_ref:
                 self._free[old_ref.device].append(old_ref.page)
                 to_free.append(old_ref)
+        for key, refs in self.replicas.items():
+            for ref in refs:
+                if ref != self.staged[key]:
+                    self._free[ref.device].append(ref.page)
+                    to_free.append(ref)
+        self.replicas = {}
         self.active = self.staged
         self.staged = None
         return to_free
@@ -178,12 +296,15 @@ class ExpertPageTable:
         """Drop the staged table, freeing its freshly allocated pages.
 
         Idempotent: a second call is a no-op, and pages *shared* between the
-        active and staged tables (experts that would have stayed in place)
-        are never freed — only staged-only pages return to the pool, each
-        exactly once even if a table ever aliased the same page twice."""
+        active table (primaries AND replicas) and the staged table — copies
+        that would have stayed in place — are never freed; only staged-only
+        pages return to the pool, each exactly once even if a table ever
+        aliased the same page twice."""
         if self.staged is None:
             return
         live = set(self.active.values())
+        for refs in self.replicas.values():
+            live.update(refs)
         freed = set()
         for ref in self.staged.values():
             if ref not in live and ref not in freed:
@@ -191,6 +312,118 @@ class ExpertPageTable:
                 self._ensure_pool(ref.device)
                 self._free[ref.device].append(ref.page)
         self.staged = None
+
+    # ----------------------------------------------------------- rebalance
+    def stage_rebalance(self, actions: List[Tuple]) -> List[RebalanceOp]:
+        """Open a rebalance session: resolve + allocate each action.
+
+        ``actions`` entries (see RebalanceOp for semantics):
+
+        * ``("replicate", layer, expert, dst_device)``
+        * ``("demote", layer, expert)``
+        * ``("drop_replica", layer, expert, device)``
+        * ``("promote", layer, expert)``
+
+        Returns the resolved ops (fresh dst pages allocated for replicate /
+        demote; nothing moves yet).  Exactly two-phase: commit_rebalance()
+        applies the ops, abort_rebalance() returns every fresh page to its
+        pool — an abort-in-flight conserves both tiers.  Allocation failure
+        mid-way rolls back the pages already popped and re-raises, leaving
+        the table untouched (same contract as stage_remap)."""
+        if self.staged is not None:
+            raise RuntimeError(
+                "a staged scale remap is open; rebalance sessions are "
+                "mutually exclusive with scale events")
+        if self.staged_rebalance is not None:
+            raise RuntimeError(
+                "a rebalance session is already open; commit_rebalance() or "
+                "abort_rebalance() it first")
+        ops: List[RebalanceOp] = []
+        try:
+            for act in actions:
+                kind, l, e = act[0], act[1], act[2]
+                key = (l, e)
+                primary = self.active.get(key)
+                if primary is None:
+                    raise KeyError(f"unknown expert {key}")
+                if kind == "replicate":
+                    dst_dev = act[3]
+                    holders = {primary.device}
+                    holders.update(r.device
+                                   for r in self.replicas.get(key, ()))
+                    if dst_dev in holders:
+                        raise ValueError(
+                            f"{key} already has a copy on device {dst_dev}")
+                    dst = PageRef(dst_dev, self._alloc(dst_dev))
+                    ops.append(RebalanceOp("replicate", l, e, primary, dst))
+                elif kind == "demote":
+                    if key in self.host:
+                        raise ValueError(f"{key} is already demoted")
+                    dst = PageRef(HOST, self._alloc(HOST))
+                    ops.append(RebalanceOp("demote", l, e, primary, dst))
+                elif kind == "drop_replica":
+                    dev = act[3]
+                    src = next((r for r in self.replicas.get(key, ())
+                                if r.device == dev), None)
+                    if src is None:
+                        raise ValueError(
+                            f"{key} has no replica on device {dev}")
+                    ops.append(RebalanceOp("drop_replica", l, e, src))
+                elif kind == "promote":
+                    if key not in self.host:
+                        raise ValueError(f"{key} is not demoted")
+                    ops.append(RebalanceOp("promote", l, e, self.host[key]))
+                else:
+                    raise ValueError(f"unknown rebalance action {kind!r}")
+        except BaseException:
+            for op in ops:          # return the pages this call popped
+                if op.dst is not None:
+                    self._free[op.dst.device].append(op.dst.page)
+            raise
+        self.staged_rebalance = ops
+        return ops
+
+    def commit_rebalance(self) -> List[PageRef]:
+        """Apply the staged rebalance; returns the pages freed by
+        drop_replica / promote (replicate / demote pages become live)."""
+        if self.staged_rebalance is None:
+            raise RuntimeError("no rebalance session open; call "
+                               "stage_rebalance() before commit_rebalance()")
+        freed: List[PageRef] = []
+        for op in self.staged_rebalance:
+            key = op.key
+            if op.kind == "replicate":
+                self.replicas[key] = self.replicas.get(key, ()) + (op.dst,)
+            elif op.kind == "demote":
+                self.host[key] = op.dst
+            elif op.kind == "drop_replica":
+                kept = tuple(r for r in self.replicas[key] if r != op.src)
+                if kept:
+                    self.replicas[key] = kept
+                else:
+                    del self.replicas[key]
+                self._free[op.src.device].append(op.src.page)
+                freed.append(op.src)
+            elif op.kind == "promote":
+                del self.host[key]
+                self._free[HOST].append(op.src.page)
+                freed.append(op.src)
+        self.staged_rebalance = None
+        return freed
+
+    def abort_rebalance(self) -> None:
+        """Drop the rebalance session, returning every freshly allocated
+        page (replicate dst / demote host dst) to its pool.  Idempotent;
+        drop_replica / promote ops touched nothing, so there is nothing to
+        undo for them — device and host tiers end exactly as before
+        stage_rebalance()."""
+        if self.staged_rebalance is None:
+            return
+        for op in self.staged_rebalance:
+            if op.dst is not None:
+                self._ensure_pool(op.dst.device)
+                self._free[op.dst.device].append(op.dst.page)
+        self.staged_rebalance = None
 
     # ------------------------------------------------------------- queries
     def device_table(self, cfg: ElasticConfig, layer: int,
@@ -221,38 +454,85 @@ class ExpertPageTable:
 
 def pooled_layout(table: Dict[Tuple[int, int], PageRef], cfg: ElasticConfig,
                   num_layers: int, num_experts: int,
-                  pages_per_device: int) -> Dict[str, np.ndarray]:
+                  pages_per_device: int,
+                  replicas: Optional[Dict[Tuple[int, int],
+                                          Tuple[PageRef, ...]]] = None,
+                  load: Optional[np.ndarray] = None,
+                  slots_per_rank: Optional[int] = None
+                  ) -> Dict[str, np.ndarray]:
     """Flatten a page-table mapping into the index arrays the pooled MoE
     execution path consumes (host-side numpy; the HMM device_puts them).
 
-    Returns, with ``Elm = ceil(E / ndev)`` (min-move keeps per-device counts
-    balanced to floor/ceil, so Elm always bounds a device's experts):
+    Returns, with ``Elm = slots_per_rank or ceil(E / ndev)`` (min-move keeps
+    per-device counts balanced to floor/ceil, so the default always bounds a
+    device's experts; a larger ``slots_per_rank`` bakes replication slack
+    into the compiled table width — DESIGN.md §10):
 
     * ``tables`` [L, ndev, Elm] int32 — per (layer, device-rank) the LOCAL
       pool-page index of each owned expert, logical-expert order, padded
       with page 0 (pad slots receive no tokens);
-    * ``edest``  [L, E] int32 — owning device *rank* (mesh linear slot) per
+    * ``edest``  [L, E] int32 — serving device *rank* (mesh linear slot) per
       expert: the all-to-all destination;
     * ``eslot``  [L, E] int32 — the expert's slot within its rank's table;
     * ``gtable`` [L, E] int32 — GLOBAL pool row (rank * pages_per_device +
       local page) per expert, for the single-shard pooled path.
+
+    Replica-aware serving assignment: when ``replicas`` maps experts to
+    extra byte-identical copies, each expert's tokens are routed to the
+    *least-loaded* candidate rank — experts in descending expected-``load``
+    order (routing-histogram counts, [L, E] or [E]; uniform when None), each
+    assigned to the candidate rank (primary's or any replica's) with the
+    smallest accumulated load, primary rank breaking ties, subject to the
+    per-rank ``Elm`` slot cap.  The assignment is deterministic and static
+    per layout build, and every copy is byte-identical, so dispatch math —
+    and therefore every token — is unchanged vs. the unreplicated layout.
     """
     ndev = cfg.ndev
-    elm = math.ceil(num_experts / ndev)
+    elm = slots_per_rank or math.ceil(num_experts / ndev)
+    if load is None:
+        load_le = np.ones((num_layers, num_experts), np.float64)
+    else:
+        load_le = np.broadcast_to(
+            np.asarray(load, np.float64),
+            (num_layers, num_experts))
     tables = np.zeros((num_layers, ndev, elm), np.int32)
     edest = np.zeros((num_layers, num_experts), np.int32)
     eslot = np.zeros((num_layers, num_experts), np.int32)
     gtable = np.zeros((num_layers, num_experts), np.int32)
+    replicas = replicas or {}
     for l in range(num_layers):
+        # phase 1 — pick each expert's serving copy (least-loaded rank)
+        chosen: Dict[int, PageRef] = {}
+        rank_load = [0.0] * ndev
+        rank_slots = [0] * ndev
+        order = sorted(range(num_experts),
+                       key=lambda e: (-load_le[l, e], e))
+        for e in order:
+            cands = [table[(l, e)]] + list(replicas.get((l, e), ()))
+            best = None
+            for i, ref in enumerate(cands):
+                r = cfg.slot(ref.device)
+                if rank_slots[r] >= elm:
+                    continue                      # rank's table is full
+                k = (rank_load[r], i)             # primary wins load ties
+                if best is None or k < best[0]:
+                    best = (k, ref, r)
+            if best is None:
+                raise ValueError(
+                    f"layer {l}: no candidate rank for expert {e} has a "
+                    f"free slot (Elm={elm}) — placement not balanced; "
+                    f"raise slots_per_rank (replication slack) or rebalance")
+            _, ref, r = best
+            chosen[e] = ref
+            rank_load[r] += float(load_le[l, e])
+            rank_slots[r] += 1
+        # phase 2 — emit slots in ascending-e order (deterministic layout
+        # independent of the load-sorted assignment order above)
         counts = [0] * ndev
         for e in range(num_experts):          # ascending e == logical order
-            ref = table[(l, e)]
+            ref = chosen[e]
             r = cfg.slot(ref.device)
             s = counts[r]
-            if s >= elm:
-                raise ValueError(
-                    f"layer {l}: device rank {r} owns more than "
-                    f"ceil(E/ndev)={elm} experts — placement not balanced")
             counts[r] += 1
             tables[l, r, s] = ref.page
             edest[l, e] = r

@@ -76,6 +76,14 @@ class TransferStats:
     expert_p2p_bytes: int = 0
     expert_zero_copy_bytes: int = 0
     expert_local_bytes: int = 0
+    # skew-rebalance sub-accounting (DESIGN.md §10).  replica: bytes copied
+    # to create extra device copies of hot experts; d2h: cold-expert bytes
+    # demoted into the pinned-host tier; h2d: host-tier bytes streamed back
+    # to devices at scale events (replaces expert P2P for the cold set —
+    # these rows are deliberately NOT counted in p2p_bytes).
+    expert_replica_bytes: int = 0
+    expert_d2h_bytes: int = 0
+    expert_h2d_bytes: int = 0
 
     #: the additive byte/count fields that must agree exactly between
     #: staging="serial" and staging="overlap" (same reshard calls, same
@@ -83,7 +91,8 @@ class TransferStats:
     BYTE_FIELDS = ("zero_copy_bytes", "p2p_bytes", "local_bytes",
                    "init_bytes", "zero_copy_count", "p2p_count",
                    "expert_p2p_bytes", "expert_zero_copy_bytes",
-                   "expert_local_bytes")
+                   "expert_local_bytes", "expert_replica_bytes",
+                   "expert_d2h_bytes", "expert_h2d_bytes")
 
     def merge(self, o: "TransferStats"):
         self.zero_copy_bytes += o.zero_copy_bytes
@@ -97,6 +106,9 @@ class TransferStats:
         self.expert_p2p_bytes += o.expert_p2p_bytes
         self.expert_zero_copy_bytes += o.expert_zero_copy_bytes
         self.expert_local_bytes += o.expert_local_bytes
+        self.expert_replica_bytes += o.expert_replica_bytes
+        self.expert_d2h_bytes += o.expert_d2h_bytes
+        self.expert_h2d_bytes += o.expert_h2d_bytes
 
 
 def make_instance_mesh(cfg: ElasticConfig, all_devices=None) -> Mesh:
@@ -215,6 +227,8 @@ class HMM:
                  kv_blocks_per_replica: Optional[int] = None,
                  expert_mode: str = "dense",
                  expert_pool_pages: Optional[int] = None,
+                 expert_slot_slack: int = 0,
+                 expert_host_pages: Optional[int] = None,
                  staging: str = "serial", transfer_workers: int = 4):
         self.mcfg = mcfg
         self.tp = tp
@@ -247,6 +261,27 @@ class HMM:
         # half the boot device count.  Scaling below that raises a clear
         # MemoryError from the page allocator: pass a larger value here.
         self.expert_pool_pages: Optional[int] = expert_pool_pages
+        # extra compiled table-width slots per rank beyond ceil(E/ndev):
+        # replication headroom for the skew rebalancer (DESIGN.md §10).
+        # The width is AOT-baked into every pooled executable, so it is
+        # fixed for the HMM's lifetime; 0 keeps shapes byte-identical to
+        # the pre-rebalance layout (and forbids net replica skew that
+        # would overflow a rank's table).
+        self.expert_slot_slack = int(expert_slot_slack)
+        # pinned-host cold tier capacity in pages (None: ExpertPageTable
+        # default — every (layer, expert) once, the scale-to-zero limit)
+        self.expert_host_pages = expert_host_pages
+        # host-side bytes of demoted experts: (layer, expert) -> {bank: row}.
+        # The page table accounts the tier; this dict holds the bytes.
+        self._expert_host_pool: Dict[Tuple[int, int],
+                                     Dict[str, np.ndarray]] = {}
+        # rebalance session state (begin_rebalance/.../abort_rebalance)
+        self._rebalance_ops = None       # List[RebalanceOp]
+        self._rebalance_session = None   # TransferSession
+        self._rebalance_stats: Optional[TransferStats] = None
+        self._rebalance_load = None      # [L_moe, E] routing snapshot
+        self._rebalance_t0 = 0.0
+        self.last_rebalance_stats: Optional[TransferStats] = None
         self.kv_mode = kv_mode
         self.kv_block_size = kv_block_size
         if kv_mode == "paged":
@@ -270,7 +305,8 @@ class HMM:
             self.page_table = ExpertPageTable(
                 mcfg.num_layers - mcfg.first_k_dense, mcfg.num_experts,
                 pool_pages_per_device=(self.expert_pool_pages or 0
-                                       if expert_mode == "pooled" else 0))
+                                       if expert_mode == "pooled" else 0),
+                host_pool_pages=self.expert_host_pages)
         else:
             self.page_table = None
         self.last_stats: Optional[TransferStats] = None
@@ -369,11 +405,20 @@ class HMM:
         bpe = jnp.dtype(self.mcfg.dtype).itemsize
         return 3 * self.mcfg.d_model * self.mcfg.moe_d_ff * bpe
 
-    def _pooled_index_arrays(self, table, cfg: ElasticConfig):
-        """Host index arrays for the pooled MoE path from a page-table dict."""
+    def _pooled_index_arrays(self, table, cfg: ElasticConfig,
+                             replicas=None, load=None):
+        """Host index arrays for the pooled MoE path from a page-table dict.
+        ``replicas``/``load``: least-loaded replica-aware serving assignment
+        (expert_pages.pooled_layout); scale staging passes neither — the
+        staged table already names each expert's kept copy."""
+        import math as _math
         from repro.core.expert_pages import pooled_layout
+        elm = (_math.ceil(self.mcfg.num_experts / cfg.ndev)
+               + self.expert_slot_slack)
         return pooled_layout(table, cfg, self._n_moe_layers,
-                             self.mcfg.num_experts, self.expert_pool_pages)
+                             self.mcfg.num_experts, self.expert_pool_pages,
+                             replicas=replicas, load=load,
+                             slots_per_rank=elm)
 
     def _pooled_host_params(self, params, cfg: ElasticConfig):
         """Convert freshly initialized dense params to the pooled layout:
@@ -415,7 +460,7 @@ class HMM:
         dt = jnp.dtype(mcfg.dtype)
         ppd = self.expert_pool_pages
         L, E = self._n_moe_layers, mcfg.num_experts
-        elm = _math.ceil(E / cfg.ndev)
+        elm = _math.ceil(E / cfg.ndev) + self.expert_slot_slack
         i32 = jnp.dtype(jnp.int32)
         moe["tables"] = jax.ShapeDtypeStruct((L, cfg.ndev, elm), i32)
         for k in ("edest", "eslot", "gtable"):
@@ -593,7 +638,8 @@ class HMM:
         by the serial path (caller thread) and the overlapped path
         (TransferEngine workers) so the two modes cannot drift."""
         if kind.startswith("pool:"):
-            return self._migrate_pool_bank(leaf, new_cfg, mesh, stats)
+            return self._migrate_pool_bank(leaf, new_cfg, mesh, stats,
+                                           bank=kind.split(":", 1)[1])
         if kind.startswith("index:"):
             # O(table): the staged index arrays were rebuilt once in
             # begin_scale — no weight bytes move here (host numpy ->
@@ -742,17 +788,22 @@ class HMM:
         self._reset_stage_session()
 
     def _migrate_pool_bank(self, leaf, new_cfg: ElasticConfig, mesh,
-                           stats: TransferStats):
+                           stats: TransferStats, bank: str = ""):
         """Rebuild one pooled weight bank for ``new_cfg``: surviving devices'
         pool slices are reused (migrated-in pages written at their staged
         slots), new devices start from zeros, and exactly the staged
         Migration list crosses devices — one ``jax.device_put`` per page,
-        the paper's p2p-copy primitive at vpage granularity.
+        the paper's p2p-copy primitive at vpage granularity.  A migration
+        whose ``src`` lives in the pinned-host tier (``src.device == HOST``)
+        reads its row from the HMM host pool instead: those bytes ride the
+        H2D path and are accounted in ``expert_h2d_bytes``, NOT
+        ``p2p_bytes`` — the cold set costs zero expert P2P (DESIGN.md §10).
 
         Pure memory ops only (host numpy assembly + device_put, no compiled
         scatter/stack): worker-thread safe on the TransferEngine.  A device
         slice that receives no migrated pages keeps its live buffer — the
         zero-copy alias is preserved."""
+        from repro.core.expert_pages import HOST
         ppd = self.expert_pool_pages
         row_shape = leaf.shape[1:]
         row_bytes = int(np.prod(row_shape)) * leaf.dtype.itemsize
@@ -762,9 +813,13 @@ class HMM:
         migs_by_dst: Dict[int, List] = defaultdict(list)
         for m in self.last_migrations:
             migs_by_dst[m.dst.device].append(m)
-        # pages that stay put are this bank's zero-copy reuse
+        # pages that stay put are this bank's zero-copy reuse — an expert
+        # kept in place via any already-resident copy (primary OR replica)
         staged, active = self.page_table.staged, self.page_table.active
-        unchanged = sum(1 for k, r in active.items() if staged.get(k) == r)
+        replicas = self.page_table.replicas
+        unchanged = sum(
+            1 for k, r in active.items()
+            if staged.get(k) == r or staged.get(k) in replicas.get(k, ()))
         stats.zero_copy_bytes += unchanged * row_bytes
         stats.zero_copy_count += unchanged
         stats.expert_zero_copy_bytes += unchanged * row_bytes
@@ -791,10 +846,15 @@ class HMM:
                 base = (np.array(local) if local is not None
                         else np.zeros((ppd,) + row_shape, leaf.dtype))
                 for m in migs:
-                    base[m.dst.page] = rows_of(m.src.device)[m.src.page]
-                    stats.p2p_bytes += row_bytes
-                    stats.p2p_count += 1
-                    stats.expert_p2p_bytes += row_bytes
+                    if m.src.device == HOST:
+                        base[m.dst.page] = \
+                            self._expert_host_pool[(m.layer, m.expert)][bank]
+                        stats.expert_h2d_bytes += row_bytes
+                    else:
+                        base[m.dst.page] = rows_of(m.src.device)[m.src.page]
+                        stats.p2p_bytes += row_bytes
+                        stats.p2p_count += 1
+                        stats.expert_p2p_bytes += row_bytes
                 local = jax.device_put(base, dev)
             elif local is None:
                 local = jax.device_put(
@@ -919,6 +979,216 @@ class HMM:
         self._reset_stage_session()
         if self.page_table is not None:
             self.page_table.abort()
+
+    # ------------------------------------------------------------ rebalance
+    def begin_rebalance(self, actions, load=None) -> int:
+        """Open a skew-rebalance session (DESIGN.md §10): stage the page
+        allocations, then fetch the bytes each replicate/demote op needs on
+        the background TransferEngine (D2H row reads of immutable weights —
+        safe concurrent with serving, like scale staging).
+
+        ``actions``: see :meth:`ExpertPageTable.stage_rebalance`.
+        ``load``: optional [L_moe, E] routing-count snapshot; stored for the
+        replica-aware serving assignment rebuilt at commit.
+
+        Returns the number of background transfer ops submitted.  Drive
+        with ``poll_rebalance`` then ``commit_rebalance``, or unwind with
+        ``abort_rebalance`` — an abort-in-flight conserves both tiers."""
+        assert self.expert_mode == "pooled", \
+            "rebalance requires expert_mode='pooled'"
+        assert self._stage_work is None and self.staged is None, \
+            "rebalance is mutually exclusive with scale staging"
+        assert self._rebalance_ops is None, "rebalance already in progress"
+        from repro.core.transfer import TransferOp
+        self._rebalance_t0 = time.perf_counter()
+        ops = self.page_table.stage_rebalance(actions)
+        self._rebalance_ops = ops
+        self._rebalance_load = (np.asarray(load, np.float64)
+                                if load is not None else None)
+        self._rebalance_stats = TransferStats()
+        work = [TransferOp(index=i,
+                           label=f"rebalance:{op.kind}:{op.layer}.{op.expert}",
+                           fn=self._make_rebalance_fetch(op))
+                for i, op in enumerate(ops)
+                if op.kind in ("replicate", "demote")]
+        self._rebalance_session = (self.transfer_engine().submit(work)
+                                   if work else None)
+        return len(work)
+
+    def _make_rebalance_fetch(self, op):
+        """Closure for one background fetch: D2H-copy the op's source page
+        out of every pool bank (pure ``np.asarray`` reads — no compiled
+        primitives, worker-thread safe) and return {bank: row}.  Bytes are
+        accounted per page (``expert_page_nbytes``), merged under the
+        staging lock like scale-staging ops."""
+        banks = self.params["moe_pool"]
+        page_bytes = self.expert_page_nbytes()
+        stats = self._rebalance_stats
+        src, kind = op.src, op.kind
+        phys = self.all_devices[src.device]
+
+        def run():
+            t0 = time.perf_counter()
+            rows = {}
+            for name, leaf in banks.items():
+                shard = next(sh for sh in leaf.addressable_shards
+                             if sh.device == phys)
+                rows[name] = np.array(np.asarray(shard.data)[src.page])
+            sub = TransferStats()
+            if kind == "demote":
+                sub.expert_d2h_bytes = page_bytes
+            else:
+                sub.expert_replica_bytes = page_bytes
+            sub.op_s = time.perf_counter() - t0
+            with self._stage_lock:
+                stats.merge(sub)
+            return rows
+
+        return run
+
+    @property
+    def rebalance_in_flight(self) -> bool:
+        return (self._rebalance_session is not None
+                and not self._rebalance_session.finished())
+
+    def poll_rebalance(self) -> bool:
+        """Bounded completion poll (<= ~2 ms), mirroring ``poll_staging``.
+        True once every fetch op has finished (``commit_rebalance`` legal);
+        a failed op aborts the session (pools conserved) and re-raises."""
+        if self._rebalance_ops is None:
+            return False
+        sess = self._rebalance_session
+        if sess is not None:
+            if not sess.finished():
+                sess.join(timeout=0.002)
+                if not sess.finished():
+                    return False
+            failed = sess.failed_ops()
+            if failed:
+                err = failed[0].error
+                self.abort_rebalance()
+                raise RuntimeError(
+                    f"rebalance fetch op {failed[0].label!r} failed "
+                    f"({len(failed)} op(s) total); session aborted") from err
+        return True
+
+    @obs.traced("hmm.commit_rebalance", cat="hmm")
+    def commit_rebalance(self, load=None) -> TransferStats:
+        """Serve-thread switchover of a rebalance session: write replica
+        rows into the pool banks (one rebuilt slice per receiving device),
+        publish demoted rows to the pinned-host pool, free dropped/promoted
+        pages, and rebuild the serving index arrays replica-aware
+        (least-loaded assignment over ``load`` — defaults to the snapshot
+        captured at ``begin_rebalance``).
+
+        The params tree is updated IN PLACE, so the engine bound to it
+        picks the new layout up on its next tick; array shapes are
+        unchanged (slack-fixed table width), so every AOT-compiled
+        executable stays valid.  Every copy is byte-identical, so tokens
+        are bit-identical before/after."""
+        assert self._rebalance_ops is not None, "no rebalance session open"
+        if self._rebalance_session is not None:
+            self._rebalance_session.join()
+            if not self.poll_rebalance():     # surfaces failed ops
+                raise RuntimeError("rebalance session did not finish")
+        t0 = time.perf_counter()
+        ops = self._rebalance_ops
+        results = {}
+        if self._rebalance_session is not None:
+            for top in self._rebalance_session.ops:
+                results[top.index] = top.result
+        stats = self._rebalance_stats
+        cfg = self.active_cfg
+        ppd = self.expert_pool_pages
+        if load is None:
+            load = self._rebalance_load
+
+        # 0) dry-run the post-commit layout BEFORE mutating anything: a
+        # slot-overflow (replication skew beyond the table-width slack)
+        # must abort the whole session, never half-commit it
+        preview = self.page_table.clone()
+        preview.commit_rebalance()
+        try:
+            layout = self._pooled_index_arrays(
+                preview.active, cfg, replicas=preview.replicas, load=load)
+        except ValueError:
+            self.abort_rebalance()
+            raise
+
+        # 1) replica rows -> rebuilt pool-bank slices on receiving devices
+        by_dev: Dict[int, List] = defaultdict(list)
+        for i, op in enumerate(ops):
+            if op.kind == "replicate":
+                by_dev[op.dst.device].append((op.dst.page, results[i]))
+        if by_dev:
+            pools = self.params["moe_pool"]
+            for bank in list(pools):
+                leaf = pools[bank]
+                target = leaf.sharding.devices_indices_map(leaf.shape)
+                out = []
+                for dev in leaf.sharding.addressable_devices:
+                    rank = (target[dev][0].start or 0) // ppd
+                    logical = cfg.devices[rank]
+                    shard = next(sh.data for sh in leaf.addressable_shards
+                                 if sh.device == dev)
+                    if logical in by_dev:
+                        base = np.array(shard)
+                        for page, rows in by_dev[logical]:
+                            base[page] = rows[bank]
+                        shard = jax.device_put(base, dev)
+                    out.append(shard)
+                pools[bank] = jax.make_array_from_single_device_arrays(
+                    leaf.shape, leaf.sharding, out)
+
+        # 2) demoted bytes -> host pool; promoted entries retire
+        for i, op in enumerate(ops):
+            if op.kind == "demote":
+                self._expert_host_pool[op.key] = results[i]
+            elif op.kind == "promote":
+                self._expert_host_pool.pop(op.key, None)
+
+        # 3) table switchover (frees drop_replica / promote pages)
+        self.page_table.commit_rebalance()
+
+        # 4) replica-aware serving assignment -> fresh index arrays
+        # (precomputed in step 0 from the preview table)
+        mesh = make_instance_mesh(cfg, self.all_devices)
+        moe = self.params["blocks"]["moe"]
+        for name, arr in layout.items():
+            spec = (P(None, ("dp", "tp"), None) if name == "tables"
+                    else P())
+            moe[name] = jax.device_put(np.asarray(arr, np.int32),
+                                       NamedSharding(mesh, spec))
+
+        sess = self._rebalance_session
+        if sess is not None:
+            stats.wall_s = max(sess.last_done_t - self._rebalance_t0, 0.0)
+        stats.wall_s += time.perf_counter() - t0
+        self.last_rebalance_stats = stats
+        self._rebalance_ops = None
+        self._rebalance_session = None
+        self._rebalance_stats = None
+        self._rebalance_load = None
+        return stats
+
+    @obs.traced("hmm.abort_rebalance", cat="hmm")
+    def abort_rebalance(self):
+        """Cancel-or-join, then unwind the rebalance session: freshly
+        allocated pages return to their pools and no demoted bytes are
+        published — device AND host tiers end exactly as before
+        ``begin_rebalance``.  Idempotent."""
+        if self._rebalance_session is not None:
+            self._rebalance_session.cancel()
+        self._rebalance_session = None
+        self._rebalance_ops = None
+        self._rebalance_stats = None
+        self._rebalance_load = None
+        if self.page_table is not None:
+            self.page_table.abort_rebalance()
+
+    def host_tier_bytes(self) -> int:
+        """Resident bytes of the pinned-host cold tier."""
+        return len(self._expert_host_pool) * self.expert_page_nbytes()
 
     def update_cache(self, cache):
         """The active instance writes back its KV state after each step."""

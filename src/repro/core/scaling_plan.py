@@ -9,6 +9,9 @@ tensors, produce a per-shard plan with one of:
 * ``P2P``       — copy from a device that holds identical bytes, over the
   fast fabric (HCCL isend/irecv there; ``jax.device_put`` here).
 * ``DISK``      — load from storage (only at first boot, or in baselines).
+* ``HOST``      — stream from the pinned-host cold-expert tier (DESIGN.md
+  §10): a demoted expert that must move is read back over H2D instead of
+  P2P — zero interconnect bytes for the cold set at scale events.
 * ``INIT``      — fresh allocation of *state* (KV cache on new devices).
 * ``FREE``      — release after switchover (scale-down / migrated experts).
 
@@ -30,6 +33,7 @@ class Op(enum.Enum):
     ZERO_COPY = "zero_copy"
     P2P = "p2p"
     DISK = "disk"
+    HOST = "host"
     INIT = "init"
     FREE = "free"
 
@@ -89,6 +93,13 @@ class ScalingPlan:
                 out[s.dst] += s.nbytes
         return dict(out)
 
+    def host_bytes_per_device(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        for s in self.steps:
+            if s.op == Op.HOST:
+                out[s.dst] += s.nbytes
+        return dict(out)
+
 
 # ---------------------------------------------------------------- placement
 
@@ -132,16 +143,28 @@ def plan_elastic(tensors: Sequence[TensorDesc],
                  old: Optional[ElasticConfig],
                  new: ElasticConfig,
                  expert_assignment_old=None,
-                 expert_assignment_new=None) -> ScalingPlan:
+                 expert_assignment_new=None,
+                 host_resident: Optional[set] = None) -> ScalingPlan:
     """ElasticMoE's planner: zero-copy > P2P > disk; KV reused or INIT'd.
 
     Pass page-table assignments (min-move) for the paper-faithful expert
-    remap; default is the contiguous layout of the dense execution path."""
+    remap; default is the contiguous layout of the dense execution path.
+
+    ``host_resident``: (layer, expert) keys parked in the pinned-host cold
+    tier (DESIGN.md §10).  A host-backed expert that must move streams H2D
+    (``Op.HOST``) instead of P2P — matching ``HMM._migrate_pool_bank``,
+    which always prefers the host copy: cold experts cost zero interconnect
+    bytes and add no load on the source devices at scale events."""
     assert old is None or old.tp == new.tp, \
         "ElasticMoE scales via DP/EP only; TP is fixed (paper §4.1)"
     new_place = placement(tensors, new, expert_assignment_new)
     old_place = placement(tensors, old, expert_assignment_old) if old else {}
     kv_names = {t.name for t in tensors if t.kind == "kv"}
+    # expert shard-content name -> (layer, expert), for the host-tier check
+    host_names = set()
+    if host_resident:
+        host_names = {t.name for t in tensors if t.kind == "expert"
+                      and (t.layer, t.expert) in host_resident}
 
     # content -> devices holding it under the old config
     holders: Dict[ShardKey, List[int]] = defaultdict(list)
@@ -157,6 +180,8 @@ def plan_elastic(tensors: Sequence[TensorDesc],
                 steps.append(PlanStep(Op.ZERO_COPY, key, nbytes, dst=d))
             elif key.tensor in kv_names:
                 steps.append(PlanStep(Op.INIT, key, nbytes, dst=d))
+            elif key.tensor in host_names:
+                steps.append(PlanStep(Op.HOST, key, nbytes, dst=d))
             elif holders.get(key):
                 srcs = holders[key]
                 src = srcs[rr[key] % len(srcs)]
@@ -249,15 +274,27 @@ def plan_elastic_paged(tensors, old, new, page_table,
                        first_k_dense: int = 0) -> ScalingPlan:
     """Paper-faithful elastic plan using the virtual page table's min-move
     expert placement.  Stages the remap on ``page_table`` (caller commits or
-    aborts after executing the plan)."""
-    a_old = {(l + first_k_dense, e): ref.device
-             for (l, e), ref in page_table.active.items()}
+    aborts after executing the plan).  Experts the table holds in its
+    pinned-host tier plan as ``Op.HOST`` when they must move (zero P2P for
+    the cold set — the rebalancer's scale-event payoff)."""
+    host = {(l + first_k_dense, e) for (l, e) in page_table.host}
     page_table.stage_remap(new)
-    a_new = {(l + first_k_dense, e): ref.device
-             for (l, e), ref in page_table.staged.items()}
+    a_old, a_new = {}, {}
+    for (l, e), ref in page_table.staged.items():
+        a_new[(l + first_k_dense, e)] = ref.device
+        # an expert kept in place via ANY resident copy (primary or
+        # replica) was already on its staged device — report that device
+        # as the old home so the planner prices it zero-copy, exactly as
+        # HMM._migrate_pool_bank accounts it
+        resident = {page_table.active[(l, e)]}
+        resident.update(page_table.replicas.get((l, e), ()))
+        a_old[(l + first_k_dense, e)] = (
+            ref.device if ref in resident
+            else page_table.active[(l, e)].device)
     return plan_elastic(tensors, old, new,
                         expert_assignment_old=a_old,
-                        expert_assignment_new=a_new)
+                        expert_assignment_new=a_new,
+                        host_resident=host)
 
 
 def plan_elastic_min_move(tensors, old: ElasticConfig, new: ElasticConfig,

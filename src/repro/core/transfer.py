@@ -86,8 +86,16 @@ class TransferSession:
     def op_seconds(self) -> float:
         """Σ per-op execution time — the serial-equivalent transfer work.
         Compared against the session's wall-clock this is the overlap
-        efficiency reported by ``metrics.summarize``."""
-        return sum(op.seconds for op in self.ops)
+        efficiency reported by ``metrics.summarize``.
+
+        Only ops that actually *executed* count: a cancelled op did zero
+        transfer work, so including it (even at ``seconds == 0``) would be
+        wrong twice over — it can't dilute the numerator, and if a stray
+        timestamp ever landed on a skipped op it must not inflate it
+        either.  The state filter pins that contract structurally rather
+        than relying on cancelled ops never being timed."""
+        return sum(op.seconds for op in self.ops
+                   if op.state in ("done", "failed"))
 
     @property
     def last_done_t(self) -> float:
@@ -116,6 +124,11 @@ class TransferEngine:
     @staticmethod
     def _run(session: TransferSession, op: TransferOp) -> None:
         if session.cancelled.is_set():
+            # Skipped entirely: no span, no timing.  Emitting a complete()
+            # here (state "cancelled", seconds≈0) would pollute the trace
+            # timeline and the op_seconds / overlap-efficiency denominators
+            # with ops that did zero transfer work — the span below is
+            # reserved for ops that actually executed fn().
             op.state = "cancelled"
             return
         op.state = "running"

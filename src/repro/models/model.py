@@ -124,7 +124,10 @@ def _ffn_part(cfg, bp, h, *, parallel, moe: bool, moe_capacity=None,
     ``moe_pool``: the pooled expert weight store (``params["moe_pool"]``,
     shared across layers) when the HMM runs ``expert_mode="pooled"``; the
     per-layer ``bp["moe"]`` then carries page-table index arrays instead of
-    dense [E, D, F] banks (models/moe.py)."""
+    dense [E, D, F] banks (models/moe.py).  The index arrays are the ONLY
+    coupling to expert placement: the skew rebalancer (DESIGN.md §10) swaps
+    them in place between ticks to re-point hot experts at byte-identical
+    replicas, with no change to this forward pass or its compiled shape."""
     aux = jnp.zeros((), jnp.float32)
     counts = jnp.zeros((cfg.num_experts,), jnp.int32)
     if moe:

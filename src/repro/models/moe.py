@@ -309,6 +309,15 @@ def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
     pages through the local table instead of a dense [E_local, D, F] bank.
     Per-expert math is unchanged, so tokens match the dense path exactly.
 
+    This same indirection is what makes dispatch *replica-aware* for free
+    (DESIGN.md §10): when the skew rebalancer replicates a hot expert onto
+    extra devices, ``pooled_layout`` simply points ``edest``/``eslot`` at
+    the least-loaded byte-identical copy — this body never knows replicas
+    exist, and since every copy holds identical bytes, tokens stay
+    bit-identical to the unreplicated layout.  ``elm = table.shape[-1]``
+    is read from the array, so replication slack (extra table-width slots
+    baked at boot) flows through without any kernel change.
+
     table  [1, Elm] int32   local pool-page per owned expert (this shard)
     pools  [ppd, D|F, F|D]  this device's page pools (all three banks)
     """

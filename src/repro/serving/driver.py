@@ -344,10 +344,15 @@ class ClusterDriver:
         §6) via the shared ``transition_cost`` path."""
         page_table = None
         if self._expert_mode == "pooled":
-            # cost from the backend's LIVE placement (post previous remaps),
-            # not a hypothetical contiguous boot at `old`
+            # cost from the backend's LIVE placement (post previous remaps
+            # AND rebalances — replicas price zero-copy keeps, host-tier
+            # experts price H2D instead of P2P), not a hypothetical
+            # contiguous boot at `old`.  ElasticServer exposes it through
+            # hmm.page_table, the simulator as expert_pages.
             page_table = getattr(getattr(self.backend, "hmm", None),
                                  "page_table", None)
+            if page_table is None:
+                page_table = getattr(self.backend, "expert_pages", None)
         kv_mig = 0
         if new.dp < old.dp and self._scaledown == "migrate":
             # project the live occupancy that must evacuate doomed

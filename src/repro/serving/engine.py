@@ -922,7 +922,13 @@ class InferenceEngine:
         c = np.asarray(counts, np.int64)
         if self._routing_counts is None or \
                 self._routing_counts.shape != c.shape:
+            # shape change = a different routed executable (rebind): the
+            # accumulator AND the sample count restart together — zeroing
+            # only the counts would leave routing_stats()["samples"]
+            # overcounting and skew averages dividing by the wrong
+            # denominator
             self._routing_counts = np.zeros_like(c)
+            self._routing_samples = 0
         self._routing_counts += c
         self._routing_samples += 1
         tr = obs.get_tracer()
@@ -931,13 +937,24 @@ class InferenceEngine:
             tr.counter("routing.top_expert_share",
                        float((c.max(axis=-1) / tot).mean()), cat="routing")
 
+    def reset_routing_stats(self) -> None:
+        """Restart the routing histogram (counts AND sample count together).
+
+        Invoked at scale-event commit (``ElasticServer.switchover``) and at
+        rebalance commit: counts accumulated under the *old* placement
+        describe traffic the new placement no longer sees, so letting them
+        survive would bias the rebalancer's first post-reconfiguration
+        decisions toward stale skew."""
+        self._routing_counts = None
+        self._routing_samples = 0
+
     def routing_stats(self) -> Optional[dict]:
         """Accumulated per-expert routing histogram (None until a sampled
         tick has landed).  ``counts`` is [L_moe, E] token counts;
         ``top_expert_share`` / ``expert_cv`` are layer-averaged skew
         metrics (heavy-tailed routing shows up as share >> 1/E and
-        cv >> 0) — the signal the ROADMAP's skew-aware expert replication
-        will act on."""
+        cv >> 0) — the signal the skew-aware expert rebalancer
+        (serving/rebalance.py, DESIGN.md §10) acts on."""
         if self._routing_counts is None or self._routing_samples == 0:
             return None
         c = self._routing_counts.astype(np.float64)

@@ -38,15 +38,19 @@ import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import DEFAULT_HW, HardwareModel, ScalingCost
+from repro.core.expert_pages import ExpertPageTable
 from repro.core.topology import ElasticConfig, kv_cache_bytes
 from repro.serving.driver import (ScalePhase, admission_during_scale,
                                   projected_migration_blocks,
                                   transition_cost)
 from repro.serving.kv_blocks import blocks_for as kv_blocks_for
 from repro.serving.metrics import latency_percentiles
+from repro.serving.rebalance import RebalancePolicy
 from repro.serving.scheduler import PrefillJob, TokenBudgetScheduler
 from repro.serving.workload import Request, merge_arrivals
 
@@ -105,6 +109,56 @@ class PerfModel:
     def blocks_for(self, num_tokens: int) -> int:
         # the engine's exact admission granularity (kv_blocks.blocks_for)
         return kv_blocks_for(int(num_tokens), self.kv_block_size)
+
+
+@dataclasses.dataclass
+class SimRoutingModel:
+    """Synthesized router telemetry for a Zipf-skewed expert workload.
+
+    The roofline model has no router, so for rebalancer experiments the
+    sim draws per-(layer, expert) token counts from a Zipf(``skew``)
+    share, permuted per layer with a seeded RNG so layers disagree about
+    *which* experts are hot (exactly the shape the real histograms show).
+    ``stats()`` matches ``InferenceEngine.routing_stats()`` key-for-key,
+    so the shared ``RebalancePolicy`` and ``metrics.summarize`` consume
+    either backend's telemetry unchanged."""
+    num_moe_layers: int
+    num_experts: int
+    skew: float = 1.2
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        ranks = np.arange(1, self.num_experts + 1,
+                          dtype=np.float64) ** -self.skew
+        share = ranks / ranks.sum()
+        self._share = np.stack([share[rng.permutation(self.num_experts)]
+                                for _ in range(self.num_moe_layers)])
+        self._counts = np.zeros_like(self._share)
+        self.samples = 0
+
+    def observe(self, tokens: int) -> None:
+        """Account one sampled decode tick routing ``tokens`` tokens."""
+        if tokens <= 0:
+            return
+        self._counts += self._share * tokens
+        self.samples += 1
+
+    def stats(self) -> Optional[dict]:
+        if self.samples == 0:
+            return None
+        tot = self._counts.sum(axis=1, keepdims=True)
+        share = self._counts / np.maximum(tot, 1.0)
+        mean = share.mean(axis=1)
+        return {"samples": self.samples, "counts": self._counts.copy(),
+                "top_expert_share": float(share.max(axis=1).mean()),
+                "expert_cv": float((share.std(axis=1)
+                                    / np.maximum(mean, 1e-12)).mean())}
+
+    def reset(self) -> None:
+        """Same contract as ``InferenceEngine.reset_routing_stats``."""
+        self._counts[:] = 0.0
+        self.samples = 0
 
 
 @dataclasses.dataclass
@@ -179,6 +233,17 @@ class SimScalingTask:
             self.sim.ndev = self.event.new_ndev
             self.sim.extra_devices_during_scale = 0
             self.sim.scale = None
+            if self.sim.expert_pages is not None \
+                    and self.sim.strategy == "elastic":
+                # track the placement the pooled engine would commit:
+                # min-move remap keeps experts via ANY resident copy and
+                # retires the losing replicas (expert_pages.commit)
+                self.sim.expert_pages.stage_remap(self.target, min_move=True)
+                self.sim.expert_pages.commit()
+            if self.sim.routing is not None:
+                # same staleness rule as ElasticServer.switchover: the
+                # histogram described the old placement
+                self.sim.routing.reset()
             self.phase = ScalePhase.DONE
             obs.get_tracer().instant(
                 "scale.commit", cat="scale", t=now, tid="sim-scale",
@@ -197,7 +262,12 @@ class ServingSimulator:
                  expert_mode: str = "dense", staging: str = "serial",
                  scaledown: str = "migrate",
                  prefill_chunk: Optional[int] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 rebalance: Optional[RebalancePolicy] = None,
+                 routing_skew: Optional[float] = None,
+                 routing_seed: int = 0,
+                 expert_slot_slack: Optional[int] = None,
+                 expert_host_pages: Optional[int] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
@@ -273,6 +343,33 @@ class ServingSimulator:
         self.scale: Optional[SimScalingTask] = None
         self.events: List[SimScaleEvent] = []
         self.extra_devices_during_scale = 0
+        # skew-aware expert rebalancing, sim side (DESIGN.md §10): the
+        # SAME RebalancePolicy the engine runs decides over a synthesized
+        # Zipf routing histogram and applies its actions to a sim-owned
+        # ExpertPageTable (stage + commit in one quantum — the byte cost
+        # of a rebalance pass is negligible at model scale), so allocator
+        # behaviour (replica sets, host tier, pool conservation, min-move
+        # over replicas at scale events) is testable with no devices.
+        self.rebalance_policy = rebalance
+        if rebalance is not None and routing_skew is None:
+            routing_skew = 1.2      # rebalancing needs telemetry to read
+        n_moe = mcfg.num_layers - mcfg.first_k_dense
+        self.routing = (SimRoutingModel(n_moe, mcfg.num_experts,
+                                        skew=routing_skew, seed=routing_seed)
+                        if routing_skew is not None and mcfg.num_experts
+                        else None)
+        if expert_slot_slack is None:
+            expert_slot_slack = 1 if rebalance is not None else 0
+        self.expert_slot_slack = expert_slot_slack
+        self.expert_pages: Optional[ExpertPageTable] = None
+        if expert_mode == "pooled" and mcfg.num_experts:
+            self.expert_pages = ExpertPageTable(
+                n_moe, mcfg.num_experts,
+                host_pool_pages=expert_host_pages)
+            self.expert_pages.initial_place(self.current_config())
+        self.rebalance_events: List[dict] = []
+        # one expert page across the three banks, bf16 (PerfModel's bpe)
+        self._expert_page_bytes = 3 * mcfg.d_model * mcfg.moe_d_ff * 2
 
     # ------------------------------------------------------------- scaling
     def start_scale(self, target: ElasticConfig) -> SimScalingTask:
@@ -296,6 +393,10 @@ class ServingSimulator:
                                preinit=self.preinit,
                                kv_seq_len=self.perf.kv_seq_len,
                                expert_mode=self.expert_mode,
+                               # cost from the sim's live placement: replica
+                               # keeps are zero-copy, host-tier experts
+                               # stream H2D instead of P2P (DESIGN.md §10)
+                               page_table=self.expert_pages,
                                staging=self.staging_mode,
                                kv_migration_bytes=mig_bytes)
         t_ready = self.t + cost.scale_time_s
@@ -451,9 +552,70 @@ class ServingSimulator:
 
     def routing_stats(self) -> Optional[Dict[str, float]]:
         """ServingBackend parity with ``ElasticServer.routing_stats``:
-        the roofline model has no router, so always None (the driver and
-        ``metrics.summarize`` treat None as telemetry-absent)."""
-        return None
+        with a ``SimRoutingModel`` (``routing_skew=``) the synthesized
+        Zipf histogram, key-compatible with the engine's; otherwise None
+        (the driver and ``metrics.summarize`` treat None as
+        telemetry-absent)."""
+        if self.routing is None:
+            return None
+        return self.routing.stats()
+
+    def _elm(self) -> int:
+        """Compiled table width per rank (mirrors HMM._pooled_index_arrays:
+        ceil(E / ndev) + slack) — the replication slot budget."""
+        return (math.ceil(self.mcfg.num_experts / max(self.ndev, 1))
+                + self.expert_slot_slack)
+
+    def _drive_rebalance(self, now: float) -> None:
+        """Modelled rebalance pass: the shared policy decides over the
+        synthesized histogram and the actions commit on the sim-owned page
+        table within the quantum (rebalance bytes are negligible next to a
+        scale event, so no modelled latency) — then the histogram restarts,
+        exactly like the engine's RebalanceTask commit."""
+        if (self.rebalance_policy is None or self.expert_pages is None
+                or self.routing is None or self.scale is not None):
+            return
+        actions = self.rebalance_policy.decide(
+            self.routing.stats(), self.expert_pages, self.current_config(),
+            now, slots_per_rank=self._elm())
+        if not actions:
+            return
+        try:
+            ops = self.expert_pages.stage_rebalance(actions)
+        except MemoryError:
+            return                      # pool full this pass; retry later
+        self.expert_pages.commit_rebalance()
+        self.routing.reset()
+        kinds = [op.kind for op in ops]
+        page = self._expert_page_bytes
+        self.rebalance_events.append(
+            {"t": now, "actions": len(ops),
+             "replicated": kinds.count("replicate"),
+             "demoted": kinds.count("demote"),
+             "dropped": kinds.count("drop_replica"),
+             "promoted": kinds.count("promote"),
+             "replica_bytes": kinds.count("replicate") * page,
+             "d2h_bytes": kinds.count("demote") * page})
+        obs.get_tracer().instant(
+            "rebalance.commit", cat="rebalance", t=now, tid="sim",
+            args={"actions": len(ops)})
+
+    def rebalance_summary(self) -> Optional[dict]:
+        """Mirror of ``ElasticServer.rebalance_summary`` over the modelled
+        passes (None before the first one)."""
+        if not self.rebalance_events:
+            return None
+        evs = self.rebalance_events
+        return {"passes": len(evs), "aborted": 0,
+                "replicated": sum(e["replicated"] for e in evs),
+                "demoted": sum(e["demoted"] for e in evs),
+                "dropped": sum(e["dropped"] for e in evs),
+                "promoted": sum(e["promoted"] for e in evs),
+                "replica_bytes": sum(e["replica_bytes"] for e in evs),
+                "d2h_bytes": sum(e["d2h_bytes"] for e in evs),
+                "host_tier_bytes": (len(self.expert_pages.host)
+                                    * self._expert_page_bytes
+                                    if self.expert_pages else 0)}
 
     def kv_stats(self) -> Optional[Dict[str, float]]:
         """Block-pool stats (None in dense mode); serving/metrics.py."""
@@ -479,6 +641,12 @@ class ServingSimulator:
         done: List[Request] = []
         ndev, admit = self._serving_capacity()
         tr = obs.get_tracer()
+        if self.routing is not None and ndev > 0 and self.running:
+            # synthesized router telemetry: one sampled tick per quantum,
+            # one token per running decode (matches the real sampler's
+            # batch-token granularity)
+            self.routing.observe(len(self.running))
+        self._drive_rebalance(now)
         if tr.enabled and ndev > 0 and self.running:
             # one modelled decode step per quantum — explicit sim-time span
             # at the roofline-modelled duration, so an overlap trace reads

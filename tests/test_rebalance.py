@@ -1,0 +1,763 @@
+"""Skew-aware expert rebalancing (DESIGN.md §10): replica sets, the
+pinned-host cold tier, and the two-phase rebalance session.
+
+Fast (single device): page-table lifecycle (stage/commit/abort conserve the
+device AND host pools), replica-aware ``pooled_layout`` (least-loaded
+assignment, legacy byte-identity, slot-overflow), min-move scale staging
+over replicas and host-sourced migrations, ``plan_elastic_paged``/costmodel
+``Op.HOST`` accounting, ``RebalancePolicy`` hysteresis, and the simulator
+parity loop (sim-owned table + Zipf routing model + shared policy).
+
+Slow (subprocess, 8 host devices): mid-serving rebalance on the real JAX
+engine — the policy replicates hot experts and demotes cold ones while
+tokens stay bit-identical to the dense run; abort-in-flight conserves both
+tiers; a scale event over a fully demoted expert set streams H2D from the
+host tier with ZERO expert P2P; routing histograms reset at scale commit.
+"""
+import numpy as np
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+TEST_MOE_CFG = None
+
+
+def _mcfg():
+    global TEST_MOE_CFG
+    if TEST_MOE_CFG is None:
+        ns = {}
+        exec(TEST_MOE, ns)
+        TEST_MOE_CFG = ns["MCFG"]
+    return TEST_MOE_CFG
+
+
+def _table(cfg, host_pool_pages=None):
+    from repro.core.expert_pages import ExpertPageTable
+    mcfg = _mcfg()
+    t = ExpertPageTable(mcfg.num_layers, mcfg.num_experts,
+                        host_pool_pages=host_pool_pages)
+    t.initial_place(cfg)
+    return t
+
+
+def _c4():
+    from repro.core.topology import ElasticConfig
+    return ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3))
+
+
+def _c6():
+    from repro.core.topology import ElasticConfig
+    return ElasticConfig(dp=3, tp=2, devices=(0, 1, 2, 3, 4, 5))
+
+
+def _usage(t, devices):
+    from repro.core.expert_pages import HOST
+    return {d: t.pages_in_use(d) for d in list(devices) + [HOST]}
+
+
+# ------------------------------------------------- page-table lifecycle
+
+def test_rebalance_stage_commit_replicate_demote():
+    from repro.core.expert_pages import HOST
+    cfg = _c4()
+    t = _table(cfg)
+    before = _usage(t, cfg.devices)
+    hot = (0, 0)                      # primary on device 0
+    cold = (1, 23)                    # primary on device 3
+    ops = t.stage_rebalance([("replicate", *hot, 1), ("demote", *cold)])
+    assert [op.kind for op in ops] == ["replicate", "demote"]
+    # staged but not applied: replica/host sets untouched, pages reserved
+    assert t.replica_count(*hot) == 0 and not t.host
+    assert t.pages_in_use(1) == before[1] + 1
+    assert t.pages_in_use(HOST) == 1
+    t.commit_rebalance()
+    assert t.replica_count(*hot) == 1
+    assert t.replicas[hot][0].device == 1
+    assert t.demoted() == [cold]
+    assert t.host[cold].is_host
+    # demotion RETAINS the device primary (bit-identity never at risk)
+    assert t.active[cold].device == 3
+    # undo both: drop_replica + promote free exactly the staged pages
+    t.stage_rebalance([("drop_replica", *hot, 1), ("promote", *cold)])
+    freed = t.commit_rebalance()
+    assert len(freed) == 2
+    assert t.replica_count(*hot) == 0 and not t.host
+    assert _usage(t, cfg.devices) == before
+
+
+def test_abort_in_flight_conserves_both_tiers():
+    cfg = _c4()
+    t = _table(cfg)
+    before = _usage(t, cfg.devices)
+    active_before = dict(t.active)
+    t.stage_rebalance([("replicate", 0, 0, 2), ("replicate", 0, 1, 3),
+                       ("demote", 1, 5), ("demote", 1, 6)])
+    t.abort_rebalance()
+    t.abort_rebalance()               # idempotent
+    assert t.staged_rebalance is None
+    assert _usage(t, cfg.devices) == before
+    assert t.active == active_before
+    assert not t.replicas and not t.host
+
+
+def test_stage_rebalance_validation_and_rollback():
+    cfg = _c4()
+    t = _table(cfg)
+    before = _usage(t, cfg.devices)
+    # duplicate copy on a device that already holds one
+    dev0 = t.active[(0, 0)].device
+    with pytest.raises(ValueError):
+        t.stage_rebalance([("replicate", 0, 0, dev0)])
+    # a failing action mid-list rolls back the pages popped before it
+    with pytest.raises(ValueError):
+        t.stage_rebalance([("replicate", 0, 0, 1), ("demote", 0, 1),
+                           ("promote", 0, 2)])     # (0,2) not demoted
+    assert _usage(t, cfg.devices) == before
+    assert t.staged_rebalance is None
+    # double demote / unknown kinds / missing replica
+    t.stage_rebalance([("demote", 0, 0)])
+    t.commit_rebalance()
+    with pytest.raises(ValueError):
+        t.stage_rebalance([("demote", 0, 0)])
+    with pytest.raises(ValueError):
+        t.stage_rebalance([("drop_replica", 0, 0, 1)])
+    with pytest.raises(ValueError):
+        t.stage_rebalance([("evict", 0, 0)])
+
+
+def test_host_pool_exhaustion_is_recoverable():
+    from repro.core.expert_pages import HOST
+    cfg = _c4()
+    t = _table(cfg, host_pool_pages=1)
+    with pytest.raises(MemoryError):
+        t.stage_rebalance([("demote", 0, 0), ("demote", 0, 1)])
+    assert t.pages_in_use(HOST) == 0
+    t.stage_rebalance([("demote", 0, 0)])     # one still fits
+    t.commit_rebalance()
+    assert t.pages_in_use(HOST) == 1
+
+
+def test_rebalance_mutually_exclusive_with_scale_staging():
+    cfg, c6 = _c4(), _c6()
+    t = _table(cfg)
+    t.stage_rebalance([("demote", 0, 0)])
+    with pytest.raises(RuntimeError):
+        t.stage_remap(c6, min_move=True)
+    t.abort_rebalance()
+    t.stage_remap(c6, min_move=True)
+    with pytest.raises(RuntimeError):
+        t.stage_rebalance([("demote", 0, 0)])
+    t.abort()
+
+
+# --------------------------------------------- replica-aware serving layout
+
+def test_pooled_layout_without_replicas_is_legacy_identical():
+    from repro.core.expert_pages import pooled_layout
+    mcfg = _mcfg()
+    cfg = _c6()
+    t = _table(cfg)
+    a = pooled_layout(t.active, cfg, mcfg.num_layers, mcfg.num_experts, 48)
+    # legacy contract: expert e serves on its owner rank, slots ascending
+    for l in range(mcfg.num_layers):
+        for e in range(mcfg.num_experts):
+            assert a["edest"][l, e] == cfg.slot(t.active[(l, e)].device)
+    # rerun with uniform load + replica kwargs: byte-identical arrays
+    b = pooled_layout(t.active, cfg, mcfg.num_layers, mcfg.num_experts, 48,
+                      replicas={}, load=None)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_pooled_layout_routes_hot_expert_to_least_loaded_replica():
+    from repro.core.expert_pages import pooled_layout
+    mcfg = _mcfg()
+    cfg = _c4()
+    t = _table(cfg)
+    hot = (0, 0)                      # owner rank 0
+    t.stage_rebalance([("replicate", *hot, 3)])   # replica on rank 3
+    t.commit_rebalance()
+    E = mcfg.num_experts
+    load = np.ones((mcfg.num_layers, E))
+    load[0, 0] = 100.0                # expert 0 dominates layer 0
+    lay = pooled_layout(t.active, cfg, mcfg.num_layers, E, 48,
+                        replicas=t.replicas, load=load,
+                        slots_per_rank=E // cfg.ndev + 1)
+    # the hot expert is assigned first (descending load) and both candidate
+    # ranks start empty — the tie breaks to the primary (rank 0)… then the
+    # remaining uniform experts pile load on rank 0, so re-laying-out with
+    # rank 0 pre-loaded flips it to the replica.  Pin the observable end
+    # state instead: total per-rank load is balanced vs. the no-replica run.
+    def rank_loads(layout):
+        rl = np.zeros(cfg.ndev)
+        for e in range(E):
+            rl[layout["edest"][0, e]] += load[0, e]
+        return rl
+    base = pooled_layout(t.active, cfg, mcfg.num_layers, E, 48)
+    assert rank_loads(lay).max() <= rank_loads(base).max()
+    # every expert still serves from a rank that truly holds a copy
+    for l in range(mcfg.num_layers):
+        for e in range(E):
+            holders = {cfg.slot(t.active[(l, e)].device)}
+            holders.update(cfg.slot(r.device)
+                           for r in t.replicas.get((l, e), ()))
+            assert int(lay["edest"][l, e]) in holders
+    # deterministic: same inputs, same arrays
+    lay2 = pooled_layout(t.active, cfg, mcfg.num_layers, E, 48,
+                         replicas=t.replicas, load=load,
+                         slots_per_rank=E // cfg.ndev + 1)
+    for k in lay:
+        np.testing.assert_array_equal(lay[k], lay2[k])
+
+
+def test_pooled_layout_slot_overflow_raises():
+    from repro.core.expert_pages import pooled_layout
+    mcfg = _mcfg()
+    cfg = _c4()
+    t = _table(cfg)
+    # replicate two experts onto rank 1 and force ALL load there with zero
+    # slack: 6 slots per rank cannot take 6 residents + 2 replicas
+    t.stage_rebalance([("replicate", 0, 0, 1), ("replicate", 0, 1, 1)])
+    t.commit_rebalance()
+    # 4 ranks x 5 slots < 24 experts: some expert finds no free slot
+    with pytest.raises(ValueError, match="slots_per_rank"):
+        pooled_layout(t.active, cfg, mcfg.num_layers, mcfg.num_experts, 48,
+                      replicas=t.replicas, slots_per_rank=5)
+
+
+# --------------------------------- scale events over replicas / host tier
+
+def test_min_move_keeps_expert_via_replica_and_commit_retires_them():
+    cfg, c6 = _c4(), _c6()
+    t = _table(cfg)
+    # replicate (0, 0) onto device 1; then shrink the capacity of its
+    # primary's device by moving to 6 devices — with 4 experts per device
+    # the primary may or may not keep its seat, but the expert must never
+    # migrate while ANY copy has capacity
+    t.stage_rebalance([("replicate", 0, 0, 1)])
+    t.commit_rebalance()
+    migs = t.stage_remap(c6, min_move=True)
+    assert all((m.layer, m.expert) != (0, 0) for m in migs)
+    kept = t.staged[(0, 0)]
+    assert kept in ((t.active[(0, 0)],) + t.replicas[(0, 0)])
+    t.commit()
+    # all unchosen replicas retired; pool accounts exactly one page per
+    # (layer, expert) again
+    assert not t.replicas
+    total = sum(t.pages_in_use(d) for d in c6.devices)
+    assert total == t.num_layers * t.num_experts
+
+
+def test_scale_migration_sources_from_host_tier():
+    from repro.core.expert_pages import HOST
+    cfg, c6 = _c4(), _c6()
+    t = _table(cfg)
+    # demote everything: every forced move must then source from HOST
+    t.stage_rebalance([("demote", l, e) for l in range(t.num_layers)
+                       for e in range(t.num_experts)])
+    t.commit_rebalance()
+    migs = t.stage_remap(c6, min_move=True)
+    assert migs, "4->6 with 24 experts must move overflow experts"
+    assert all(m.src.device == HOST for m in migs)
+    t.commit()
+    # host copies survive the scale commit (weights are immutable)
+    assert len(t.host) == t.num_layers * t.num_experts
+
+
+def test_plan_elastic_paged_prices_host_and_replica_keeps():
+    from repro.core.expert_pages import HOST
+    from repro.core.scaling_plan import Op, plan_elastic_paged
+    from repro.core.topology import model_tensors
+    mcfg = _mcfg()
+    cfg, c6 = _c4(), _c6()
+    tensors = model_tensors(mcfg, 2)
+
+    # demoted set: movers become Op.HOST steps, not P2P
+    t = _table(cfg)
+    t.stage_rebalance([("demote", l, e) for l in range(t.num_layers)
+                       for e in range(t.num_experts)])
+    t.commit_rebalance()
+    plan = plan_elastic_paged(tensors, cfg, c6, t,
+                              first_k_dense=mcfg.first_k_dense)
+    expert_steps = [s for s in plan.steps if "/expert" in s.key.tensor]
+    hosts = [s for s in expert_steps if s.op == Op.HOST]
+    p2ps = [s for s in expert_steps if s.op == Op.P2P]
+    assert hosts and not p2ps, (len(hosts), len(p2ps))
+    assert plan.host_bytes_per_device()
+
+    # replica-kept experts price zero-copy: exactly the staged refs NOT
+    # already resident (primary or replica) appear as expert movers
+    t2 = _table(cfg)
+    t2.stage_rebalance([("replicate", 0, 0, 1)])
+    t2.commit_rebalance()
+    plan2 = plan_elastic_paged(tensors, cfg, c6, t2,
+                               first_k_dense=mcfg.first_k_dense)
+    moved = {s.key.tensor for s in plan2.steps
+             if s.op == Op.P2P and "/expert" in s.key.tensor}
+    expect = set()
+    for (l, e), ref in t2.staged.items():
+        resident = {t2.active[(l, e)]} | set(t2.replicas.get((l, e), ()))
+        if ref not in resident:
+            expect.add(f"layer{l + mcfg.first_k_dense}/expert{e}")
+    assert moved == expect, moved ^ expect
+    t2.abort()
+
+
+def test_costmodel_host_bucket_uses_h2d_bandwidth():
+    from repro.core.costmodel import DEFAULT_HW, plan_cost
+    from repro.core.scaling_plan import plan_elastic_paged
+    from repro.core.topology import model_tensors
+    mcfg = _mcfg()
+    cfg, c6 = _c4(), _c6()
+    tensors = model_tensors(mcfg, 2)
+    t_cold = _table(cfg)
+    t_cold.stage_rebalance([("demote", l, e) for l in range(t_cold.num_layers)
+                            for e in range(t_cold.num_experts)])
+    t_cold.commit_rebalance()
+    cold_plan = plan_elastic_paged(tensors, cfg, c6, t_cold,
+                                   first_k_dense=mcfg.first_k_dense)
+    cold = plan_cost(cold_plan)
+    warm = plan_cost(plan_elastic_paged(tensors, cfg, c6, _table(cfg),
+                                        first_k_dense=mcfg.first_k_dense))
+    assert cold.breakdown["host"] > 0 and warm.breakdown["host"] == 0
+    # the cold plan moved its expert bytes off the P2P bottleneck
+    assert cold.breakdown["p2p"] < warm.breakdown["p2p"]
+    # bucket arithmetic: bottleneck device's host bytes over H2D bandwidth
+    want = max(cold_plan.host_bytes_per_device().values()) / DEFAULT_HW.h2d_bw
+    assert cold.breakdown["host"] == pytest.approx(want)
+
+
+# ------------------------------------------------------ RebalancePolicy
+
+def _stats(counts):
+    c = np.asarray(counts, np.float64)
+    return {"samples": 10, "counts": c}
+
+
+def test_policy_replicates_hot_and_demotes_cold():
+    from repro.serving.rebalance import RebalancePolicy
+    mcfg = _mcfg()
+    cfg = _c4()
+    t = _table(cfg)
+    E = mcfg.num_experts
+    # warm floor of 10 keeps the middling experts inside the neutral band:
+    # only expert 0 crosses hot_factor*fair, only expert E-1 cold_factor*fair
+    counts = np.full((mcfg.num_layers, E), 10.0)
+    counts[:, 0] = 100.0
+    counts[:, E - 1] = 0.0
+    pol = RebalancePolicy(min_samples=1, max_actions=16)
+    actions = pol.decide(_stats(counts), t, cfg, now=0.0, slots_per_rank=7)
+    assert any(a[:3] == ("replicate", 0, 0) for a in actions)
+    assert any(a[:3] == ("demote", 0, E - 1) for a in actions)
+    # the replication target is a device NOT already holding expert 0 and
+    # with the least routed load
+    for a in actions:
+        if a[0] == "replicate":
+            assert a[3] != t.active[(a[1], a[2])].device
+
+
+def test_policy_hysteresis_band_and_undo():
+    from repro.serving.rebalance import RebalancePolicy
+    mcfg = _mcfg()
+    cfg = _c4()
+    t = _table(cfg)
+    E = mcfg.num_experts
+    pol = RebalancePolicy(min_samples=1, max_actions=32)
+    # shares inside (cold_factor/E, hot_factor/E): no actions at all
+    counts = np.ones((mcfg.num_layers, E))
+    assert pol.decide(_stats(counts), t, cfg, 0.0) == []
+    # a replicated expert whose share fell below fair -> drop_replica;
+    # a demoted expert whose share rose above fair -> promote
+    t.stage_rebalance([("replicate", 0, 0, 1), ("demote", 0, 1)])
+    t.commit_rebalance()
+    counts = np.ones((mcfg.num_layers, E))
+    counts[0, 0] = 0.5                # below fair, above cold band
+    counts[0, 1] = 2.0                # above fair, below hot band
+    actions = pol.decide(_stats(counts), t, cfg, 0.0)
+    assert ("drop_replica", 0, 0, 1) in actions
+    assert ("promote", 0, 1) in actions
+    # but within the neutral band nothing flaps
+    counts[0, 0] = 1.2                # above fair -> replica kept
+    counts[0, 1] = 0.8                # below fair, above cold -> stays cold
+    assert pol.decide(_stats(counts), t, cfg, 0.0) == []
+
+
+def test_policy_gates_min_samples_cooldown_and_slot_budget():
+    from repro.serving.rebalance import RebalancePolicy
+    mcfg = _mcfg()
+    cfg = _c4()
+    t = _table(cfg)
+    E = mcfg.num_experts
+    counts = np.ones((mcfg.num_layers, E))
+    counts[:, 0] = 4 * E
+    pol = RebalancePolicy(min_samples=5, cooldown_s=10.0, max_actions=4)
+    assert pol.decide({"samples": 2, "counts": counts}, t, cfg, 0.0) == []
+    assert pol.decide(None, t, cfg, 0.0) == []
+    acts = pol.decide(_stats(counts), t, cfg, 0.0, slots_per_rank=7)
+    assert acts and len(acts) <= 4
+    # cooldown: an accepted pass blocks the next one for cooldown_s
+    assert pol.decide(_stats(counts), t, cfg, 5.0) == []
+    assert pol.decide(_stats(counts), t, cfg, 11.0, slots_per_rank=7) != []
+    # zero slack -> every rank already full -> replication infeasible
+    pol2 = RebalancePolicy(min_samples=1)
+    acts = pol2.decide(_stats(counts), t, cfg, 0.0,
+                       slots_per_rank=E // cfg.ndev)
+    assert all(a[0] != "replicate" for a in acts)
+
+
+# ------------------------------------------------------ simulator parity
+
+def test_sim_rebalances_and_survives_scale_over_replicas():
+    from repro.serving.rebalance import RebalancePolicy, max_rank_load
+    from repro.serving.simulator import ServingSimulator
+    from repro.serving.workload import make_workload
+    mcfg = _mcfg()
+    pol = RebalancePolicy(min_samples=2, cooldown_s=1.0)
+    sim = ServingSimulator(mcfg, tp=2, ndev=6, expert_mode="pooled",
+                           rebalance=pol, routing_skew=1.2)
+    reqs = make_workload(duration_s=15.0, rps_fn=lambda t: 4.0,
+                         prompt_len=64, output_range=(32, 32), seed=0)
+    sim.run(reqs, until=20.0)
+    summ = sim.rebalance_summary()
+    assert summ is not None
+    assert summ["replicated"] >= 1 and summ["demoted"] >= 1
+    assert summ["replica_bytes"] > 0 and summ["host_tier_bytes"] > 0
+    # the balance metric improved: serving assignment over replicas beats
+    # the primary-only assignment on the same synthesized Zipf shares
+    from repro.core.expert_pages import pooled_layout
+    cfg = sim.current_config()
+    share = sim.routing._share
+    base = pooled_layout(sim.expert_pages.active, cfg, mcfg.num_layers,
+                         mcfg.num_experts, 48)
+    rep = pooled_layout(sim.expert_pages.active, cfg, mcfg.num_layers,
+                        mcfg.num_experts, 48,
+                        replicas=sim.expert_pages.replicas,
+                        load=share, slots_per_rank=sim._elm())
+    assert (max_rank_load(share, rep["edest"], cfg.ndev)
+            <= max_rank_load(share, base["edest"], cfg.ndev))
+    # a scale event over the rebalanced table: replicas retire, host tier
+    # survives, pool conserves
+    task = sim.command_scale(4)
+    n = 0
+    while not task.done:
+        sim.t += 0.5
+        sim.step(sim.t)
+        task.advance(sim.t)
+        n += 1
+        assert n < 1000
+    t = sim.expert_pages
+    assert not t.replicas and t.host
+    assert (sum(t.pages_in_use(d) for d in range(4))
+            == mcfg.num_layers * mcfg.num_experts)
+    # the scale event's cost saw the host tier (H2D bucket populated)
+    assert sim.events[-1].cost.breakdown.get("host", 0) > 0
+
+
+def test_driver_projection_costs_from_sim_page_table():
+    from repro.core.coordinator import ScalingPolicy
+    from repro.serving.driver import ClusterDriver, DriverConfig
+    from repro.serving.metrics import SLO
+    from repro.serving.simulator import ServingSimulator
+    mcfg = _mcfg()
+    policy = ScalingPolicy(slo=SLO(ttft_s=5.0, tpot_s=1.5), window=16)
+
+    def make_driver(sim):
+        return ClusterDriver(sim, policy, mcfg=mcfg, tp=2,
+                             device_pool=range(8), config=DriverConfig())
+
+    sim = ServingSimulator(mcfg, tp=2, ndev=4, expert_mode="pooled")
+    # park every expert in the host tier: the driver's projection — with no
+    # explicit page table, via the backend.expert_pages fallback — must see
+    # the LIVE placement, so its cost differs from the warm-placement
+    # projection (expert movers priced on the H2D path, zero expert P2P;
+    # the bucket arithmetic itself is pinned in the costmodel test above)
+    sim.expert_pages.stage_rebalance(
+        [("demote", l, e) for l in range(mcfg.num_layers)
+         for e in range(mcfg.num_experts)])
+    sim.expert_pages.commit_rebalance()
+    c4, c6 = _c4(), _c6()
+    cold = make_driver(sim).projected_cost_s(c4, c6)
+    sim_warm = ServingSimulator(mcfg, tp=2, ndev=4, expert_mode="pooled")
+    warm = make_driver(sim_warm).projected_cost_s(c4, c6)
+    assert cold != warm
+    # projection must not leave a staged remap open on the live table
+    assert sim.expert_pages.staged is None
+
+
+# ------------------------- routing-telemetry & transfer accounting fixes
+
+def test_accumulate_routing_resets_samples_with_counts():
+    """Regression: a counts-shape change (rebind to a different routed
+    executable) must restart the accumulator AND the sample count together —
+    zeroing only the counts left ``samples`` overcounting, so skew averages
+    divided by the wrong denominator."""
+    from repro.serving.engine import InferenceEngine
+    eng = InferenceEngine(_mcfg(), batch_per_replica=2, max_len=64,
+                          routing_sample_every=1)
+    eng._accumulate_routing(np.ones((2, 24), np.int64))
+    eng._accumulate_routing(np.ones((2, 24), np.int64))
+    assert eng.routing_stats()["samples"] == 2
+    eng._accumulate_routing(np.ones((2, 12), np.int64))   # shape change
+    st = eng.routing_stats()
+    assert st["samples"] == 1
+    assert st["counts"].shape == (2, 12)
+    np.testing.assert_array_equal(st["counts"], np.ones((2, 12)))
+    eng.reset_routing_stats()
+    assert eng.routing_stats() is None
+
+
+def test_cancelled_transfer_ops_excluded_from_op_seconds_and_spans():
+    """Regression: ops skipped after ``cancel()`` must not contribute to
+    ``op_seconds`` (they never ran) and must not emit a tracer span —
+    cancelled work previously polluted transfer-op timelines."""
+    import threading
+
+    from repro import obs
+    from repro.core.transfer import TransferEngine, TransferOp
+
+    tr = obs.install(obs.Tracer())
+    try:
+        started, gate = threading.Event(), threading.Event()
+
+        def blocker():
+            started.set()
+            gate.wait()
+
+        ops = [TransferOp(0, "blocker", blocker),
+               TransferOp(1, "skipped", lambda: None)]
+        eng = TransferEngine(max_workers=1)
+        sess = eng.submit(ops)
+        assert started.wait(5.0)
+        # flag cancellation while op0 holds the single worker but leave the
+        # futures queued: op1 IS dequeued and its _run must hit the
+        # early-return branch, not execute
+        sess.cancelled.set()
+        gate.set()
+        assert sess.join(5.0)
+        assert ops[0].state == "done"
+        assert ops[1].state == "cancelled"
+        assert ops[1].seconds == 0.0
+        names = [e.name for e in tr._events]
+        assert "blocker" in names and "skipped" not in names
+        assert sess.op_seconds == ops[0].seconds
+        # the contract is the state filter, not happenstance zeros
+        ops[1].seconds = 99.0
+        assert sess.op_seconds == ops[0].seconds
+    finally:
+        obs.install(None)
+
+
+def test_session_cancel_marks_pending_ops_cancelled():
+    import threading
+
+    from repro.core.transfer import TransferEngine, TransferOp
+
+    gate = threading.Event()
+    ops = [TransferOp(0, "blocker", gate.wait),
+           TransferOp(1, "pending", lambda: None)]
+    eng = TransferEngine(max_workers=1)
+    sess = eng.submit(ops)
+    threading.Timer(0.2, gate.set).start()
+    sess.cancel()
+    gate.set()
+    assert sess.join(5.0)
+    assert ops[1].state == "cancelled"
+    assert sess.op_seconds == ops[0].seconds
+
+
+# ------------------------------------------------- real engine (subprocess)
+
+REBAL_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.rebalance import RebalancePolicy
+from repro.serving.workload import Request
+
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+
+def serve(srv, reqs, hook=None, max_ticks=600):
+    t, n = 0.0, 0
+    for r in reqs: srv.submit(r)
+    while any(r.finish_s is None for r in reqs):
+        if hook is not None:
+            hook(srv, n, t)
+        srv.tick(t); t += .1; n += 1
+        assert n < max_ticks, "serve loop did not finish"
+    return t
+
+def mkreqs(n=4, out=40, base=0):
+    rng = np.random.default_rng(0)
+    return [Request(base + i, 0.0, 16, out, prompt=rng.integers(0, 128, 16))
+            for i in range(n)]
+"""
+
+
+@pytest.mark.slow
+def test_policy_rebalances_mid_serving_tokens_bit_identical():
+    """The acceptance criterion: on the real engine the policy replicates
+    >=1 hot expert AND demotes >=1 cold expert mid-serving, and every
+    generated token matches the dense (unbalanced, un-rebalanced) run bit
+    for bit."""
+    out = run_with_devices(REBAL_COMMON + """
+ref = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="dense")
+ref.boot(c4)
+ref_reqs = mkreqs()
+serve(ref, ref_reqs)
+ref_toks = {r.rid: ref.engine.generated[r.rid] for r in ref_reqs}
+
+# near-uniform router traffic still has experts above/below fair share;
+# tight bands make the policy act on it (hysteresis is a config knob)
+pol = RebalancePolicy(hot_factor=1.02, cold_factor=0.98, min_samples=3,
+                      cooldown_s=0.5, max_actions=8)
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    routing_sample_every=1, rebalance=pol)
+srv.boot(c4)
+reqs = mkreqs()
+serve(srv, reqs)
+got_toks = {r.rid: srv.engine.generated[r.rid] for r in reqs}
+for rid in ref_toks:
+    assert ref_toks[rid] == got_toks[rid], (rid, ref_toks[rid], got_toks[rid])
+
+summ = srv.rebalance_summary()
+assert summ is not None, "policy never acted"
+assert summ["replicated"] >= 1, summ
+assert summ["demoted"] >= 1, summ
+assert summ["replica_bytes"] > 0 and summ["d2h_bytes"] > 0, summ
+assert summ["host_tier_bytes"] == srv.hmm.host_tier_bytes() > 0
+t = srv.hmm.page_table
+assert t.replicas and t.host
+print("REBALANCE-TOKENS-OK", summ["replicated"], summ["demoted"])
+""")
+    assert "REBALANCE-TOKENS-OK" in out
+
+
+@pytest.mark.slow
+def test_abort_in_flight_then_cold_scale_streams_h2d():
+    """One subprocess, three acceptance checks: (1) aborting a rebalance
+    with transfers in flight restores the page table and conserves device
+    AND host pools; (2) a subsequent full demotion commits; (3) the 4->6
+    scale event then sources every expert migration from the host tier —
+    ZERO expert P2P, expert_h2d_bytes == moved pages — and (4) the routing
+    histogram resets at scale commit (satellite: stale-stats fix)."""
+    out = run_with_devices(REBAL_COMMON + """
+from repro.core.expert_pages import HOST
+
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    routing_sample_every=1)
+srv.boot(c4)
+pt = srv.hmm.page_table
+usage0 = {d: pt.pages_in_use(d) for d in list(c4.devices) + [HOST]}
+active0 = dict(pt.active)
+
+# (1) abort in flight
+task = srv.start_rebalance([("replicate", 0, 0, 1), ("demote", 1, 23)])
+assert srv.hmm._rebalance_ops is not None
+task.abort()
+assert {d: pt.pages_in_use(d) for d in usage0} == usage0
+assert pt.active == active0 and not pt.replicas and not pt.host
+assert srv.hmm._expert_host_pool == {}
+
+# serving still healthy after the abort
+reqs = mkreqs(2, out=10, base=100)
+serve(srv, reqs)
+
+# (2) demote EVERYTHING (batches of 8: bounded sessions like the policy's)
+keys = [(l, e) for l in range(MCFG.num_layers)
+        for e in range(MCFG.num_experts)]
+for i in range(0, len(keys), 8):
+    task = srv.start_rebalance([("demote", l, e)
+                                for l, e in keys[i:i+8]])
+    t = 0.0
+    while not task.done:
+        srv.tick(t); t += .1
+assert len(pt.host) == len(keys)
+assert srv.hmm.host_tier_bytes() == len(keys) * srv.hmm.expert_page_nbytes()
+
+# decode a bit so the routing histogram is non-empty before the scale
+reqs2 = mkreqs(2, out=10, base=200)
+serve(srv, reqs2)
+pre = srv.engine.routing_stats()
+assert pre is not None and pre["samples"] > 0
+
+# (3) cold 4->6 scale-up: every mover streams from the host tier
+task = srv.start_scale(c6)
+t, n = 100.0, 0
+while not task.done:
+    srv.tick(t); task.advance(t); t += .1; n += 1
+    assert n < 500
+migs = srv.hmm.last_migrations
+page = srv.hmm.expert_page_nbytes()
+assert migs and all(m.src.device == HOST for m in migs)
+st = task.stage_stats
+assert st.expert_p2p_bytes == 0, st.expert_p2p_bytes
+assert st.expert_h2d_bytes == len(migs) * page, \\
+    (st.expert_h2d_bytes, len(migs), page)
+# host copies survive the scale commit
+assert len(pt.host) == len(keys)
+
+# (4) routing stats were reset at switchover (no decode ran since commit:
+# the histogram must be empty, not carrying pre-scale counts)
+assert srv.engine.routing_stats() is None
+
+# tokens post-scale still match a dense 6-dev reference
+ref = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="dense")
+ref.boot(c6)
+rr = mkreqs(2, out=10)
+serve(ref, rr)
+gg = mkreqs(2, out=10, base=300)
+serve(srv, gg)
+for a, b in zip(rr, gg):
+    assert ref.engine.generated[a.rid] == srv.engine.generated[b.rid]
+print("REBALANCE-ABORT-COLD-SCALE-OK", len(migs), st.expert_h2d_bytes)
+""")
+    assert "REBALANCE-ABORT-COLD-SCALE-OK" in out
+
+
+@pytest.mark.slow
+def test_routing_stats_reset_on_4_to_6_scaleup():
+    """Satellite regression: scale-event commit must restart the routing
+    histogram — post-commit stats describe ONLY the new placement."""
+    out = run_with_devices(REBAL_COMMON + """
+srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                    prefill_buckets=(32,), seed=0, expert_mode="pooled",
+                    routing_sample_every=1)
+srv.boot(c4)
+reqs = mkreqs(2, out=20)
+serve(srv, reqs)
+pre = srv.engine.routing_stats()
+assert pre is not None and pre["samples"] >= 10
+
+# 4->6 scale-up while requests are in flight: the histogram captured at
+# commit must NOT carry the pre-scale counts forward
+task = None
+post_commit = "unset"
+reqs2 = mkreqs(2, out=30, base=100)
+for r in reqs2: srv.submit(r)
+t, n = 200.0, 0
+while any(r.finish_s is None for r in reqs2):
+    if n == 2 and task is None:
+        task = srv.start_scale(c6)
+    srv.tick(t)
+    if task is not None and not task.done:
+        task.advance(t)
+        if task.done:
+            post_commit = srv.engine.routing_stats()
+    t += .1; n += 1
+    assert n < 500
+assert task is not None and task.done
+assert post_commit != "unset"
+# the regression pin: at commit the histogram is EMPTY — the pre-scale
+# counts (>= 10 samples) did not survive the placement change
+assert post_commit is None, post_commit
+# sampling resumed under the new placement
+final = srv.engine.routing_stats()
+assert final is not None and final["samples"] >= 1
+print("ROUTING-RESET-OK", pre["samples"], final["samples"])
+""")
+    assert "ROUTING-RESET-OK" in out

@@ -106,6 +106,46 @@ def test_budget_order_coverage_and_progress(chunk, budget_chunks, specs,
         assert pos == total
 
 
+@given(chunk=st.sampled_from([1, 4, 16, 32]),
+       budget_chunks=st.integers(1, 4),
+       totals=st.lists(st.integers(1, 100), min_size=1, max_size=8),
+       paused_heads=st.integers(0, 8))
+def test_paused_head_jobs_are_invisible_to_fifo(chunk, budget_chunks,
+                                                totals, paused_heads):
+    """Paused-head pin (KV-migration freeze): when the first ``paused_heads``
+    jobs in admission order are paused, one plan() tick must (a) give no
+    budget to any paused job, (b) start spending at the first UNPAUSED job —
+    paused jobs are invisible to FIFO order, they don't block the queue or
+    reserve budget — (c) stay within budget, and (d) leave every paused
+    job's position untouched when the plan is applied."""
+    budget = chunk * budget_chunks
+    sched = TokenBudgetScheduler(chunk, budget)
+    jobs = [PrefillJob(slot=i, rid=i, pos=0, total=t)
+            for i, t in enumerate(totals)]
+    k = min(paused_heads, len(jobs))
+    for j in jobs[:k]:
+        j.paused = True
+    pos_before = {j.rid: j.pos for j in jobs}
+    plans = sched.plan(jobs)
+    paused_rids = {j.rid for j in jobs[:k]}
+    assert all(p.rid not in paused_rids for p in plans)
+    assert sum(p.take for p in plans) <= budget
+    unpaused = [j for j in jobs[k:] if j.remaining > 0]
+    if unpaused:
+        # the head of the *unpaused* queue is served first, from its pos
+        assert plans and plans[0].rid == unpaused[0].rid
+        assert plans[0].start == unpaused[0].pos
+        # FIFO prefix over the unpaused queue only
+        planned = list(dict.fromkeys(p.rid for p in plans))
+        assert planned == [j.rid for j in unpaused[:len(planned)]]
+    else:
+        assert plans == []
+    for p in plans:                     # apply, as the engine tick would
+        next(j for j in jobs if j.rid == p.rid).pos = p.start + p.take
+    for j in jobs[:k]:
+        assert j.pos == pos_before[j.rid], "paused job advanced"
+
+
 @given(num_shared=st.integers(0, 20), bs=st.sampled_from([1, 4, 16, 256]),
        prompt_len=st.integers(1, 4096))
 def test_prefix_skip_always_leaves_work(num_shared, bs, prompt_len):
