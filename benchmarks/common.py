@@ -25,10 +25,13 @@ STRATEGY_LABELS = {
 }
 
 
-def tensors_for(name: str, tp: int, kv_batch: int = 8, kv_len: int = 4096):
+def tensors_for(name: str, tp: int, kv_batch: int = 8, kv_len: int = 4096,
+                kv_dtype: Optional[str] = None,
+                expert_dtype: Optional[str] = None):
     mcfg = get_config(name)
-    kvb = kv_cache_bytes(mcfg, kv_batch, kv_len)
-    return mcfg, model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
+    kvb = kv_cache_bytes(mcfg, kv_batch, kv_len, kv_dtype=kv_dtype)
+    return mcfg, model_tensors(mcfg, tp, kv_bytes_per_replica=kvb,
+                               expert_dtype=expert_dtype)
 
 
 def cfg_of(n: int, tp: int, base: int = 0) -> ElasticConfig:
@@ -37,10 +40,13 @@ def cfg_of(n: int, tp: int, base: int = 0) -> ElasticConfig:
 
 
 def scale_cost(name: str, n_old: int, n_new: int, strategy: str,
-               preinit: bool = True, paged: bool = True, **flags):
+               preinit: bool = True, paged: bool = True,
+               kv_dtype: Optional[str] = None,
+               expert_dtype: Optional[str] = None, **flags):
     """Plan + cost for one transition under one strategy."""
     tp = TP_OF.get(name, 2)
-    mcfg, tensors = tensors_for(name, tp)
+    mcfg, tensors = tensors_for(name, tp, kv_dtype=kv_dtype,
+                                expert_dtype=expert_dtype)
     old = cfg_of(n_old, tp)
     if strategy in ("extravagant", "horizontal"):
         new = cfg_of(n_new, tp, base=n_old)

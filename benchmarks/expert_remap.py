@@ -18,7 +18,10 @@ with the calibrated cost model.  Columns:
 * ``moved`` — migrated expert pages (pooled) vs expert P2P steps (dense),
 * ``dense_s`` / ``pooled_s`` — projected scale time (all tensors, cost
   model bottleneck: max P2P bytes into one device),
-* ``saved%`` — expert P2P byte reduction.
+* ``saved%`` — expert P2P byte reduction,
+* ``int8_MB`` — pooled remap bytes with int8 expert pages
+  (``expert_dtype="int8"``, DESIGN.md §11): the same page moves priced at
+  one byte per element plus per-page f32 scales, i.e. ~half the bf16 bytes.
 """
 from benchmarks.common import PAPER_MODELS, Table, scale_cost
 from repro.core.scaling_plan import Op
@@ -34,18 +37,26 @@ def _expert_p2p(plan):
 
 def run():
     t = Table("expert_remap_p2p",
-              ["model", "transition", "dense_MB", "pooled_MB", "moved",
-               "dense_s", "pooled_s", "saved%"])
+              ["model", "transition", "dense_MB", "pooled_MB", "int8_MB",
+               "moved", "dense_s", "pooled_s", "saved%"])
     for name in PAPER_MODELS:
         for n_old, n_new in TRANSITIONS:
             dense_plan, dense_cost = scale_cost(name, n_old, n_new,
                                                 "elastic", paged=False)
             pooled_plan, pooled_cost = scale_cost(name, n_old, n_new,
                                                   "elastic", paged=True)
+            quant_plan, _ = scale_cost(name, n_old, n_new, "elastic",
+                                       paged=True, expert_dtype="int8")
             db, dn = _expert_p2p(dense_plan)
             pb, pn = _expert_p2p(pooled_plan)
+            qb, qn = _expert_p2p(quant_plan)
             assert pb <= db, (name, n_old, n_new, pb, db)
-            t.add(name, f"{n_old}->{n_new}", db / 1e6, pb / 1e6,
+            assert qn == pn, (name, n_old, n_new, qn, pn)
+            # Same pages move; int8 pages are ~half the bf16 bytes
+            # (one byte/element + f32 scale per bank).
+            assert qb <= 0.55 * pb if pb else qb == 0, \
+                (name, n_old, n_new, qb, pb)
+            t.add(name, f"{n_old}->{n_new}", db / 1e6, pb / 1e6, qb / 1e6,
                   f"{pn}/{dn}", dense_cost.scale_time_s,
                   pooled_cost.scale_time_s,
                   100.0 * (1 - pb / db) if db else 0.0)

@@ -62,8 +62,8 @@ def run():
                 ["model", "passes", "replicated", "demoted",
                  "max_load_unbal", "max_load_rebal", "improve%"])
     sca = Table("expert_skew_scale",
-                ["model", "transition", "warm_p2p_MB", "cold_p2p_MB",
-                 "host_MB", "host_s", "tier_MB"])
+                ["model", "transition", "warm_p2p_MB", "int8_p2p_MB",
+                 "cold_p2p_MB", "host_MB", "host_s", "tier_MB"])
     for name in MODELS:
         mcfg = get_config(name)
         tp = TP_OF.get(name, 2)
@@ -104,12 +104,20 @@ def run():
         assert cold_table.host, "rebalanced arm must have a cold tier"
         cold_plan = plan_elastic_paged(tensors, old, new, cold_table,
                                        first_k_dense=mcfg.first_k_dense)
+        # quantized arm: the same moves priced at int8 expert pages
+        # (expert_dtype="int8", DESIGN.md §11) — ~half the warm-arm bytes
+        quant_plan = plan_elastic_paged(
+            model_tensors(mcfg, tp, expert_dtype="int8"), old, new,
+            unbal.expert_pages.clone(), first_k_dense=mcfg.first_k_dense)
         warm_p2p = _expert_bytes(warm_plan, Op.P2P)
+        quant_p2p = _expert_bytes(quant_plan, Op.P2P)
         cold_p2p = _expert_bytes(cold_plan, Op.P2P)
         cold_host = _expert_bytes(cold_plan, Op.HOST)
         assert cold_p2p + cold_host > 0 and cold_p2p <= warm_p2p + cold_host
-        sca.add(name, f"{n_old}->{n_new}", warm_p2p / 1e6, cold_p2p / 1e6,
-                cold_host / 1e6, plan_cost(cold_plan).breakdown["host"],
+        assert quant_p2p <= 0.55 * warm_p2p if warm_p2p else quant_p2p == 0
+        sca.add(name, f"{n_old}->{n_new}", warm_p2p / 1e6, quant_p2p / 1e6,
+                cold_p2p / 1e6, cold_host / 1e6,
+                plan_cost(cold_plan).breakdown["host"],
                 summ["host_tier_bytes"] / 1e6)
     return [bal, sca]
 

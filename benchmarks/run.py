@@ -47,6 +47,9 @@ def main() -> None:
         # chunked-prefill ITL flatness A/B (same module, own entry so CI
         # can smoke it via --only without the slower admission sweep)
         ("chunked_itl", kv_pressure),
+        # int8 KV pool vs bf16 under the same burst (same module, own
+        # entry: pool capacity ~2x at halved block bytes, DESIGN.md §11)
+        ("quant_kv", kv_pressure),
         ("expert_remap", expert_remap),
         # skew-aware rebalancing A/B: Zipf routing, replicate-hot /
         # demote-cold mid-serving, scale-event pricing with the cold tier
@@ -75,6 +78,8 @@ def main() -> None:
                 outs = [mod.run_measured()]
             elif name == "chunked_itl":
                 outs = [mod.run_itl()]
+            elif name == "quant_kv":
+                outs = [mod.run_quant()]
             else:
                 out = mod.run()
                 outs = out if isinstance(out, list) else [out]

@@ -16,6 +16,31 @@ from typing import Dict, Optional
 
 from repro.core.scaling_plan import Op, ScalingPlan
 
+#: element sizes for every dtype name the repo's knobs accept — THE single
+#: source of byte-per-element truth (ISSUE 9).  topology.model_tensors /
+#: kv_cache_bytes, serving.kv_blocks.block_bytes, the HMM's page accounting
+#: and the benchmarks all resolve element sizes here instead of scattering
+#: hard-coded ``* 2`` / ``* 4`` byte math.
+DTYPE_BYTES = {
+    "int8": 1, "uint8": 1, "s8": 1, "u8": 1, "float8": 1,
+    "bfloat16": 2, "float16": 2, "bf16": 2, "f16": 2,
+    "float32": 4, "int32": 4, "f32": 4, "s32": 4,
+    "float64": 8, "int64": 8, "f64": 8, "s64": 8,
+}
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element of ``dtype`` (a name string or anything numpy's
+    dtype constructor accepts).  ``None`` means float32 — the repo's default
+    storage dtype."""
+    if dtype is None:
+        return 4
+    name = getattr(dtype, "name", dtype)
+    if isinstance(name, str) and name in DTYPE_BYTES:
+        return DTYPE_BYTES[name]
+    import numpy as np
+    return int(np.dtype(dtype).itemsize)
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:

@@ -460,9 +460,18 @@ class ElasticServer:
                  routing_sample_every: int = 0,
                  rebalance: Optional[RebalancePolicy] = None,
                  expert_slot_slack: Optional[int] = None,
-                 expert_host_pages: Optional[int] = None):
+                 expert_host_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 expert_dtype: Optional[str] = None):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
+        # quantized storage (ISSUE 9): 'int8' stores the paged KV pool /
+        # pooled expert pages as int8 with f32 scale sidecars (HMM owns the
+        # layout; kernels fuse the dequant).  The driver's cost projections
+        # adopt these through the ``kv_dtype``/``expert_dtype`` attributes —
+        # halved KV-migration and expert P2P/H2D bytes show up in plan_cost.
+        self.kv_dtype = kv_dtype
+        self.expert_dtype = expert_dtype
         # continuous batching: prefill_chunk > 0 splits prompt processing
         # into fixed-size token chunks interleaved with decode ticks under
         # a per-tick budget (serving/scheduler.py); 0 keeps the monolithic
@@ -501,7 +510,8 @@ class ElasticServer:
                        expert_pool_pages=expert_pool_pages,
                        staging=staging, transfer_workers=transfer_workers,
                        expert_slot_slack=expert_slot_slack,
-                       expert_host_pages=expert_host_pages)
+                       expert_host_pages=expert_host_pages,
+                       kv_dtype=kv_dtype, expert_dtype=expert_dtype)
         # routing telemetry: every Nth decode tick runs the counts-emitting
         # executable and accumulates per-(layer, expert) histograms
         # (models/moe.py; exposed via routing_stats()).  0 disables — no

@@ -229,6 +229,8 @@ class HMM:
                  expert_pool_pages: Optional[int] = None,
                  expert_slot_slack: int = 0,
                  expert_host_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 expert_dtype: Optional[str] = None,
                  staging: str = "serial", transfer_workers: int = 4):
         self.mcfg = mcfg
         self.tp = tp
@@ -254,6 +256,23 @@ class HMM:
             assert mcfg.is_moe, \
                 f"{mcfg.name}: expert_mode='pooled' requires a MoE model"
         self.expert_mode = expert_mode
+        # Quantized storage knobs (ISSUE 9).  ``kv_dtype='int8'`` stores the
+        # paged KV pool as int8 entries plus per-token-row f32 scale pools
+        # that ride the same block axis (remap/migration correctness by
+        # construction); ``expert_dtype='int8'`` stores the pooled expert
+        # banks as int8 pages plus per-page f32 scale banks addressed by the
+        # same page table.  None keeps the model dtype (f32 parity oracle).
+        assert kv_dtype in (None, "int8"), kv_dtype
+        assert expert_dtype in (None, "int8"), expert_dtype
+        if kv_dtype is not None:
+            assert kv_mode == "paged", \
+                "kv_dtype='int8' requires kv_mode='paged' (block-wise scales)"
+        if expert_dtype is not None:
+            assert expert_mode == "pooled", \
+                "expert_dtype='int8' requires expert_mode='pooled' " \
+                "(per-page scales live beside the pool banks)"
+        self.kv_dtype = kv_dtype
+        self.expert_dtype = expert_dtype
         # per-device pool capacity in pages ((layer, expert) granularity,
         # one free list per device); None resolves at boot to twice the boot
         # config's per-device expert load — headroom for staging (active +
@@ -337,10 +356,11 @@ class HMM:
                 if shape[stacked] % nep == 0:
                     s[stacked] = ("dp", "tp")
                 return P(*s)
-            # pooled expert store: page pools carved one slice per device;
-            # per-layer kernel tables one row per device; the other index
-            # arrays (edest/eslot/gtable) replicated like the router
-            if re.search(r"moe_pool/w[igo]$", path):
+            # pooled expert store: page pools carved one slice per device
+            # (quantized scale banks shard the same page axis); per-layer
+            # kernel tables one row per device; the other index arrays
+            # (edest/eslot/gtable) replicated like the router
+            if re.search(r"moe_pool/w[igo](_scale)?$", path):
                 if shape[0] % nep == 0:
                     s[0] = ("dp", "tp")
                 return P(*s)
@@ -386,7 +406,7 @@ class HMM:
         if self.kv_mode == "paged":
             return init_paged_cache(
                 self.mcfg, cfg.dp * self.kv_blocks_per_replica,
-                self.kv_block_size)
+                self.kv_block_size, kv_dtype=self.kv_dtype)
         return init_cache(self.mcfg, cfg.dp * self.batch_per_replica,
                           self.max_len)
 
@@ -401,9 +421,12 @@ class HMM:
 
     def expert_page_nbytes(self) -> int:
         """Bytes of ONE (layer, expert) page across all three banks — the
-        unit of vpage migration accounting."""
-        bpe = jnp.dtype(self.mcfg.dtype).itemsize
-        return 3 * self.mcfg.d_model * self.mcfg.moe_d_ff * bpe
+        unit of vpage migration accounting.  Quantized pools count the int8
+        entries plus the three per-page f32 scales that travel with them."""
+        from repro.core.costmodel import dtype_bytes
+        bpe = dtype_bytes(self.expert_dtype or self.mcfg.dtype)
+        scale = 3 * 4 if self.expert_dtype is not None else 0
+        return 3 * self.mcfg.d_model * self.mcfg.moe_d_ff * bpe + scale
 
     def _pooled_index_arrays(self, table, cfg: ElasticConfig,
                              replicas=None, load=None):
@@ -428,12 +451,25 @@ class HMM:
         moe = params["blocks"]["moe"]
         banks = {k: np.asarray(moe.pop(k)) for k in ("wi", "wg", "wo")}
         ppd = self.expert_pool_pages
+        scales: Dict[str, np.ndarray] = {}
+        if self.expert_dtype is not None:
+            # symmetric per-page int8: one f32 scale per (layer, expert)
+            # page, stored in sidecar banks addressed by the same table
+            from repro.kernels.quant import quantize_rows
+            for k in list(banks):
+                q, s = quantize_rows(jnp.asarray(banks[k]), (-2, -1))
+                banks[k] = np.asarray(q)
+                scales[k] = np.asarray(s, np.float32)
         pools = {k: np.zeros((cfg.ndev * ppd,) + b.shape[2:], b.dtype)
                  for k, b in banks.items()}
+        for k in scales:
+            pools[k + "_scale"] = np.zeros((cfg.ndev * ppd,), np.float32)
         for (l, e), ref in self.page_table.active.items():
             row = cfg.slot(ref.device) * ppd + ref.page
             for k in banks:
                 pools[k][row] = banks[k][l, e]
+            for k in scales:
+                pools[k + "_scale"][row] = scales[k][l, e]
         moe.update(self._pooled_index_arrays(self.page_table.active, cfg))
         params["moe_pool"] = pools
         return params
@@ -465,9 +501,15 @@ class HMM:
         moe["tables"] = jax.ShapeDtypeStruct((L, cfg.ndev, elm), i32)
         for k in ("edest", "eslot", "gtable"):
             moe[k] = jax.ShapeDtypeStruct((L, E), i32)
+        if self.expert_dtype is not None:
+            dt = jnp.dtype(self.expert_dtype)
         dense["moe_pool"] = {
             k: jax.ShapeDtypeStruct((cfg.ndev * ppd,) + shapes[k][2:], dt)
             for k in shapes}
+        if self.expert_dtype is not None:
+            for k in shapes:
+                dense["moe_pool"][k + "_scale"] = jax.ShapeDtypeStruct(
+                    (cfg.ndev * ppd,), jnp.dtype(jnp.float32))
         return dense
 
     # ----------------------------------------------------------------- boot
@@ -581,7 +623,7 @@ class HMM:
                 stacked = 1 if "blocks/" in path else 0
                 expert_dim = stacked  # regroup experts at page granularity
                 kind = "expert_bank"
-            elif re.search(r"moe_pool/(w[igo])$", path):
+            elif re.search(r"moe_pool/(w[igo](?:_scale)?)$", path):
                 kind = "pool:" + path.rsplit("/", 1)[1]
             elif re.search(r"moe/(tables|edest|eslot|gtable)$", path):
                 kind = "index:" + path.rsplit("/", 1)[1]

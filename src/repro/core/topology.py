@@ -83,13 +83,23 @@ def expert_owner(expert: int, num_experts: int, cfg: ElasticConfig) -> int:
 
 
 def model_tensors(mcfg: ModelConfig, tp: int,
-                  kv_bytes_per_replica: int = 0) -> List[TensorDesc]:
+                  kv_bytes_per_replica: int = 0,
+                  expert_dtype: Optional[str] = None) -> List[TensorDesc]:
     """Flatten a ModelConfig into the logical tensors the HMM plans over.
 
     Sizes are *per TP shard* for 'tp' tensors.  Expert pages are per
     (layer, expert) — the granularity of vpage-remap migration.
+
+    ``expert_dtype``: storage dtype of the expert pages only (the pooled
+    store's ``expert_dtype="int8"`` knob); dense/attention tensors keep the
+    model dtype.  Quantized pages carry one f32 scale per bank, so the page
+    size is ``ff_mult * (D * moe_d_ff * 1 + 4)`` — the planner and every
+    projection built on it see the halved expert P2P/H2D bytes.
     """
-    bpe = 2 if mcfg.dtype == "bfloat16" else 4
+    from repro.core.costmodel import dtype_bytes
+    bpe = dtype_bytes(mcfg.dtype)
+    ebpe = dtype_bytes(expert_dtype or mcfg.dtype)
+    escale = 4 if (expert_dtype or mcfg.dtype) != mcfg.dtype else 0
     D = mcfg.d_model
     out: List[TensorDesc] = []
     out.append(TensorDesc("embed", "tp",
@@ -112,7 +122,7 @@ def model_tensors(mcfg: ModelConfig, tp: int,
                                   layer=l))
         ff_mult = 3 if mcfg.mlp_gated else 2
         if mcfg.is_moe and l >= mcfg.first_k_dense:
-            page = ff_mult * D * mcfg.moe_d_ff * bpe // tp
+            page = ff_mult * (D * mcfg.moe_d_ff * ebpe + escale) // tp
             for e in range(mcfg.num_experts):
                 out.append(TensorDesc(f"layer{l}/expert{e}", "expert", page,
                                       layer=l, expert=e))
@@ -147,9 +157,18 @@ def model_tensors(mcfg: ModelConfig, tp: int,
     return out
 
 
-def kv_cache_bytes(mcfg: ModelConfig, batch: int, max_len: int) -> int:
-    """Total KV/state bytes of ONE DP replica (all layers, before TP split)."""
-    bpe = 2 if mcfg.dtype == "bfloat16" else 4
+def kv_cache_bytes(mcfg: ModelConfig, batch: int, max_len: int,
+                   kv_dtype: Optional[str] = None) -> int:
+    """Total KV/state bytes of ONE DP replica (all layers, before TP split).
+
+    ``kv_dtype``: storage dtype of the KV entries (the paged pool's
+    ``kv_dtype="int8"`` knob); int8 adds one f32 scale per (k, v) token row
+    per layer — 8 bytes/token — so projections count exactly what the
+    quantized block pool allocates."""
+    from repro.core.costmodel import dtype_bytes
+    bpe = dtype_bytes(mcfg.dtype)
+    kv_bpe = dtype_bytes(kv_dtype or mcfg.dtype)
+    kv_scale = 2 * 4 if (kv_dtype or mcfg.dtype) != mcfg.dtype else 0
     L = mcfg.num_layers
     if mcfg.arch_type in ("ssm", "hybrid"):
         di, N = mcfg.d_inner, mcfg.ssm_state
@@ -162,6 +181,7 @@ def kv_cache_bytes(mcfg: ModelConfig, batch: int, max_len: int) -> int:
         return n
     if mcfg.use_mla:
         return L * batch * max_len * (mcfg.kv_lora_rank
-                                      + mcfg.qk_rope_dim) * bpe
-    return L * batch * max_len * 2 * mcfg.num_kv_heads \
-        * mcfg.resolved_head_dim * bpe
+                                      + mcfg.qk_rope_dim) * kv_bpe
+    return L * batch * max_len * (2 * mcfg.num_kv_heads
+                                  * mcfg.resolved_head_dim * kv_bpe
+                                  + kv_scale)

@@ -23,6 +23,7 @@ VMEM.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,20 @@ def _kernel(table_ref, x_ref, pool_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _quant_kernel(table_ref, x_ref, pool_ref, scale_ref, o_ref):
+    # int8 page with one f32 scale per (page, bank): the per-page dequant
+    # commutes out of the contraction — x @ (w_i8 * s) = (x @ w_i8) * s —
+    # so the MXU streams int8 weights at half the HBM bytes and one scalar
+    # multiply lands on the output tile.  scale tile selected by the SAME
+    # prefetched page table as the weight tile.
+    x = x_ref[0].astype(jnp.float32)
+    w = pool_ref[0].astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0] = (acc * scale_ref[0, 0]).astype(o_ref.dtype)
+
+
 def _clamp_block_f(dim: int, block: int) -> int:
     """The 'clamp' half of pad-or-clamp for the lane (minormost) dim, which
     the kernel cannot cheaply pad: largest multiple of 128 <= ``block`` that
@@ -47,7 +62,20 @@ def _clamp_block_f(dim: int, block: int) -> int:
     b = min(block, dim) - min(block, dim) % 128
     while b >= 128 and dim % b:
         b -= 128
-    return b if b >= 128 and dim % b == 0 else dim
+    if b >= 128 and dim % b == 0:
+        return b
+    if block < dim:
+        # the caller asked for a small lane tile but none divides dim: the
+        # grid silently degrades to one full-width tile per step, multiplying
+        # the VMEM working set by dim/block — surface the perf cliff instead
+        # of hiding it (trace-time: block sizes are static)
+        warnings.warn(
+            f"paged_gmm: no 128-aligned block <= {block} divides F={dim}; "
+            f"falling back to a full-width lane tile (VMEM working set "
+            f"~{dim / max(block, 1):.1f}x the requested block). Pad F to a "
+            f"multiple of 128 or pick block_f from its divisors.",
+            stacklevel=3)
+    return dim
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f",
@@ -113,3 +141,64 @@ def paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x,
     h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
     return paged_gmm(table_o, pool_o, h, block_c=block_c, block_f=block_f,
                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "interpret"))
+def quant_paged_gmm(table: jax.Array, pool: jax.Array, scales: jax.Array,
+                    x: jax.Array, *, block_c: int = 128, block_f: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Int8 variant of ``paged_gmm``: ``pool`` is int8 ``[n_pages, D, F]``
+    and ``scales`` the per-page f32 dequant scales ``[n_pages]`` (one scalar
+    per page, ``kernels.quant.quantize_rows`` over ``(-2, -1)``).  The scale
+    BlockSpec dereferences the same prefetched page table as the weight
+    pages, so remapped pages always compute with their own scale.  Output in
+    ``x.dtype``; oracle: ``ref.quant_paged_gmm_ref``."""
+    E_local, C, D = x.shape
+    n_pages, D2, F = pool.shape
+    assert D == D2, (D, D2)
+    bc = min(block_c, C)
+    if C % bc:
+        C_pad = -(-C // bc) * bc
+        x = jnp.pad(x, ((0, 0), (0, C_pad - C), (0, 0)))
+    bf = _clamp_block_f(F, block_f)
+    C_run = x.shape[1]
+    scales2 = scales.astype(jnp.float32).reshape(n_pages, 1)
+
+    grid = (E_local, C_run // bc, F // bf)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bc, D), lambda e, i, j, tbl: (e, i, 0)),
+                pl.BlockSpec((1, D, bf),
+                             lambda e, i, j, tbl: (tbl[e], 0, j)),
+                pl.BlockSpec((1, 1), lambda e, i, j, tbl: (tbl[e], 0),
+                             memory_space=pltpu.SMEM),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bf),
+                                   lambda e, i, j, tbl: (e, i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E_local, C_run, F), x.dtype),
+        interpret=interpret,
+    )(table, x, pool, scales2)
+    return out[:, :C] if C_run != C else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "interpret"))
+def quant_paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o,
+                           scale_i, scale_g, scale_o, x,
+                           *, block_c: int = 128, block_f: int = 128,
+                           interpret: bool = False):
+    """SwiGLU expert FFN over int8 paged weights with per-page f32 scales
+    (one per bank — they migrate with their bank during EP remap)."""
+    h = quant_paged_gmm(table_i, pool_i, scale_i, x, block_c=block_c,
+                        block_f=block_f, interpret=interpret)
+    g = quant_paged_gmm(table_g, pool_g, scale_g, x, block_c=block_c,
+                        block_f=block_f, interpret=interpret)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return quant_paged_gmm(table_o, pool_o, scale_o, h, block_c=block_c,
+                           block_f=block_f, interpret=interpret)

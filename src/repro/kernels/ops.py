@@ -20,9 +20,37 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
     jax.default_backend() == "cpu"
 
 
+def _tuned(kernel, kw, keys):
+    """Fill block-size kwargs the caller left unset from the autotune
+    best-config table (tools/autotune_kernels.py; no-op without a table)."""
+    if all(k in kw for k in keys):
+        return kw
+    from repro.analysis.autotune import best_config
+    best = best_config(kernel)
+    for k in keys:
+        if k in best:
+            kw.setdefault(k, best[k])
+    return kw
+
+
 def paged_gmm(table, pool, x, **kw):
     kw.setdefault("interpret", _INTERPRET)
+    _tuned("paged_gmm", kw, ("block_c", "block_f"))
     return _gmm(table, pool, x, **kw)
+
+
+def quant_paged_gmm(table, pool, scales, x, **kw):
+    """Int8 paged GMM (per-page f32 scales).  Same impl switch as
+    ``paged_expert_ffn``: kernel on accelerators, dequant-then-gather
+    reference on CPU (``REPRO_POOLED_IMPL`` / ``impl=`` override)."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_POOLED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import quant_paged_gmm_ref
+        return quant_paged_gmm_ref(table, pool, scales, x)
+    from repro.kernels.moe_gmm import quant_paged_gmm as _qgmm
+    kw.setdefault("interpret", _INTERPRET)
+    _tuned("paged_gmm", kw, ("block_c", "block_f"))
+    return _qgmm(table, pool, scales, x, **kw)
 
 
 def paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x,
@@ -41,7 +69,25 @@ def paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x,
         return paged_expert_ffn_ref(table_i, table_g, table_o,
                                     pool_i, pool_g, pool_o, x)
     kw.setdefault("interpret", _INTERPRET)
+    _tuned("paged_expert_ffn", kw, ("block_c", "block_f"))
     return _ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o, x, **kw)
+
+
+def quant_paged_expert_ffn(table_i, table_g, table_o, pool_i, pool_g, pool_o,
+                           scale_i, scale_g, scale_o, x, **kw):
+    """Int8 paged SwiGLU FFN (per-page, per-bank f32 scales).  Same impl
+    switch / autotune consultation as ``paged_expert_ffn``."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_POOLED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import quant_paged_expert_ffn_ref
+        return quant_paged_expert_ffn_ref(table_i, table_g, table_o,
+                                          pool_i, pool_g, pool_o,
+                                          scale_i, scale_g, scale_o, x)
+    from repro.kernels.moe_gmm import quant_paged_expert_ffn as _qffn
+    kw.setdefault("interpret", _INTERPRET)
+    _tuned("paged_expert_ffn", kw, ("block_c", "block_f"))
+    return _qffn(table_i, table_g, table_o, pool_i, pool_g, pool_o,
+                 scale_i, scale_g, scale_o, x, **kw)
 
 
 def flash_attention(q, k, v, **kw):
@@ -51,6 +97,7 @@ def flash_attention(q, k, v, **kw):
 
 def paged_decode_attention(q, k_cache, v_cache, lengths, **kw):
     kw.setdefault("interpret", _INTERPRET)
+    _tuned("paged_decode_attention", kw, ("block_k",))
     return _paged(q, k_cache, v_cache, lengths, **kw)
 
 
@@ -75,6 +122,22 @@ def block_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
     return _block_paged(q, k_pool, v_pool, block_tables, lengths, **kw)
 
 
+def quant_block_paged_decode_attention(q, k_pool, k_scale, v_pool, v_scale,
+                                       block_tables, lengths, **kw):
+    """Int8 block-table paged decode (per-token f32 scale pools riding the
+    block table).  Same impl switch as ``block_paged_decode_attention``."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_PAGED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import quant_block_paged_decode_attention_ref
+        return quant_block_paged_decode_attention_ref(
+            q, k_pool, k_scale, v_pool, v_scale, block_tables, lengths)
+    from repro.kernels.paged_attention import \
+        quant_block_paged_decode_attention as _qblock
+    kw.setdefault("interpret", _INTERPRET)
+    return _qblock(q, k_pool, k_scale, v_pool, v_scale, block_tables,
+                   lengths, **kw)
+
+
 def mixed_block_paged_attention(q, k_pool, v_pool, block_tables, ctx_lens,
                                 q_lens, **kw):
     """Mixed chunked-prefill / decode attention over the block pool (the
@@ -94,6 +157,23 @@ def mixed_block_paged_attention(q, k_pool, v_pool, block_tables, ctx_lens,
         mixed_block_paged_attention as _mixed
     kw.setdefault("interpret", _INTERPRET)
     return _mixed(q, k_pool, v_pool, block_tables, ctx_lens, q_lens, **kw)
+
+
+def quant_mixed_block_paged_attention(q, k_pool, k_scale, v_pool, v_scale,
+                                      block_tables, ctx_lens, q_lens, **kw):
+    """Int8 mixed chunked-prefill / decode attention.  Same impl switch as
+    ``mixed_block_paged_attention``."""
+    impl = kw.pop("impl", None) or os.environ.get("REPRO_PAGED_IMPL", "auto")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() == "cpu"):
+        from repro.kernels.ref import quant_mixed_block_paged_attention_ref
+        return quant_mixed_block_paged_attention_ref(
+            q, k_pool, k_scale, v_pool, v_scale, block_tables, ctx_lens,
+            q_lens)
+    from repro.kernels.paged_attention import \
+        quant_mixed_block_paged_attention as _qmixed
+    kw.setdefault("interpret", _INTERPRET)
+    return _qmixed(q, k_pool, k_scale, v_pool, v_scale, block_tables,
+                   ctx_lens, q_lens, **kw)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, **kw):

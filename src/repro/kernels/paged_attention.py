@@ -163,6 +163,112 @@ def block_paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     return out.reshape(B, H, hd)
 
 
+def _quant_block_kernel(lengths_ref, bt_ref, q_ref, k_ref, ks_ref, v_ref,
+                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
+                        block_k, n_k):
+    # int8 pools + [NB, bs] f32 scale pools: the scale tiles ride the SAME
+    # block-table dereference as the entry tiles (scalar-prefetch path), so
+    # a remapped/migrated block always arrives with its own scales.
+    del bt_ref
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+
+    @pl.when(ki * block_k < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, hd] int8
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sk = ks_ref[0, :]                                    # [bs] f32
+        sv = vs_ref[0, :]
+        # per-token k-dequant commutes out of the q.k^T contraction:
+        # column-scale the scores instead of materializing a dequant tile
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+            * sk[None, :] * scale
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        # v-dequant folds into the probability rows the same way
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p * sv[None, :], v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_block_paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                                       k_scale: jax.Array,
+                                       v_pool: jax.Array,
+                                       v_scale: jax.Array,
+                                       block_tables: jax.Array,
+                                       lengths: jax.Array, *,
+                                       interpret: bool = False) -> jax.Array:
+    """Int8 variant of ``block_paged_decode_attention``: k/v_pool are int8
+    ``[NB, bs, KVH, hd]`` and k/v_scale the per-token f32 scale pools
+    ``[NB, bs]`` (``kernels.quant.quantize_rows`` over ``(KVH, hd)``).
+    The scale BlockSpecs dereference the same prefetched block table as the
+    entry pools, so dequant is fused into the softmax at ~half the HBM
+    traffic of the f32 path.  Oracle:
+    ``ref.quant_block_paged_decode_attention_ref``."""
+    B, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_block_kernel, scale=scale, block_k=bs,
+                          n_k=MB),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KVH, MB),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, ki, L, BT: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs),
+                             lambda b, h, ki, L, BT: (BT[b, ki], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, ki, L, BT: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables.astype(jnp.int32), qg,
+      k_pool, k_scale.astype(jnp.float32),
+      v_pool, v_scale.astype(jnp.float32))
+    return out.reshape(B, H, hd)
+
+
 def _mixed_kernel(ctx_ref, qlen_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
                   m_ref, l_ref, acc_ref, *, scale, block_k, n_k, G):
     # block table is consumed by the BlockSpec index maps
@@ -266,4 +372,110 @@ def mixed_block_paged_attention(q: jax.Array, k_pool: jax.Array,
         interpret=interpret,
     )(ctx_lens.astype(jnp.int32), q_lens.astype(jnp.int32), bt,
       qg, k_pool, v_pool)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _quant_mixed_kernel(ctx_ref, qlen_ref, bt_ref, q_ref, k_ref, ks_ref,
+                        v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale, block_k, n_k, G):
+    del bt_ref
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    q_len = qlen_ref[b]
+
+    @pl.when(ki * block_k < ctx)
+    def _step():
+        q3 = q_ref[0, 0].astype(jnp.float32)                 # [Sq, G, hd]
+        sq = q3.shape[0]
+        q2 = q3.reshape(sq * G, q3.shape[2])                 # [Sq*G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, hd] int8
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sk = ks_ref[0, :]                                    # [bs] f32
+        sv = vs_ref[0, :]
+        # same commuting dequant as _quant_block_kernel: column-scale scores
+        # by sk, row-scale probabilities by sv
+        s = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+            * sk[None, :] * scale
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        q_abs = ctx - q_len + qi
+        s = jnp.where((pos < ctx) & (pos <= q_abs), s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p * sv[None, :], v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = o.reshape(o_ref.shape[2], G,
+                                o.shape[-1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_mixed_block_paged_attention(q: jax.Array, k_pool: jax.Array,
+                                      k_scale: jax.Array, v_pool: jax.Array,
+                                      v_scale: jax.Array,
+                                      block_tables: jax.Array,
+                                      ctx_lens: jax.Array,
+                                      q_lens: jax.Array, *,
+                                      interpret: bool = False) -> jax.Array:
+    """Int8 variant of ``mixed_block_paged_attention``: same masks and mixed
+    prefill/decode semantics, int8 k/v pools with [NB, bs] f32 scale pools
+    riding the prefetched block table.  Oracle:
+    ``ref.quant_mixed_block_paged_attention_ref``."""
+    B, Sq, H, hd = q.shape
+    NB, bs, KVH = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    bt = jnp.minimum(block_tables.astype(jnp.int32), NB - 1)
+    qg = q.reshape(B, Sq, KVH, G, hd).transpose(0, 2, 1, 3, 4)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_mixed_kernel, scale=scale, block_k=bs,
+                          n_k=MB, G=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, KVH, MB),
+            in_specs=[
+                pl.BlockSpec((1, 1, Sq, G, hd),
+                             lambda b, h, ki, C, Q, BT: (b, h, 0, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0, h, 0)),
+                pl.BlockSpec((1, bs),
+                             lambda b, h, ki, C, Q, BT: (BT[b, ki], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Sq, G, hd),
+                                   lambda b, h, ki, C, Q, BT:
+                                   (b, h, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Sq * G,), jnp.float32),
+                pltpu.VMEM((Sq * G,), jnp.float32),
+                pltpu.VMEM((Sq * G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, Sq, G, hd), q.dtype),
+        interpret=interpret,
+    )(ctx_lens.astype(jnp.int32), q_lens.astype(jnp.int32), bt,
+      qg, k_pool, k_scale.astype(jnp.float32),
+      v_pool, v_scale.astype(jnp.float32))
     return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, hd)

@@ -1,0 +1,47 @@
+"""Int8 quantization helpers shared by the quantized KV / expert-page paths.
+
+Symmetric per-row int8 (DESIGN.md §11): ``scale = max|x| / 127`` over the
+row, ``q = clip(round(x / scale))``.  The scale is a *sidecar* array that
+travels with its rows through every pool operation:
+
+* KV blocks — one f32 scale per (block, slot) token row of each of k and v,
+  stored as ``[NB, bs]`` pools addressed by the SAME block table as the int8
+  entry pools (the scalar-prefetch path), so remap / migration / CoW move
+  scales and entries together by construction;
+* expert pages — one f32 scalar per (page, bank), stored as ``*_scale``
+  banks beside the int8 pools in ``params["moe_pool"]``, so the HMM's
+  per-bank staging moves them with their pages.
+
+Quantization error is bounded by scale/2 per element (~0.4% of the row
+max); the dequant-parity suite (tests/test_quantization.py) pins the
+end-to-end token tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+#: floor on the row max so all-zero rows quantize to scale EPS/127, not 0/0
+EPS = 1e-8
+
+
+def quantize_rows(x: jnp.ndarray, axes) -> tuple:
+    """Quantize ``x`` to int8 with one shared scale per row, where a "row"
+    is everything spanned by ``axes`` (e.g. ``(-2, -1)`` for a KV token row
+    ``[KVH, hd]`` or an expert page ``[D, F]``).  Returns ``(q, scale)``
+    with ``q`` int8 of ``x.shape`` and ``scale`` f32 of the remaining dims;
+    ``dequantize_rows(q, scale, axes)`` inverts it up to rounding."""
+    axes = tuple(axes)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axes)
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray, axes) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows` (f32 output)."""
+    s = scale.astype(jnp.float32)
+    for ax in sorted(tuple(axes)):
+        s = jnp.expand_dims(s, ax if ax >= 0 else q.ndim + ax)
+    return q.astype(jnp.float32) * s

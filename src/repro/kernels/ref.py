@@ -21,6 +21,22 @@ def paged_expert_ffn_ref(table_i, table_g, table_o, pool_i, pool_g, pool_o, x):
     return paged_gmm_ref(table_o, pool_o, h)
 
 
+def quant_paged_gmm_ref(table, pool, scales, x):
+    """Dequant-then-delegate oracle for the int8 paged GMM: pool int8
+    [n_pages, D, F], scales f32 [n_pages] (one per page)."""
+    from repro.kernels.quant import dequantize_rows
+    w = dequantize_rows(pool, scales, (-2, -1))
+    return paged_gmm_ref(table, w, x.astype(jnp.float32)).astype(x.dtype)
+
+
+def quant_paged_expert_ffn_ref(table_i, table_g, table_o, pool_i, pool_g,
+                               pool_o, scale_i, scale_g, scale_o, x):
+    h = quant_paged_gmm_ref(table_i, pool_i, scale_i, x)
+    g = quant_paged_gmm_ref(table_g, pool_g, scale_g, x)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return quant_paged_gmm_ref(table_o, pool_o, scale_o, h)
+
+
 def flash_attention_ref(q, k, v, causal=True):
     """q [B,S,H,hd]; k/v [B,S,KVH,hd]."""
     B, S, H, hd = q.shape
@@ -69,6 +85,17 @@ def block_paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
     return paged_decode_attention_ref(q, k, v, lengths)
 
 
+def quant_block_paged_decode_attention_ref(q, k_pool, k_scale, v_pool,
+                                           v_scale, block_tables, lengths):
+    """Dequant-then-delegate oracle for the int8 block-table paged decode:
+    k/v_pool int8 [NB,bs,KVH,hd], k/v_scale f32 [NB,bs] (one per token row,
+    ``quantize_rows`` over (KVH, hd))."""
+    from repro.kernels.quant import dequantize_rows
+    k = dequantize_rows(k_pool, k_scale, (-2, -1))
+    v = dequantize_rows(v_pool, v_scale, (-2, -1))
+    return block_paged_decode_attention_ref(q, k, v, block_tables, lengths)
+
+
 def mixed_block_paged_attention_ref(q, k_pool, v_pool, block_tables,
                                     ctx_lens, q_lens):
     """Mixed chunked-prefill / decode attention over the block pool.
@@ -100,6 +127,18 @@ def mixed_block_paged_attention_ref(q, k_pool, v_pool, block_tables,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def quant_mixed_block_paged_attention_ref(q, k_pool, k_scale, v_pool,
+                                          v_scale, block_tables, ctx_lens,
+                                          q_lens):
+    """Dequant-then-delegate oracle for the int8 mixed prefill/decode
+    attention (same scale layout as the quant block-decode oracle)."""
+    from repro.kernels.quant import dequantize_rows
+    k = dequantize_rows(k_pool, k_scale, (-2, -1))
+    v = dequantize_rows(v_pool, v_scale, (-2, -1))
+    return mixed_block_paged_attention_ref(q, k, v, block_tables, ctx_lens,
+                                           q_lens)
 
 
 def ssd_scan_ref(x, dt, A, Bm, Cm):

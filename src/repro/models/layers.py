@@ -205,22 +205,25 @@ def attention_apply(cfg, p, x, positions, *, cache=None, write_pos=None,
     return linear(p["o"], y.reshape(B, Sq, H * hd)), new_cache
 
 
-def paged_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
-                          block_tables, write_block, lengths):
+def paged_attention_apply(cfg, p, x, positions, *, cache, block_tables,
+                          write_block, lengths):
     """Decode-step attention over the paged KV pool (serving/kv_blocks.py).
 
-    x [B,1,D]; k/v_pool [NB,bs,KVH,hd] (this layer's pool); block_tables
-    [B,MB]; write_block [B] = pool row receiving this step's k/v (the
-    engine guarantees it is uniquely owned — CoW happened before the step;
-    entries == NB mark inactive slots and are dropped); lengths [B] = tokens
-    already cached (the new token lands at offset ``lengths % bs``).
-    Returns (y [B,1,D], (k_pool', v_pool')).
+    x [B,1,D]; ``cache`` = this layer's pool leaves {'k','v':
+    [NB,bs,KVH,hd]} — plus per-token f32 scale pools {'k_scale','v_scale':
+    [NB,bs]} when the pool is int8 (DESIGN.md §11); block_tables [B,MB];
+    write_block [B] = pool row receiving this step's k/v (the engine
+    guarantees it is uniquely owned — CoW happened before the step; entries
+    == NB mark inactive slots and are dropped); lengths [B] = tokens already
+    cached (the new token lands at offset ``lengths % bs``).  On a quantized
+    pool the new token row is quantized at write time and attention runs
+    through the fused-dequant kernel.  Returns (y [B,1,D], cache').
     """
     from repro.kernels import ops
 
     B, _, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    bs = k_pool.shape[1]
+    bs = cache["k"].shape[1]
 
     q = linear(p["q"], x).reshape(B, 1, H, hd)
     k = linear(p["k"], x).reshape(B, 1, KVH, hd)
@@ -232,40 +235,58 @@ def paged_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
         k = apply_rope(k, cos, sin, rot_dim)
 
     off = lengths % bs
-    k_pool = k_pool.at[write_block, off].set(k[:, 0].astype(k_pool.dtype),
-                                             mode="drop")
-    v_pool = v_pool.at[write_block, off].set(v[:, 0].astype(v_pool.dtype),
-                                             mode="drop")
+    quant = "k_scale" in cache
+    if quant:
+        from repro.kernels.quant import quantize_rows
+        cache = dict(cache)
+        for name, new in (("k", k), ("v", v)):
+            qr, s = quantize_rows(new[:, 0], (-2, -1))   # [B,KVH,hd] rows
+            cache[name] = cache[name].at[write_block, off].set(
+                qr, mode="drop")
+            cache[name + "_scale"] = cache[name + "_scale"].at[
+                write_block, off].set(s, mode="drop")
+    else:
+        cache = {
+            "k": cache["k"].at[write_block, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop"),
+            "v": cache["v"].at[write_block, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")}
     # table padding holds the NB sentinel (never a valid pool row); active
     # sequences only dereference owned entries (< lengths), but inactive
     # slots stream their padding — clamp so the gather stays in-bounds on
     # kernels that index the pool directly (their output is discarded)
-    NB = k_pool.shape[0]
-    o = ops.block_paged_decode_attention(q[:, 0], k_pool, v_pool,
-                                         jnp.minimum(block_tables, NB - 1),
-                                         lengths + 1)
+    NB = cache["k"].shape[0]
+    bt = jnp.minimum(block_tables, NB - 1)
+    if quant:
+        o = ops.quant_block_paged_decode_attention(
+            q[:, 0], cache["k"], cache["k_scale"], cache["v"],
+            cache["v_scale"], bt, lengths + 1)
+    else:
+        o = ops.block_paged_decode_attention(q[:, 0], cache["k"], cache["v"],
+                                             bt, lengths + 1)
     y = linear(p["o"], o.reshape(B, 1, H * hd))
-    return y, (k_pool, v_pool)
+    return y, cache
 
 
-def paged_chunk_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
-                                block_tables, chunk_block_ids, ctx_len,
-                                q_len):
+def paged_chunk_attention_apply(cfg, p, x, positions, *, cache, block_tables,
+                                chunk_block_ids, ctx_len, q_len):
     """Chunked-prefill attention over the paged KV pool (one sequence).
 
     x [1,C,D] is one prefill chunk — the last ``q_len`` (<= C) of the
     sequence's first ``ctx_len`` tokens; ``positions`` [1,C] are their
-    absolute positions.  The chunk's k/v are scattered into the pool rows
-    ``chunk_block_ids`` [C/bs] first (``NB`` marks padding beyond the prompt
-    and CoW-shared prefix blocks — those writes drop), then the chunk
-    attends causally over the whole context through ``block_tables`` [1,MB]
-    via the mixed prefill/decode kernel.  Returns (y, (k_pool', v_pool')).
+    absolute positions.  ``cache`` = this layer's pool leaves as in
+    :func:`paged_attention_apply`.  The chunk's k/v are scattered into the
+    pool rows ``chunk_block_ids`` [C/bs] first (``NB`` marks padding beyond
+    the prompt and CoW-shared prefix blocks — those writes drop; quantized
+    pools quantize per token and scatter the scales alongside), then the
+    chunk attends causally over the whole context through ``block_tables``
+    [1,MB] via the mixed prefill/decode kernel.  Returns (y, cache').
     """
     from repro.kernels import ops
 
     B, C, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    bs = k_pool.shape[1]
+    bs = cache["k"].shape[1]
 
     q = linear(p["q"], x).reshape(B, C, H, hd)
     k = linear(p["k"], x).reshape(B, C, KVH, hd)
@@ -276,16 +297,37 @@ def paged_chunk_attention_apply(cfg, p, x, positions, *, k_pool, v_pool,
         q = apply_rope(q, cos, sin, rot_dim)
         k = apply_rope(k, cos, sin, rot_dim)
 
-    k_pool = k_pool.at[chunk_block_ids].set(
-        k[0].reshape(C // bs, bs, KVH, hd).astype(k_pool.dtype), mode="drop")
-    v_pool = v_pool.at[chunk_block_ids].set(
-        v[0].reshape(C // bs, bs, KVH, hd).astype(v_pool.dtype), mode="drop")
-    NB = k_pool.shape[0]
-    o = ops.mixed_block_paged_attention(
-        q, k_pool, v_pool, jnp.minimum(block_tables, NB - 1),
-        jnp.reshape(ctx_len, (1,)), jnp.reshape(q_len, (1,)))
+    quant = "k_scale" in cache
+    if quant:
+        from repro.kernels.quant import quantize_rows
+        cache = dict(cache)
+        for name, new in (("k", k), ("v", v)):
+            qr, s = quantize_rows(new[0].reshape(C // bs, bs, KVH, hd),
+                                  (-2, -1))
+            cache[name] = cache[name].at[chunk_block_ids].set(
+                qr, mode="drop")
+            cache[name + "_scale"] = cache[name + "_scale"].at[
+                chunk_block_ids].set(s, mode="drop")
+    else:
+        cache = {
+            "k": cache["k"].at[chunk_block_ids].set(
+                k[0].reshape(C // bs, bs, KVH, hd).astype(cache["k"].dtype),
+                mode="drop"),
+            "v": cache["v"].at[chunk_block_ids].set(
+                v[0].reshape(C // bs, bs, KVH, hd).astype(cache["v"].dtype),
+                mode="drop")}
+    NB = cache["k"].shape[0]
+    bt = jnp.minimum(block_tables, NB - 1)
+    ctx1, qlen1 = jnp.reshape(ctx_len, (1,)), jnp.reshape(q_len, (1,))
+    if quant:
+        o = ops.quant_mixed_block_paged_attention(
+            q, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
+            bt, ctx1, qlen1)
+    else:
+        o = ops.mixed_block_paged_attention(q, cache["k"], cache["v"], bt,
+                                            ctx1, qlen1)
     y = linear(p["o"], o.reshape(B, C, H * hd))
-    return y, (k_pool, v_pool)
+    return y, cache
 
 
 def chunk_attention_apply(cfg, p, x, positions, *, k_row, v_row, start):

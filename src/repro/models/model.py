@@ -363,19 +363,37 @@ def paged_cache_supported(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=None):
+                     dtype=None, kv_dtype=None):
     """Block-pool decode cache: {'k','v': [L, NB, bs, KVH, hd]}.
 
     One pool row per (layer, block); ``serving/kv_blocks.py`` owns which
     sequence maps to which rows.  The block axis is sharded over 'dp'
     (one partition of ``NB/dp`` rows per replica), so growing the instance
     appends partitions and surviving rows are reused zero-copy.
+
+    ``kv_dtype="int8"`` stores entries quantized (DESIGN.md §11): the pools
+    become int8 and per-token f32 scale pools ``{'k_scale','v_scale':
+    [L, NB, bs]}`` ride beside them.  Every leaf keeps the block axis at
+    axis 1, so the engine's CoW copies, per-block byte accounting, growth
+    adoption and live migration treat scales exactly like entries — a
+    block's scales provably travel with it.
     """
     assert paged_cache_supported(cfg), \
         f"{cfg.name}: paged KV requires a standard-attention decoder"
     dtype = dtype or jnp.dtype(cfg.dtype)
     L = cfg.num_layers
     KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype is not None and jnp.dtype(kv_dtype) != jnp.dtype(dtype):
+        assert jnp.dtype(kv_dtype) == jnp.int8, \
+            f"unsupported kv_dtype {kv_dtype} (int8 or the model dtype)"
+        return {"k": jnp.zeros((L, num_blocks, block_size, KVH, hd),
+                               jnp.int8),
+                "v": jnp.zeros((L, num_blocks, block_size, KVH, hd),
+                               jnp.int8),
+                "k_scale": jnp.zeros((L, num_blocks, block_size),
+                                     jnp.float32),
+                "v_scale": jnp.zeros((L, num_blocks, block_size),
+                                     jnp.float32)}
     return {"k": jnp.zeros((L, num_blocks, block_size, KVH, hd), dtype),
             "v": jnp.zeros((L, num_blocks, block_size, KVH, hd), dtype)}
 
@@ -386,14 +404,30 @@ def write_prefill_to_blocks(cache, dense_cache, block_ids):
     entries == NB are dropped — the engine passes the sentinel both for
     padding chunks beyond the prompt and for CoW-shared prefix blocks, which
     must NOT be rewritten (they hold another live sequence's identical
-    prefix, plus possibly its tokens beyond this prompt's length)."""
+    prefix, plus possibly its tokens beyond this prompt's length).
+
+    On a quantized pool the f32 prefill rows are quantized per token at
+    write time and the scales scatter through the same block ids."""
     bs = cache["k"].shape[2]
     nb = block_ids.shape[0]
 
+    def rows_of(small):
+        L = small.shape[0]
+        return small[:, 0, :nb * bs].reshape(L, nb, bs, *small.shape[3:])
+
+    if "k_scale" in cache:
+        from repro.kernels.quant import quantize_rows
+        out = dict(cache)
+        for name in ("k", "v"):
+            q, s = quantize_rows(rows_of(dense_cache[name]), (-2, -1))
+            out[name] = cache[name].at[:, block_ids].set(q, mode="drop")
+            out[name + "_scale"] = cache[name + "_scale"].at[
+                :, block_ids].set(s, mode="drop")
+        return out
+
     def put(pool, small):
-        L = pool.shape[0]
-        rows = small[:, 0, :nb * bs].reshape(L, nb, bs, *small.shape[3:])
-        return pool.at[:, block_ids].set(rows.astype(pool.dtype), mode="drop")
+        return pool.at[:, block_ids].set(rows_of(small).astype(pool.dtype),
+                                         mode="drop")
 
     return {"k": put(cache["k"], dense_cache["k"]),
             "v": put(cache["v"], dense_cache["v"])}
@@ -418,10 +452,11 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
     positions = lengths[:, None]
     moe = cfg.is_moe
 
-    def block(bp, x, kp, vp, want_counts=False):
+    def block(bp, x, lc, want_counts=False):
+        # lc: this layer's cache leaves ({'k','v'} + optional int8 scales)
         h = apply_norm(bp["ln1"], x, cfg.norm_type)
-        a, (kp, vp) = paged_attention_apply(
-            cfg, bp["attn"], h, positions, k_pool=kp, v_pool=vp,
+        a, lc = paged_attention_apply(
+            cfg, bp["attn"], h, positions, cache=lc,
             block_tables=block_tables, write_block=write_block,
             lengths=lengths)
         x = x + a
@@ -432,37 +467,36 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache,
                         return_counts=want_counts)
         if want_counts:
             y, _, cnt = out
-            return x + y, kp, vp, cnt
+            return x + y, lc, cnt
         y, _ = out
-        return x + y, kp, vp
+        return x + y, lc
 
     nk = cfg.first_k_dense if moe else 0
-    new_k, new_v = [], []
+    prefix = []
     for i in range(nk):
-        x, kp, vp = block(params["dense_prefix"][i], x,
-                          cache["k"][i], cache["v"][i])
-        new_k.append(kp)
-        new_v.append(vp)
+        x, lc = block(params["dense_prefix"][i], x,
+                      {n: v[i] for n, v in cache.items()})
+        prefix.append(lc)
 
     def body(x, inp):
-        bp, kp, vp = inp
+        bp, lc = inp
         if collect_routing:
-            x, kp, vp, cnt = block(bp, x, kp, vp, want_counts=True)
-            return x, (kp, vp, cnt)
-        x, kp, vp = block(bp, x, kp, vp)
-        return x, (kp, vp)
+            x, lc, cnt = block(bp, x, lc, want_counts=True)
+            return x, (lc, cnt)
+        x, lc = block(bp, x, lc)
+        return x, lc
 
     x, scanned = jax.lax.scan(body, x, (params["blocks"],
-                                        cache["k"][nk:], cache["v"][nk:]))
+                                        {n: v[nk:] for n, v in cache.items()}))
     counts = None
     if collect_routing:
-        ks, vs, counts = scanned
+        new_cache, counts = scanned
     else:
-        ks, vs = scanned
+        new_cache = scanned
     if nk:
-        ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
-        vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
-    new_cache = {"k": ks, "v": vs}
+        new_cache = {n: jnp.concatenate(
+            [jnp.stack([p[n] for p in prefix]), new_cache[n]], 0)
+            for n in new_cache}
 
     x = apply_norm(params["final_norm"], x, cfg.norm_type)
     logits = linear(params["lm_head"], x[:, 0])
@@ -501,10 +535,10 @@ def paged_chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache,
     q_len = length - start
     moe = cfg.is_moe
 
-    def block(bp, x, kp, vp):
+    def block(bp, x, lc):
         h = apply_norm(bp["ln1"], x, cfg.norm_type)
-        a, (kp, vp) = paged_chunk_attention_apply(
-            cfg, bp["attn"], h, positions, k_pool=kp, v_pool=vp,
+        a, lc = paged_chunk_attention_apply(
+            cfg, bp["attn"], h, positions, cache=lc,
             block_tables=block_tables, chunk_block_ids=chunk_block_ids,
             ctx_len=length, q_len=q_len)
         x = x + a
@@ -512,27 +546,27 @@ def paged_chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache,
         y, _ = _ffn_part(cfg, bp, h, parallel=parallel,
                          moe=moe and "moe" in bp,
                          moe_pool=params.get("moe_pool"))
-        return x + y, kp, vp
+        return x + y, lc
 
     nk = cfg.first_k_dense if moe else 0
-    new_k, new_v = [], []
+    prefix = []
     for i in range(nk):
-        x, kp, vp = block(params["dense_prefix"][i], x,
-                          cache["k"][i], cache["v"][i])
-        new_k.append(kp)
-        new_v.append(vp)
+        x, lc = block(params["dense_prefix"][i], x,
+                      {n: v[i] for n, v in cache.items()})
+        prefix.append(lc)
 
     def body(x, inp):
-        bp, kp, vp = inp
-        x, kp, vp = block(bp, x, kp, vp)
-        return x, (kp, vp)
+        bp, lc = inp
+        x, lc = block(bp, x, lc)
+        return x, lc
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
-                                         cache["k"][nk:], cache["v"][nk:]))
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"],
+                                          {n: v[nk:]
+                                           for n, v in cache.items()}))
     if nk:
-        ks = jnp.concatenate([jnp.stack(new_k), ks], 0)
-        vs = jnp.concatenate([jnp.stack(new_v), vs], 0)
-    new_cache = {"k": ks, "v": vs}
+        new_cache = {n: jnp.concatenate(
+            [jnp.stack([p[n] for p in prefix]), new_cache[n]], 0)
+            for n in new_cache}
 
     x = apply_norm(params["final_norm"], x, cfg.norm_type)
     last = jax.lax.dynamic_index_in_dim(x, q_len - 1, axis=1, keepdims=False)

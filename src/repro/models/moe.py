@@ -181,11 +181,17 @@ def moe_local_pooled(cfg, p, pool, x, capacity=None, return_counts=False):
     from repro.kernels import ops
 
     gt = p["gtable"]
-    return _moe_local_body(
-        cfg, p, x, capacity,
-        lambda xg: ops.paged_expert_ffn(gt, gt, gt, pool["wi"], pool["wg"],
-                                        pool["wo"], xg),
-        return_counts=return_counts)
+    if "wi_scale" in pool:
+        # int8 store: per-page f32 scale banks ride beside the pools and are
+        # addressed by the same table (kernels/moe_gmm.quant_paged_gmm)
+        ffn = lambda xg: ops.quant_paged_expert_ffn(
+            gt, gt, gt, pool["wi"], pool["wg"], pool["wo"],
+            pool["wi_scale"], pool["wg_scale"], pool["wo_scale"], xg)
+    else:
+        ffn = lambda xg: ops.paged_expert_ffn(gt, gt, gt, pool["wi"],
+                                              pool["wg"], pool["wo"], xg)
+    return _moe_local_body(cfg, p, x, capacity, ffn,
+                           return_counts=return_counts)
 
 
 # ---------------------------------------------------------------- EP path
@@ -299,7 +305,7 @@ def _moe_ep_shard_packed(cfg, ep_axes, tp_axis, dp_axes, router_w, wi, wg, wo,
 
 def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
                          edest, eslot, pool_i, pool_g, pool_o, x,
-                         capacity, n_ep):
+                         capacity, n_ep, scales=None):
     """Pooled-store EP shard body (paper vpage-remap in the serving path).
 
     Differs from ``_moe_ep_shard`` only in *addressing*: the expert → device
@@ -340,7 +346,11 @@ def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
                               tiled=False)
     xg = recv.transpose(1, 0, 2, 3).reshape(elm, n_ep * C, D)
     t = table[0]
-    yg = ops.paged_expert_ffn(t, t, t, pool_i, pool_g, pool_o, xg)
+    if scales is not None:
+        yg = ops.quant_paged_expert_ffn(t, t, t, pool_i, pool_g, pool_o,
+                                        scales[0], scales[1], scales[2], xg)
+    else:
+        yg = ops.paged_expert_ffn(t, t, t, pool_i, pool_g, pool_o, xg)
     if tp_axis is not None:
         yg = jax.lax.psum(yg, tp_axis)
     back = yg.reshape(elm, n_ep, C, D).transpose(1, 0, 2, 3)
@@ -353,6 +363,18 @@ def _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w, table,
         gathered * (w_flat * keep)[:, None])
     aux = jax.lax.pmean(aux, dp_axes)
     return y, aux
+
+
+def _moe_ep_shard_pooled_quant(cfg, ep_axes, tp_axis, dp_axes, router_w,
+                               table, edest, eslot, pool_i, pool_g, pool_o,
+                               scale_i, scale_g, scale_o, x, capacity, n_ep):
+    """Int8 pooled shard body: the three per-page f32 scale banks arrive as
+    extra shard_map operands (page-axis sharded like their pools) and feed
+    the fused-dequant paged GMM; dispatch/combine are shared."""
+    return _moe_ep_shard_pooled(cfg, ep_axes, tp_axis, dp_axes, router_w,
+                                table, edest, eslot, pool_i, pool_g, pool_o,
+                                x, capacity, n_ep,
+                                scales=(scale_i, scale_g, scale_o))
 
 
 def moe_ep(cfg, p, x, parallel, capacity=None, pool=None,
@@ -399,17 +421,32 @@ def moe_ep(cfg, p, x, parallel, capacity=None, pool=None,
     if pooled:
         assert tp_axis is None, \
             "pooled expert store requires moe_tp=False (EP-only sharding)"
-        body = partial(_moe_ep_shard_pooled, cfg, ep_axes, tp_axis, ep_axes,
-                       capacity=C, n_ep=n_ep)
         pool_spec = P(ep_axes, None, None)
-        y, aux = _shard_map(
-            body, mesh=mesh,
-            in_specs=(P(None, None), P(ep_axes, None), P(None), P(None),
-                      pool_spec, pool_spec, pool_spec, x_spec),
-            out_specs=(x_spec, P()),
-            **_SM_NOCHECK,
-        )(p["router"]["w"], p["tables"], p["edest"], p["eslot"],
-          pool["wi"], pool["wg"], pool["wo"], xf)
+        if "wi_scale" in pool:
+            body = partial(_moe_ep_shard_pooled_quant, cfg, ep_axes, tp_axis,
+                           ep_axes, capacity=C, n_ep=n_ep)
+            scale_spec = P(ep_axes)
+            y, aux = _shard_map(
+                body, mesh=mesh,
+                in_specs=(P(None, None), P(ep_axes, None), P(None), P(None),
+                          pool_spec, pool_spec, pool_spec,
+                          scale_spec, scale_spec, scale_spec, x_spec),
+                out_specs=(x_spec, P()),
+                **_SM_NOCHECK,
+            )(p["router"]["w"], p["tables"], p["edest"], p["eslot"],
+              pool["wi"], pool["wg"], pool["wo"],
+              pool["wi_scale"], pool["wg_scale"], pool["wo_scale"], xf)
+        else:
+            body = partial(_moe_ep_shard_pooled, cfg, ep_axes, tp_axis,
+                           ep_axes, capacity=C, n_ep=n_ep)
+            y, aux = _shard_map(
+                body, mesh=mesh,
+                in_specs=(P(None, None), P(ep_axes, None), P(None), P(None),
+                          pool_spec, pool_spec, pool_spec, x_spec),
+                out_specs=(x_spec, P()),
+                **_SM_NOCHECK,
+            )(p["router"]["w"], p["tables"], p["edest"], p["eslot"],
+              pool["wi"], pool["wg"], pool["wo"], xf)
     else:
         body = partial(shard_body, cfg, ep_axes, tp_axis, ep_axes,
                        capacity=C, n_ep=n_ep)

@@ -126,7 +126,9 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                     hw: Optional[HardwareModel] = None, preinit: bool = True,
                     kv_seq_len: int = 4096, kv_batch: int = 8,
                     expert_mode: str = "dense", page_table=None,
-                    staging: str = "serial", kv_migration_bytes: int = 0):
+                    staging: str = "serial", kv_migration_bytes: int = 0,
+                    kv_dtype: Optional[str] = None,
+                    expert_dtype: Optional[str] = None):
     """Plan + cost of one transition — THE shared costing path: the
     simulator executes its scale events with this and the ClusterDriver
     selects targets with it, so projection and execution cannot drift.
@@ -148,9 +150,15 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
 
     ``kv_migration_bytes`` models a zero-drain scale-down: live KV blocks
     device-copied onto survivor partitions (use
-    ``projected_migration_blocks`` × block bytes for the shared policy)."""
-    kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len)
-    tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb)
+    ``projected_migration_blocks`` × block bytes for the shared policy).
+
+    ``kv_dtype``/``expert_dtype`` ('int8') cost the quantized pools: KV and
+    expert-page bytes are sized at the storage element width (plus scale
+    sidecars), so projections see the halved transfer/migration volumes the
+    quantized backend actually moves."""
+    kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len, kv_dtype=kv_dtype)
+    tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb,
+                            expert_dtype=expert_dtype)
     if (expert_mode == "pooled" and mcfg.is_moe and old is not None
             and strategy == "elastic"):
         from repro.core.scaling_plan import (plan_elastic_min_move,
@@ -311,6 +319,10 @@ class ClusterDriver:
         # migrate-mode scale-down => projections cost migration bytes via
         # the shared projected_migration_blocks policy, not drain time
         self._scaledown = getattr(backend, "scaledown_mode", "drain")
+        # quantized pools => projections size KV / expert-page bytes at the
+        # storage element width (halved transfer volumes for int8)
+        self._kv_dtype = getattr(backend, "kv_dtype", None)
+        self._expert_dtype = getattr(backend, "expert_dtype", None)
 
     # ------------------------------------------------------ target selection
     @property
@@ -369,7 +381,10 @@ class ClusterDriver:
                                    expert_mode=self._expert_mode,
                                    page_table=page_table,
                                    staging=self._staging,
-                                   kv_migration_bytes=kv_mig).scale_time_s
+                                   kv_migration_bytes=kv_mig,
+                                   kv_dtype=self._kv_dtype,
+                                   expert_dtype=self._expert_dtype
+                                   ).scale_time_s
         except MemoryError:
             # the live page pool cannot host this target's staged pages —
             # executing the transition would fail the same way, so veto the

@@ -51,6 +51,21 @@ def blocks_for(num_tokens: int, block_size: int) -> int:
     return max(1, -(-num_tokens // block_size))
 
 
+def block_bytes(mcfg, block_size: int, kv_dtype: Optional[str] = None) -> int:
+    """Device bytes of ONE physical KV block across all layers — the unit of
+    admission, migration, and CoW accounting.  ``kv_dtype`` is the pool's
+    storage dtype (``kv_dtype="int8"`` halves the entries and adds the
+    per-token f32 (k, v) scale rows that travel with the block — DESIGN.md
+    §11); None uses the model dtype.  Matches ``engine.block_nbytes()``
+    (which measures the live pool) and ``topology.kv_cache_bytes`` exactly —
+    all three resolve element sizes via ``costmodel.dtype_bytes``."""
+    from repro.core.costmodel import dtype_bytes
+    kv_bpe = dtype_bytes(kv_dtype or mcfg.dtype)
+    scale = 2 * 4 if (kv_dtype or mcfg.dtype) != mcfg.dtype else 0
+    return mcfg.num_layers * block_size * (
+        2 * mcfg.num_kv_heads * mcfg.resolved_head_dim * kv_bpe + scale)
+
+
 @dataclasses.dataclass
 class SeqBlocks:
     """One sequence's view of the pool."""

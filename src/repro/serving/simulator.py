@@ -67,13 +67,16 @@ class PerfModel:
     max_batch_per_dev: int = 12
     kv_seq_len: int = 4096
     kv_block_size: int = 256        # paged mode: tokens per KV block
+    kv_dtype: Optional[str] = None  # 'int8': quantized KV pool byte sizing
 
     def __post_init__(self):
         bpe = 2
         self._weight_bytes = self.mcfg.param_count() * bpe
         self._active_flops_per_tok = 2 * self.mcfg.param_count(active_only=True)
-        self._kv_bytes_per_seq = kv_cache_bytes(self.mcfg, 1, self.kv_seq_len)
-        self._kv_block_bytes = kv_cache_bytes(self.mcfg, 1, self.kv_block_size)
+        self._kv_bytes_per_seq = kv_cache_bytes(self.mcfg, 1, self.kv_seq_len,
+                                                kv_dtype=self.kv_dtype)
+        self._kv_block_bytes = kv_cache_bytes(self.mcfg, 1, self.kv_block_size,
+                                              kv_dtype=self.kv_dtype)
 
     def decode_step_s(self, batch: int, ndev: int) -> float:
         """Memory-bound: every step streams the (sharded) weights."""
@@ -267,12 +270,22 @@ class ServingSimulator:
                  routing_skew: Optional[float] = None,
                  routing_seed: int = 0,
                  expert_slot_slack: Optional[int] = None,
-                 expert_host_pages: Optional[int] = None):
+                 expert_host_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 expert_dtype: Optional[str] = None):
         self.mcfg = mcfg
         self.tp = tp
         self.ndev = ndev
         self.strategy = strategy
-        self.perf = perf or PerfModel(mcfg, kv_seq_len=kv_seq_len)
+        # quantized pools (mirrors ElasticServer(kv_dtype/expert_dtype)):
+        # KV and expert-page bytes are sized at the int8 storage width (plus
+        # scale sidecars), so modelled admission capacity roughly doubles
+        # and scale events move ~half the expert/KV bytes
+        assert kv_dtype in (None, "int8") and expert_dtype in (None, "int8")
+        self.kv_dtype = kv_dtype
+        self.expert_dtype = expert_dtype
+        self.perf = perf or PerfModel(mcfg, kv_seq_len=kv_seq_len,
+                                      kv_dtype=kv_dtype)
         self.hw = hw or DEFAULT_HW
         # 'overlap' models the background TransferEngine (mirrors
         # ElasticServer(staging="overlap")): scale events are costed with
@@ -368,8 +381,12 @@ class ServingSimulator:
                 host_pool_pages=expert_host_pages)
             self.expert_pages.initial_place(self.current_config())
         self.rebalance_events: List[dict] = []
-        # one expert page across the three banks, bf16 (PerfModel's bpe)
-        self._expert_page_bytes = 3 * mcfg.d_model * mcfg.moe_d_ff * 2
+        # one expert page across the three banks: bf16 (PerfModel's bpe) or
+        # int8 + three per-page f32 scales when the pool is quantized
+        ebpe = 1 if expert_dtype == "int8" else 2
+        escale = 3 * 4 if expert_dtype == "int8" else 0
+        self._expert_page_bytes = (3 * mcfg.d_model * mcfg.moe_d_ff * ebpe
+                                   + escale)
 
     # ------------------------------------------------------------- scaling
     def start_scale(self, target: ElasticConfig) -> SimScalingTask:
@@ -398,7 +415,9 @@ class ServingSimulator:
                                # stream H2D instead of P2P (DESIGN.md §10)
                                page_table=self.expert_pages,
                                staging=self.staging_mode,
-                               kv_migration_bytes=mig_bytes)
+                               kv_migration_bytes=mig_bytes,
+                               kv_dtype=self.kv_dtype,
+                               expert_dtype=self.expert_dtype)
         t_ready = self.t + cost.scale_time_s
         if down and self.scaledown_mode == "drain" and self.running:
             # legacy drain: the doomed share of in-flight requests (the

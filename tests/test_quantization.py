@@ -1,0 +1,493 @@
+"""Int8 quantized KV blocks & expert pages (DESIGN.md §11) — the
+dequant-parity and exactness suite pinned by the quantization PR.
+
+Fast (single device):
+
+* ``quantize_rows`` round-trip error is bounded by scale/2 per element;
+* each fused-dequant Pallas kernel (interpret mode) matches its
+  dequant-then-delegate jnp oracle tightly, and the int8 path tracks the
+  f32 kernel within the quantization tolerance;
+* remap invariance: permuting int8 pool rows TOGETHER with their scale
+  rows and rewriting the tables leaves outputs bit-identical — the
+  zero-copy vpage remap is exact on quantized pools;
+* the engine's CoW block copy moves a quantized block's scale rows with
+  its int8 entries;
+* the ``_clamp_block_f`` non-128-divisible lane fallback warns (and stays
+  correct) on both f32 and int8 pools;
+* pooled int8 experts reproduce the dense f32 MoE block within tolerance
+  through the model layer.
+
+Slow (subprocess, 8 host devices): int8 KV + int8 experts serve end to
+end across a live scale-up; every expert page (entries AND scales)
+survives migration + zero-copy remap bit-identically; surviving KV pool
+rows are adopted bit-identically by cache growth; byte accounting
+(engine block_nbytes, expert_page_nbytes, TransferStats) matches the
+quantized projections exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from helpers import TEST_MOE, run_with_devices
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.quant import dequantize_rows, quantize_rows
+
+RNG = np.random.default_rng(7)
+
+TEST_MOE_CFG = None
+
+
+def _mcfg():
+    global TEST_MOE_CFG
+    if TEST_MOE_CFG is None:
+        ns = {}
+        exec(TEST_MOE, ns)
+        TEST_MOE_CFG = ns["MCFG"]
+    return TEST_MOE_CFG
+
+
+def _f32(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def rel_err(got, want):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-12)
+
+
+def _quant_pool(n_pages, d, f):
+    w = _f32(n_pages, d, f)
+    q, s = quantize_rows(w, (-2, -1))
+    return w, q, s
+
+
+# ------------------------------------------------------------ quantize_rows
+
+def test_quantize_rows_roundtrip_error_bound():
+    x = _f32(6, 4, 16)
+    q, s = quantize_rows(x, (-2, -1))
+    assert q.dtype == jnp.int8 and s.shape == (6,) and s.dtype == jnp.float32
+    y = dequantize_rows(q, s, (-2, -1))
+    bound = np.asarray(s)[:, None, None] * 0.5 + 1e-6
+    assert (np.abs(np.asarray(y) - np.asarray(x)) <= bound).all()
+
+
+def test_quantize_rows_zero_rows_stay_finite():
+    q, s = quantize_rows(jnp.zeros((3, 8)), (-1,))
+    assert np.isfinite(np.asarray(s)).all()
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_rows(q, s, (-1,))), 0)
+
+
+# -------------------------------------------------- kernel vs oracle parity
+
+def test_quant_paged_gmm_kernel_matches_ref():
+    w, qp, sp = _quant_pool(8, 32, 128)
+    table = jnp.asarray(RNG.permutation(8)[:3], jnp.int32)
+    x = _f32(3, 96, 32)                     # C % block_c -> zero-pad path
+    got = ops.quant_paged_gmm(table, qp, sp, x, impl="kernel",
+                              block_c=64, block_f=128)
+    want = R.quant_paged_gmm_ref(table, qp, sp, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # the int8 path tracks the unquantized f32 pool within quant tolerance
+    assert rel_err(got, R.paged_gmm_ref(table, w, x)) < 2e-2
+
+
+def test_quant_paged_expert_ffn_kernel_matches_ref():
+    wi, qi, si = _quant_pool(6, 64, 128)
+    wg, qg, sg = _quant_pool(6, 64, 128)
+    wo, qo, so = _quant_pool(6, 128, 64)
+    ti = jnp.asarray([4, 0], jnp.int32)
+    tg = jnp.asarray([1, 5], jnp.int32)
+    to = jnp.asarray([3, 2], jnp.int32)
+    x = _f32(2, 64, 64)
+    got = ops.quant_paged_expert_ffn(ti, tg, to, qi, qg, qo, si, sg, so, x,
+                                     impl="kernel", block_c=64, block_f=128)
+    want = R.quant_paged_expert_ffn_ref(ti, tg, to, qi, qg, qo,
+                                        si, sg, so, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    assert rel_err(got, R.paged_expert_ffn_ref(ti, tg, to, wi, wg, wo, x)) \
+        < 5e-2
+
+
+def _quant_kv(nb, bs, kvh, hd):
+    kp, vp = _f32(nb, bs, kvh, hd), _f32(nb, bs, kvh, hd)
+    kq, ks = quantize_rows(kp, (-2, -1))
+    vq, vs = quantize_rows(vp, (-2, -1))
+    return kp, vp, kq, ks, vq, vs
+
+
+def test_quant_block_paged_decode_kernel_matches_ref():
+    B, H, KVH, hd, nb, bs, MB = 4, 8, 4, 64, 16, 16, 4
+    kp, vp, kq, ks, vq, vs = _quant_kv(nb, bs, KVH, hd)
+    q = _f32(B, H, hd)
+    bt = jnp.asarray(RNG.permutation(nb)[:B * MB].reshape(B, MB), jnp.int32)
+    lengths = jnp.asarray([64, 37, 16, 1], jnp.int32)
+    got = ops.quant_block_paged_decode_attention(q, kq, ks, vq, vs, bt,
+                                                 lengths, impl="kernel")
+    want = R.quant_block_paged_decode_attention_ref(q, kq, ks, vq, vs, bt,
+                                                    lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    f32 = R.block_paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    assert rel_err(got, f32) < 2e-2
+
+
+def test_quant_mixed_block_paged_kernel_matches_ref():
+    B, Sq, H, KVH, hd, nb, bs, MB = 2, 8, 8, 4, 64, 16, 16, 4
+    kp, vp, kq, ks, vq, vs = _quant_kv(nb, bs, KVH, hd)
+    q = _f32(B, Sq, H, hd)
+    bt = jnp.asarray(RNG.permutation(nb)[:B * MB].reshape(B, MB), jnp.int32)
+    ctx = jnp.asarray([40, 9], jnp.int32)
+    qlen = jnp.asarray([8, 1], jnp.int32)
+    got = ops.quant_mixed_block_paged_attention(q, kq, ks, vq, vs, bt, ctx,
+                                                qlen, impl="kernel")
+    want = R.quant_mixed_block_paged_attention_ref(q, kq, ks, vq, vs, bt,
+                                                   ctx, qlen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    f32 = R.mixed_block_paged_attention_ref(q, kp, vp, bt, ctx, qlen)
+    assert rel_err(got, f32) < 2e-2
+
+
+# ------------------------------------------------- zero-copy remap exactness
+
+def test_quant_paged_gmm_remap_invariance():
+    """Permuting int8 pages TOGETHER with their scale rows and rewriting
+    the table is invisible to the kernel — the vpage remap moves no bytes
+    and changes no bits on a quantized pool."""
+    _, qp, sp = _quant_pool(8, 32, 128)
+    table = jnp.asarray([5, 1, 7], jnp.int32)
+    x = _f32(3, 64, 32)
+    base = ops.quant_paged_gmm(table, qp, sp, x, impl="kernel")
+    perm = RNG.permutation(8)
+    inv = np.argsort(perm)
+    got = ops.quant_paged_gmm(
+        jnp.asarray(inv[np.asarray(table)], jnp.int32),
+        jnp.asarray(np.asarray(qp)[perm]),
+        jnp.asarray(np.asarray(sp)[perm]), x, impl="kernel")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_quant_block_paged_decode_remap_invariance():
+    B, H, KVH, hd, nb, bs, MB = 4, 8, 4, 64, 16, 16, 4
+    _, _, kq, ks, vq, vs = _quant_kv(nb, bs, KVH, hd)
+    q = _f32(B, H, hd)
+    bt = jnp.asarray(RNG.permutation(nb)[:B * MB].reshape(B, MB), jnp.int32)
+    lengths = jnp.asarray([64, 37, 16, 1], jnp.int32)
+    base = ops.quant_block_paged_decode_attention(q, kq, ks, vq, vs, bt,
+                                                  lengths, impl="kernel")
+    perm = RNG.permutation(nb)
+    inv = np.argsort(perm)
+    shuf = [jnp.asarray(np.asarray(a)[perm]) for a in (kq, ks, vq, vs)]
+    got = ops.quant_block_paged_decode_attention(
+        q, shuf[0], shuf[1], shuf[2], shuf[3],
+        jnp.asarray(inv[np.asarray(bt)], jnp.int32), lengths, impl="kernel")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_cow_copy_moves_quant_scales_with_entries():
+    """The engine's jitted CoW block copy is a tree.map over the cache
+    dict: on a quantized pool the per-token scale rows must travel with
+    the int8 entries, and untouched blocks must not change."""
+    import repro.core  # noqa: F401  (core/__init__ -> imm -> engine cycle)
+    from repro.models.model import init_paged_cache
+    from repro.serving.engine import _cow_copy
+
+    mcfg = _mcfg()
+    cache = init_paged_cache(mcfg, 8, 16, kv_dtype="int8")
+    assert set(cache) == {"k", "v", "k_scale", "v_scale"}
+    cache = {
+        "k": jnp.asarray(RNG.integers(-127, 128, cache["k"].shape), jnp.int8),
+        "v": jnp.asarray(RNG.integers(-127, 128, cache["v"].shape), jnp.int8),
+        "k_scale": jnp.asarray(
+            RNG.random(cache["k_scale"].shape), jnp.float32),
+        "v_scale": jnp.asarray(
+            RNG.random(cache["v_scale"].shape), jnp.float32)}
+    before = {k: np.asarray(v).copy() for k, v in cache.items()}
+    out = _cow_copy(cache, jnp.asarray(2, jnp.int32),
+                    jnp.asarray(5, jnp.int32))
+    for name, old in before.items():
+        new = np.asarray(out[name])
+        np.testing.assert_array_equal(new[:, 5], old[:, 2], err_msg=name)
+        keep = [b for b in range(8) if b != 5]
+        np.testing.assert_array_equal(new[:, keep], old[:, keep],
+                                      err_msg=name)
+
+
+# ------------------------------------- non-128-divisible lane dim (satellite)
+
+def test_paged_gmm_unaligned_f_warns_and_stays_correct_f32():
+    pool = _f32(4, 32, 192)                 # no 128-aligned block divides 192
+    table = jnp.asarray([3, 1], jnp.int32)
+    x = _f32(2, 16, 32)
+    with pytest.warns(UserWarning, match="128-aligned"):
+        got = ops.paged_gmm(table, pool, x, block_f=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.paged_gmm_ref(table, pool, x)),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_paged_gmm_unaligned_f_warns_and_stays_correct_int8():
+    _, qp, sp = _quant_pool(4, 32, 192)
+    table = jnp.asarray([0, 2], jnp.int32)
+    x = _f32(2, 16, 32)
+    with pytest.warns(UserWarning, match="128-aligned"):
+        got = ops.quant_paged_gmm(table, qp, sp, x, impl="kernel",
+                                  block_f=128)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(R.quant_paged_gmm_ref(table, qp, sp, x)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- model-layer dequant parity
+
+def test_moe_local_pooled_int8_tracks_dense_f32():
+    """Pooled int8 experts through the model layer: ``moe_local_pooled``
+    detects the ``*_scale`` banks and routes through the fused-dequant
+    FFN; the output tracks the dense f32 MoE block within the
+    quantization tolerance."""
+    from repro.core.expert_pages import ExpertPageTable, pooled_layout
+    from repro.core.topology import ElasticConfig
+    from repro.models.moe import moe_init, moe_local, moe_local_pooled
+
+    mcfg = _mcfg()
+    cfg = ElasticConfig(dp=1, tp=1, devices=(0,))
+    E, L = mcfg.num_experts, mcfg.num_layers
+    ppd = L * E
+    p = moe_init(jax.random.PRNGKey(0), mcfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, mcfg.d_model))
+    y_ref, _ = moe_local(mcfg, p, x)
+
+    t = ExpertPageTable(L, E, pool_pages_per_device=ppd)
+    t.initial_place(cfg)
+    lay = pooled_layout(t.active, cfg, L, E, ppd)
+    pool = {k: np.zeros((cfg.ndev * ppd,) + np.asarray(p[k]).shape[1:],
+                        np.int8) for k in ("wi", "wg", "wo")}
+    scales = {k: np.zeros((cfg.ndev * ppd,), np.float32)
+              for k in ("wi", "wg", "wo")}
+    for (l, e), ref in t.active.items():
+        if l == 0:
+            row = cfg.slot(ref.device) * ppd + ref.page
+            for k in pool:
+                q, s = quantize_rows(jnp.asarray(p[k])[e], (-2, -1))
+                pool[k][row] = np.asarray(q)
+                scales[k][row] = float(s)
+    pp = {"router": p["router"],
+          **{k: jnp.asarray(v[0]) for k, v in lay.items()}}
+    qpool = {**{k: jnp.asarray(v) for k, v in pool.items()},
+             **{k + "_scale": jnp.asarray(v) for k, v in scales.items()}}
+    y_q, _ = moe_local_pooled(mcfg, pp, qpool, x)
+    assert rel_err(y_q, y_ref) < 5e-2
+
+
+# --------------------------------------------------- slow subprocess serving
+
+QUANT_COMMON = TEST_MOE + """
+import numpy as np
+from repro.core.topology import ElasticConfig
+from repro.core.elastic_engine import ElasticServer
+from repro.serving.workload import Request
+
+c2 = ElasticConfig(dp=1, tp=2, devices=(0,1))
+c4 = ElasticConfig(dp=2, tp=2, devices=(0,1,2,3))
+
+def serve(kv_dtype=None, expert_dtype=None, scale=True, hook=None):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0,
+                        expert_mode="pooled", kv_mode="paged",
+                        kv_block_size=16, kv_dtype=kv_dtype,
+                        expert_dtype=expert_dtype)
+    srv.boot(c2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, 32, prompt=rng.integers(0, 128, 16))
+            for i in range(3)]
+    for r in reqs: srv.submit(r)
+    t, n, task = 0.0, 0, None
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 4 and task is None:
+            if hook is not None: hook(srv)
+            task = srv.start_scale(c4)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+        assert n < 500
+    while task is not None and not task.done:
+        srv.tick(t); task.advance(t); t += .1
+    return srv, task
+
+def pool_snapshot(srv):
+    # {(layer, expert): {bank: row}} straight off the device pool, keyed by
+    # the LOGICAL page — rows may move across a scale event, contents not
+    banks = {k: np.asarray(v) for k, v in srv.hmm.params["moe_pool"].items()}
+    cfg = srv.hmm.active_cfg
+    ppd = next(iter(banks.values())).shape[0] // cfg.ndev
+    out = {}
+    for (l, e), ref in srv.hmm.page_table.active.items():
+        row = cfg.slot(ref.device) * ppd + ref.page
+        out[(l, e)] = {k: v[row] for k, v in banks.items()}
+    return out
+"""
+
+
+@pytest.mark.slow
+def test_quant_serving_scaleup_bytes_and_page_exactness():
+    """Int8 KV + int8 experts serve end to end across a live 2->4 scale
+    event; every expert page (int8 entries AND f32 scales) survives
+    migration + zero-copy remap bit-identically; TransferStats /
+    block_nbytes / expert_page_nbytes all match the quantized
+    projections exactly, at ~4x below the f32 run."""
+    out = run_with_devices(QUANT_COMMON + """
+from repro.serving.kv_blocks import block_bytes
+
+snaps = {}
+srv, task = serve(kv_dtype="int8", expert_dtype="int8",
+                  hook=lambda s: snaps.update(before=pool_snapshot(s)))
+fsrv, ftask = serve()
+
+# quantized pool layouts: int8 banks + f32 scale sidecars, int8 KV pools
+pool = srv.hmm.params["moe_pool"]
+assert {str(pool[k].dtype) for k in ("wi", "wg", "wo")} == {"int8"}
+assert {str(pool[k + "_scale"].dtype) for k in ("wi", "wg", "wo")} \\
+    == {"float32"}
+assert str(srv.engine.cache["k"].dtype) == "int8"
+assert "k_scale" in srv.engine.cache
+
+# byte accounting agrees with the quantized projections exactly
+page_q, page_f = srv.hmm.expert_page_nbytes(), fsrv.hmm.expert_page_nbytes()
+assert page_q == 3 * (64 * 32 * 1 + 4), page_q          # int8 + f32 scale
+assert page_f == 3 * 64 * 32 * 4, page_f
+assert srv.engine.block_nbytes() == block_bytes(MCFG, 16, kv_dtype="int8")
+assert fsrv.engine.block_nbytes() == block_bytes(MCFG, 16)
+st, stf = task.stage_stats, ftask.stage_stats
+assert st.expert_p2p_bytes == len(srv.hmm.last_migrations) * page_q
+assert stf.expert_p2p_bytes == len(fsrv.hmm.last_migrations) * page_f
+assert st.expert_p2p_bytes * 3 < stf.expert_p2p_bytes   # ~3.9x cheaper
+
+# every expert page survived the scale event bit-identically — entries
+# and scale sidecars moved together through migration + remap
+after = pool_snapshot(srv)
+before = snaps["before"]
+assert set(after) == set(before) and before
+for key in sorted(before):
+    for bank in before[key]:
+        np.testing.assert_array_equal(after[key][bank], before[key][bank],
+                                      err_msg=str((key, bank)))
+print("QUANT-SCALEUP-OK", len(srv.hmm.last_migrations),
+      st.expert_p2p_bytes, stf.expert_p2p_bytes)
+""")
+    assert "QUANT-SCALEUP-OK" in out
+
+
+@pytest.mark.slow
+def test_quant_scaledown_migration_tokens_exact_bytes_quantized():
+    """Zero-drain scale-down on the fully quantized backend: live int8 KV
+    blocks (entries + scale rows, one jitted CoW copy per block) migrate
+    off the doomed partition mid-decode and every token matches an
+    unscaled run at the target config bit for bit — migrated quantized
+    blocks are provably intact.  Migration bytes are accounted at the
+    quantized block size."""
+    out = run_with_devices(QUANT_COMMON + """
+from repro.serving.kv_blocks import block_bytes
+
+c6 = ElasticConfig(dp=3, tp=2, devices=(0,1,2,3,4,5))
+OUTS = [6, 6, 30, 30, 60, 60]
+
+def run(scale):
+    srv = ElasticServer(MCFG, tp=2, batch_per_replica=2, max_len=128,
+                        prefill_buckets=(32,), seed=0,
+                        expert_mode="pooled", kv_mode="paged",
+                        kv_block_size=16, kv_dtype="int8",
+                        expert_dtype="int8")
+    assert srv.scaledown_mode == "migrate"
+    srv.boot(c6 if scale else c4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, 0.0, 16, o, prompt=rng.integers(0, 128, 16))
+            for i, o in enumerate(OUTS)]
+    for r in reqs: srv.submit(r)
+    t, n, task = 0.0, 0, None
+    while any(r.finish_s is None for r in reqs):
+        if scale and n == 10 and task is None:
+            assert all(srv.engine.slots[s].active for s in (4, 5))
+            task = srv.start_scale(c4)
+        srv.tick(t); t += .1; n += 1
+        if task is not None and not task.done:
+            task.advance(t)
+        assert n < 2000, [r.finish_s for r in reqs]
+    return {r.rid: srv.engine.generated[r.rid] for r in reqs}, srv, task
+
+ref, _, _ = run(scale=False)
+got, srv, task = run(scale=True)
+assert srv.hmm.active_cfg.ndev == 4
+assert task.migrated_blocks > 0
+assert srv.engine.block_nbytes() == block_bytes(MCFG, 16, kv_dtype="int8")
+assert task.migration_bytes == task.migrated_blocks * \\
+    srv.engine.block_nbytes()
+assert srv.engine.preemptions == 0          # migrated, not recomputed
+srv.hmm.kv_blocks.check_invariants()
+for rid in ref:
+    assert ref[rid] == got[rid], rid
+print("QUANT-MIGRATE-OK", task.migrated_blocks, task.migration_bytes)
+""")
+    assert "QUANT-MIGRATE-OK" in out
+
+
+@pytest.mark.slow
+def test_quant_matrix_serves_and_driver_projects_quant_bytes():
+    """The (int8 KV | f32) x (int8 experts | f32) matrix all serves to
+    completion on the same workload, and the driver's transition-cost
+    projection adopts the backend dtypes (quantized arms project
+    strictly fewer scale-up bytes)."""
+    out = run_with_devices(QUANT_COMMON + """
+from repro.core.coordinator import ScalingPolicy
+from repro.serving.driver import ClusterDriver, transition_cost
+from repro.serving.metrics import SLO
+from repro.serving.kv_blocks import block_bytes
+
+arms = {"f32": (None, None), "qkv": ("int8", None),
+        "qexp": (None, "int8"), "both": ("int8", "int8")}
+done = {}
+for name, (kvd, exd) in arms.items():
+    srv, task = serve(kv_dtype=kvd, expert_dtype=exd)
+    assert srv.hmm.active_cfg.ndev == 4
+    assert srv.kv_dtype == kvd and srv.expert_dtype == exd
+    done[name] = srv
+
+def proj(name):
+    srv = done[name]
+    c = transition_cost(MCFG, 2, c2, c4, expert_mode="pooled",
+                        kv_dtype=srv.kv_dtype, expert_dtype=srv.expert_dtype)
+    return c.breakdown["p2p"]
+
+# int8 expert pages halve (and then some) the projected scale-up P2P;
+# the KV dtype does not touch weight P2P
+assert proj("both") == proj("qexp") < proj("f32")
+assert proj("qkv") == proj("f32")
+
+# a migrate-mode scale-down moves quantized KV blocks: the projection at
+# the int8 block size is strictly cheaper than the f32 one
+down_q = transition_cost(
+    MCFG, 2, c4, c2, expert_mode="pooled", kv_dtype="int8",
+    expert_dtype="int8",
+    kv_migration_bytes=50 * block_bytes(MCFG, 16, kv_dtype="int8"))
+down_f = transition_cost(
+    MCFG, 2, c4, c2, expert_mode="pooled",
+    kv_migration_bytes=50 * block_bytes(MCFG, 16))
+assert down_q.scale_time_s < down_f.scale_time_s
+
+# the ClusterDriver adopts the backend's dtypes for its projections
+drv = ClusterDriver(done["both"], ScalingPolicy(slo=SLO(1.0, 1.0)),
+                    mcfg=MCFG, tp=2, device_pool=range(8))
+assert drv._kv_dtype == "int8" and drv._expert_dtype == "int8"
+# projects from the backend's LIVE page table (the server sits at c4)
+assert 0 < drv.projected_cost_s(c4, c2) < float("inf")
+print("QUANT-MATRIX-OK")
+""")
+    assert "QUANT-MATRIX-OK" in out
