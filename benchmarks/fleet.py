@@ -1,0 +1,144 @@
+"""Fleet serving A/B (DESIGN.md §12): one shared pool + scale-to-zero vs
+static per-model pools on anti-correlated diurnal + burst demand.
+
+Three logical models (same architecture, independent traffic) ride
+staggered diurnal rate curves with a burst at each model's own crest —
+the regime the fleet refactor targets: aggregate demand is much flatter
+than any single model's, so N static pools sized for their own peaks
+waste their troughs while a shared pool follows the crests around.
+
+* ``static`` arm: each model owns ``POOL/N`` devices for the whole run —
+  the provision-for-peak baseline.  No scaling, no parking.
+* ``fleet`` arm: one ``FleetDriver`` over the same total pool; models
+  boot small, scale with per-model SLO estimators, park to the
+  pinned-host tier through idle troughs, and cold-start (unpark) on the
+  next queued request with the H2D window hiding the AOT compile.
+
+Acceptance (asserted): the fleet arm matches or beats the static arm's
+request-weighted aggregate SLO attainment at strictly fewer
+device-hours.  Emits per-model + aggregate columns and the
+devices-provisioned timeline in the run.py ``--json`` schema.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Table
+from repro.configs import get_config
+from repro.core.coordinator import ScalingPolicy
+from repro.serving.fleet import FleetConfig, FleetDriver, FleetModelSpec
+from repro.serving.metrics import SLO, fleet_summary
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workload import fleet_workload
+
+MODEL = "deepseek-v2-lite-16b"
+NAMES = ["chat", "code", "batch"]
+TP = 2
+POOL = 12                       # shared pool == Σ static allocations
+STATIC_NDEV = POOL // len(NAMES)
+FLEET_BOOT_NDEV = 2             # fleet models boot small and earn devices
+DURATION_S = 600.0              # arrival window (one diurnal period)
+TAIL_S = 720.0                  # run past the window so queues drain
+SLO_TARGET = SLO(ttft_s=15.0, tpot_s=1.5)
+
+
+def _sim(ndev: int) -> ServingSimulator:
+    return ServingSimulator(get_config(MODEL), tp=TP, ndev=ndev,
+                            kv_mode="paged", expert_mode="pooled",
+                            staging="overlap")
+
+
+def _workload(seed: int = 0):
+    """Staggered diurnal (phase i/N) + a burst at each model's crest.
+    Each arm regenerates with the same seed: Request objects are mutated
+    by the backend, so arms must never share them."""
+    return fleet_workload(NAMES, duration_s=DURATION_S, base_rps=0.0,
+                          peak_rps=8.0, period_s=DURATION_S,
+                          burst_rps=3.0, burst_width_s=25.0,
+                          prompt_len=2000, output_range=(500, 750),
+                          seed=seed)
+
+
+def _run_static(wl):
+    sims = {}
+    for name in NAMES:
+        sim = _sim(STATIC_NDEV)
+        sim.run(wl[name], until=TAIL_S)
+        sims[name] = sim
+    per_model = {n: s.finished for n, s in sims.items()}
+    device_seconds = {n: STATIC_NDEV * TAIL_S for n in NAMES}
+    return fleet_summary(per_model, SLO_TARGET, device_seconds), None
+
+
+def _run_fleet(wl):
+    policy = ScalingPolicy(slo=SLO_TARGET, window=16, cooldown_s=10.0,
+                           queue_scale_up=4, confirm_s=1.0,
+                           idle_utilization=0.4)
+    specs = [FleetModelSpec(name=n, backend=_sim(FLEET_BOOT_NDEV),
+                            policy=policy, mcfg=get_config(MODEL), tp=TP,
+                            min_devices=0, park_after_idle_s=15.0)
+             for n in NAMES]
+    fd = FleetDriver(specs, range(POOL),
+                     FleetConfig(dt=0.05, settle_s=5.0, step_dp=1,
+                                 max_step_dp=3, sample_every_s=10.0))
+    res = fd.run(wl, until=TAIL_S)
+    return fleet_summary(res, SLO_TARGET, fd.device_seconds()), fd
+
+
+def _cold_start_wall(fd, name=None) -> float:
+    """Modelled unpark wall (the cold-start cost actually paid; see
+    EXPERIMENTS.md for its measurement pitfalls) — per model, or
+    fleet-total when ``name`` is None."""
+    if fd is None:
+        return 0.0
+    states = fd.states.values() if name is None else [fd.states[name]]
+    return sum(ev.get("wall_s", 0.0)
+               for st in states
+               for ev in st.spec.backend.park_events
+               if ev["kind"] == "unpark")
+
+
+def run():
+    t = Table("fleet", ["arm", "model", "slo_att", "finished",
+                        "device_hours", "parks", "unparks",
+                        "cold_start_wall_s"])
+    tl = Table("fleet_timeline", ["t_s", *NAMES, "free"])
+    results = {}
+    for arm, runner in (("static", _run_static), ("fleet", _run_fleet)):
+        fs, fd = runner(_workload(seed=7))
+        results[arm] = fs
+        moves = fd.summary() if fd is not None else {}
+        for name in NAMES:
+            pm = fs["per_model"][name]
+            mv = moves.get(name, {})
+            t.add(arm, name, pm["slo_attainment"], pm["finished"],
+                  pm["device_hours"], mv.get("parks", 0),
+                  mv.get("unparks", 0),
+                  _cold_start_wall(fd, name) if fd is not None else 0.0)
+        t.add(arm, "aggregate", fs["aggregate_slo_attainment"],
+              fs["finished"], fs["device_hours"],
+              sum(m.get("parks", 0) for m in moves.values()),
+              sum(m.get("unparks", 0) for m in moves.values()),
+              _cold_start_wall(fd))
+        if fd is not None:
+            for row in fd.timeline:
+                tl.add(row["t"], *(row[n] for n in NAMES), row["free"])
+            fd.check_invariants()
+    static, fleet = results["static"], results["fleet"]
+    assert fleet["finished"] == fleet["n"], \
+        f"fleet arm left requests unfinished ({fleet['finished']}/{fleet['n']})"
+    assert fleet["aggregate_slo_attainment"] >= \
+        static["aggregate_slo_attainment"], \
+        (f"fleet SLO {fleet['aggregate_slo_attainment']:.3f} < "
+         f"static {static['aggregate_slo_attainment']:.3f}")
+    assert fleet["device_hours"] < static["device_hours"], \
+        (f"fleet device-hours {fleet['device_hours']:.2f} !< "
+         f"static {static['device_hours']:.2f}")
+    print(f"fleet beats static: SLO {fleet['aggregate_slo_attainment']:.3f}"
+          f" >= {static['aggregate_slo_attainment']:.3f} at "
+          f"{fleet['device_hours']:.2f} < {static['device_hours']:.2f} "
+          f"device-hours")
+    return [t, tl]
+
+
+if __name__ == "__main__":
+    for table in run():
+        table.show()

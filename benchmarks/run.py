@@ -26,7 +26,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation, bootup_breakdown, engine_measured,
-                            expert_remap, expert_skew, granularity,
+                            expert_remap, expert_skew, fleet, granularity,
                             kv_pressure, latency_breakdown, memory_vs_ep,
                             overlap, peak_memory, scaledown_latency,
                             scaleup_latency, slo_compliance, slo_dynamics,
@@ -61,6 +61,9 @@ def main() -> None:
         ("measured", engine_measured),
         # tracing disabled-vs-enabled throughput A/B + trace artifact
         ("trace_overhead", trace_overhead),
+        # shared-pool fleet vs static per-model pools A/B with
+        # scale-to-zero (park/unpark) on anti-correlated diurnal demand
+        ("fleet", fleet),
     ]
     if args.only:
         modules = [(n, m) for n, m in modules if n == args.only]

@@ -245,3 +245,30 @@ def resident_bytes(plan_place: Dict[int, Dict], kv_included: bool = True
                    ) -> Dict[int, int]:
     """Per-device live bytes of a placement (from scaling_plan.placement)."""
     return {d: sum(shards.values()) for d, shards in plan_place.items()}
+
+
+def unpark_cost(plan: ScalingPlan, *,
+                hw: HardwareModel = DEFAULT_HW,
+                preinit: bool = True,
+                staging: str = "overlap") -> ScalingCost:
+    """Cold-start (scale-from-zero) transition pricing for an unpark plan
+    (``scaling_plan.plan_unpark``): every weight shard rides the H2D lane
+    at ``hw.h2d_bw`` — no disk, no P2P — and the KV pool is a fresh INIT.
+
+    Overlap staging keeps the STAGING ∥ COMPILING discipline: the warmup/
+    AOT-compile window hides under the H2D window (the ``max`` in
+    ``plan_cost``), so a warm standby cache makes unpark wall-clock ≈ the
+    weight bytes over the host link.  ``preinit=False`` adds the full
+    cold-boot serial tail — the fleet driver prices an unparked model's
+    first request with whatever the IMM actually holds.
+
+    The model cannot serve while parked, so the whole transition is
+    dead time for queued requests: ``downtime_s`` reports the scale time
+    (unlike an elastic scale, where the old instance keeps serving)."""
+    for s in plan.steps:
+        assert s.op in (Op.HOST, Op.INIT, Op.FREE), \
+            f"unpark plans stream host+init only, got {s.op}"
+    cost = plan_cost(plan, hw=hw, preinit=preinit, staging=staging)
+    cost.downtime_s = cost.scale_time_s
+    cost.breakdown["cold_start"] = cost.scale_time_s
+    return cost

@@ -329,6 +329,127 @@ class EngineScalingTask:
         self.phase = ScalePhase.ABORTED
 
 
+class UnparkTask:
+    """Resumable cold start from the pinned-host tier (driver.ScalingTask).
+
+    The scale-from-zero twin of ``EngineScalingTask``: ``begin_unpark``
+    opened an HMM staging session that streams the whole parked snapshot
+    back to devices.  With ``staging="overlap"`` the first ``advance``
+    runs the IMM AOT compile on the calling thread *while* the
+    ``TransferEngine`` moves the snapshot (the same STAGING ∥ COMPILING
+    discipline as a scale event — the H2D window hides the compile);
+    serial mode streams one unit per ``advance`` then compiles.
+    COMMITTING allocates a fresh KV cache/block pool and binds the
+    engine; the first post-commit ``tick()`` serves.  There is no
+    MIGRATING/DRAINING arm — a parked model has no live sequences by
+    construction.  Every phase transition emits an ``unpark.<PHASE>``
+    span on the scale lane, so park→unpark shows up on the same timeline
+    as ordinary scale events.
+    """
+
+    def __init__(self, server: "ElasticServer", target: ElasticConfig):
+        assert server.hmm.parked, "unpark requires a parked server"
+        self.server = server
+        self.target = target
+        self.phase = ScalePhase.STAGING
+        self.staging_mode = server.hmm.staging_mode
+        self.increments_total = server.hmm.begin_unpark(target) + 1
+        self.increments_done = 0
+        self.stats: TransferStats = server.hmm._stage_stats
+        self.stage_stats: Optional[TransferStats] = None
+        self.event: Optional[ScaleEvent] = None
+        self.stall_s = 0.0
+        self._compile_hit: Optional[bool] = None
+        server._active_task = self
+
+    @property
+    def phase(self) -> ScalePhase:
+        return self._phase
+
+    @phase.setter
+    def phase(self, new: ScalePhase) -> None:
+        tr = obs.get_tracer()
+        now = tr.now()
+        old = getattr(self, "_phase", None)
+        self._phase = new
+        if old is not None and old is not new:
+            tr.complete(f"unpark.{old.name}", self._phase_t0, now,
+                        cat="scale", tid="scale",
+                        args={"target": self.target.describe(),
+                              "next": new.name})
+        self._phase_t0 = now
+
+    @property
+    def done(self) -> bool:
+        return self.phase.terminal
+
+    def _unwind_failed(self):
+        """A staging step raised: abort the HMM session.  The parked
+        snapshot itself survives (``abort`` leaves ``_parked`` intact), so
+        a later ``start_unpark`` can retry the cold start."""
+        self.server.hmm.abort()
+        self.server._active_task = None
+        self.phase = ScalePhase.ABORTED
+
+    def advance(self, now: float) -> ScalePhase:
+        ph = self.phase
+        if ph is ScalePhase.STAGING:
+            t0 = time.perf_counter()
+            try:
+                if self.staging_mode == "overlap":
+                    if self._compile_hit is None:
+                        # AOT compile on the calling thread while the
+                        # TransferEngine streams the snapshot; the explicit
+                        # span is the trace-level witness that the unpark
+                        # H2D window hid the compile
+                        tr = obs.get_tracer()
+                        c0 = tr.now()
+                        self._compile_hit = self.server.imm.has(self.target)
+                        self.server.imm.preinitialize(self.target)
+                        tr.complete("unpark.compile", c0, tr.now(),
+                                    cat="scale", tid="scale",
+                                    args={"hit": self._compile_hit,
+                                          "target": self.target.describe()})
+                    if self.server.hmm.poll_staging():
+                        self.increments_done = self.increments_total
+                        self.stage_stats = dataclasses.replace(self.stats)
+                        self.phase = ScalePhase.COMMITTING
+                    else:
+                        self.increments_done = (
+                            self.increments_total - 1
+                            - self.server.hmm.staging_remaining)
+                else:
+                    more = self.server.hmm.stage_increment()
+                    self.increments_done += 1
+                    if not more:
+                        self.stage_stats = dataclasses.replace(self.stats)
+                        self.phase = ScalePhase.COMPILING
+            except BaseException:
+                self._unwind_failed()
+                raise
+            self.stall_s += time.perf_counter() - t0
+        elif ph is ScalePhase.COMPILING:
+            t0 = time.perf_counter()
+            self.increments_done += 1
+            try:
+                self._compile_hit = self.server.imm.has(self.target)
+                self.server.imm.preinitialize(self.target)
+            except BaseException:
+                self._unwind_failed()
+                raise
+            self.phase = ScalePhase.COMMITTING
+            self.stall_s += time.perf_counter() - t0
+        elif ph is ScalePhase.COMMITTING:
+            self.server._unpark_switchover(self)
+            self.phase = ScalePhase.DONE
+            self.server._active_task = None
+        return self.phase
+
+    def abort(self):
+        assert self.phase in (ScalePhase.STAGING, ScalePhase.COMPILING)
+        self._unwind_failed()
+
+
 @dataclasses.dataclass
 class RebalanceEvent:
     """One completed (or aborted) rebalance pass (DESIGN.md §10)."""
@@ -462,7 +583,8 @@ class ElasticServer:
                  expert_slot_slack: Optional[int] = None,
                  expert_host_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 expert_dtype: Optional[str] = None):
+                 expert_dtype: Optional[str] = None,
+                 imm_cache=None):
         self.mcfg = mcfg
         self.kv_mode = kv_mode
         # quantized storage (ISSUE 9): 'int8' stores the paged KV pool /
@@ -517,10 +639,14 @@ class ElasticServer:
         # (models/moe.py; exposed via routing_stats()).  0 disables — no
         # extra executable is compiled, the decode path is untouched.
         self.routing_sample_every = routing_sample_every
+        # ``imm_cache``: an OrderedDict shared across a fleet's servers so
+        # the standby-executable LRU is bounded once globally (IMM keys
+        # carry the full model identity, so entries can never collide)
         self.imm = IMM(mcfg, self.hmm, batch_per_replica=batch_per_replica,
                        max_len=max_len, prefill_buckets=prefill_buckets,
                        prefill_chunk=prefill_chunk,
-                       collect_routing=routing_sample_every > 0)
+                       collect_routing=routing_sample_every > 0,
+                       shared_cache=imm_cache)
         self.engine = InferenceEngine(mcfg, batch_per_replica=batch_per_replica,
                                       max_len=max_len,
                                       prefill_bucket=min(prefill_buckets),
@@ -607,6 +733,60 @@ class ElasticServer:
             self.events[-1].switch_s = time.perf_counter() - t0
             self.events[-1].compile_hit = hit
 
+    # -------------------------------------------------------- scale-to-zero
+    @property
+    def parked(self) -> bool:
+        return self.hmm.parked
+
+    def park(self) -> TransferStats:
+        """Scale to ZERO devices (DESIGN.md §12): snapshot every weight
+        bank into the pinned-host tier, unbind the engine and drop all
+        device state.  Legal only when fully idle — empty queue, no active
+        sequences, no scale/rebalance in flight — so parking never kills a
+        request.  ``submit`` stays legal while parked (requests queue); the
+        fleet driver answers the queue with ``start_unpark``."""
+        assert self._active_task is None or self._active_task.done, \
+            "cannot park during a scale event"
+        self._preempt_rebalance()
+        assert not self.queue and self.engine.active_count() == 0, \
+            "park requires a drained server (queue empty, no live slots)"
+        stats = self.hmm.park()
+        # the engine's old handles would pin the freed device buffers
+        self.engine.unbind()
+        self._staged_cfg = None
+        return stats
+
+    def start_unpark(self, target: ElasticConfig) -> UnparkTask:
+        """Open a resumable cold start from the pinned-host tier (the
+        scale-from-zero twin of ``start_scale``); the driver advances it
+        once per tick until DONE, after which ``tick()`` serves again."""
+        return UnparkTask(self, target)
+
+    def _unpark_switchover(self, task: UnparkTask):
+        """Commit tail of an unpark: adopt the streamed weights, fresh KV,
+        bind the engine — the ``switchover`` analogue for cold starts."""
+        t0 = time.perf_counter()
+        target = task.target
+        self.hmm.commit()
+        inst, params, cache, hit = self.imm.activate(target)
+        self.hmm.cache = None
+        self.engine.bind(target, inst.mesh, params, cache, inst.compiled,
+                         kv=self.hmm.kv_blocks)
+        self.engine.reset_routing_stats()
+        self.engine.admit_limit = None
+        ev = ScaleEvent(t=time.time(), src="parked", dst=target.describe(),
+                        stats=self.hmm.last_stats,
+                        compile_hit=(task._compile_hit
+                                     if task._compile_hit is not None
+                                     else hit),
+                        stage_s=task.stats.wall_s,
+                        switch_s=time.perf_counter() - t0,
+                        stall_s=task.stall_s, staging=self.staging_mode,
+                        stage_wall_s=(task.stage_stats.wall_s
+                                      if task.stage_stats else 0.0))
+        self.events.append(ev)
+        task.event = ev
+
     # -------------------------------------------------------------- serving
     def submit(self, req: Request):
         kv = self.hmm.kv_blocks
@@ -635,6 +815,11 @@ class ElasticServer:
         target slot's partition (FIFO: the head request tries every free
         slot before admission stalls), and sequences preempted under pool
         pressure re-enter at the *front* of the queue."""
+        if self.parked:
+            # zero devices: nothing serves, the queue simply accrues until
+            # the driver cold-starts us (a tick is legal, not an error —
+            # fleet loops tick every backend uniformly)
+            return []
         tr = obs.get_tracer()
         admitting = True
         if self._active_task is not None \
@@ -711,7 +896,7 @@ class ElasticServer:
         return len(self.queue)
 
     def utilization(self) -> float:
-        return self.engine.utilization()
+        return 0.0 if self.parked else self.engine.utilization()
 
     def kv_stats(self):
         """Block-pool stats (None in dense mode); serving/metrics.py."""
@@ -745,7 +930,8 @@ class ElasticServer:
                 "migration_bytes": sum(ev.migration_bytes
                                        for ev in self.events)}
 
-    def current_config(self) -> ElasticConfig:
+    def current_config(self) -> Optional[ElasticConfig]:
+        """Active configuration, or None while parked (zero devices)."""
         return self.hmm.active_cfg
 
     def start_scale(self, target: ElasticConfig) -> EngineScalingTask:

@@ -84,6 +84,13 @@ class TransferStats:
     expert_replica_bytes: int = 0
     expert_d2h_bytes: int = 0
     expert_h2d_bytes: int = 0
+    # whole-model pinned-host tier (scale-to-zero, DESIGN.md §12).  d2h:
+    # bytes park() snapshots host-side; h2d: bytes unpark streams back to
+    # devices.  The expert_* fields above remain the per-page
+    # sub-accounting; these count every bank — attention, dense MLP,
+    # embeddings, experts — of the parked model.
+    d2h_bytes: int = 0
+    h2d_bytes: int = 0
 
     #: the additive byte/count fields that must agree exactly between
     #: staging="serial" and staging="overlap" (same reshard calls, same
@@ -92,7 +99,8 @@ class TransferStats:
                    "init_bytes", "zero_copy_count", "p2p_count",
                    "expert_p2p_bytes", "expert_zero_copy_bytes",
                    "expert_local_bytes", "expert_replica_bytes",
-                   "expert_d2h_bytes", "expert_h2d_bytes")
+                   "expert_d2h_bytes", "expert_h2d_bytes",
+                   "d2h_bytes", "h2d_bytes")
 
     def merge(self, o: "TransferStats"):
         self.zero_copy_bytes += o.zero_copy_bytes
@@ -109,6 +117,8 @@ class TransferStats:
         self.expert_replica_bytes += o.expert_replica_bytes
         self.expert_d2h_bytes += o.expert_d2h_bytes
         self.expert_h2d_bytes += o.expert_h2d_bytes
+        self.d2h_bytes += o.d2h_bytes
+        self.h2d_bytes += o.h2d_bytes
 
 
 def make_instance_mesh(cfg: ElasticConfig, all_devices=None) -> Mesh:
@@ -294,6 +304,12 @@ class HMM:
         # The page table accounts the tier; this dict holds the bytes.
         self._expert_host_pool: Dict[Tuple[int, int],
                                      Dict[str, np.ndarray]] = {}
+        # whole-model pinned-host tier (scale-to-zero, DESIGN.md §12):
+        # park() snapshots every bank here and releases the devices;
+        # begin_unpark() streams it back through the staging session.
+        self._parked: Optional[Dict[str, Any]] = None
+        self._unpark = False                  # current session is an unpark
+        self._unpark_table = None             # fresh page table for unpark
         # rebalance session state (begin_rebalance/.../abort_rebalance)
         self._rebalance_ops = None       # List[RebalanceOp]
         self._rebalance_session = None   # TransferSession
@@ -679,6 +695,11 @@ class HMM:
         accumulates byte/count accounting into ``stats``.  Shared verbatim
         by the serial path (caller thread) and the overlapped path
         (TransferEngine workers) so the two modes cannot drift."""
+        if kind == "unpark":
+            # whole-model cold start: the leaf is a pinned-host array —
+            # stream it to its device placement (the H2D lane, priced at
+            # hw.h2d_bw by the cost model)
+            return self._put_host_leaf(leaf, sh, stats)
         if kind.startswith("pool:"):
             return self._migrate_pool_bank(leaf, new_cfg, mesh, stats,
                                            bank=kind.split(":", 1)[1])
@@ -822,7 +843,10 @@ class HMM:
         new_cfg, mesh = self._stage_target
         new_params = jax.tree_util.tree_unflatten(
             self._stage_treedef, self._stage_out)
-        if self.page_table is not None and self.page_table.staged is None:
+        if (self.page_table is not None and self.page_table.staged is None
+                and not self._unpark):
+            # unpark built a FRESH table (initial_place at the target) in
+            # begin_unpark — there is no live placement to remap from
             self.page_table.stage_remap(new_cfg, min_move=False)
         self.staged = (new_cfg, mesh, new_params)
         stats.wall_s += time.perf_counter() - t0
@@ -904,6 +928,23 @@ class HMM:
             out.append(local)
         return jax.make_array_from_single_device_arrays(shape, sharding, out)
 
+    def _put_host_leaf(self, arr: np.ndarray, sh: NamedSharding,
+                       stats: TransferStats):
+        """Stream ONE pinned-host array to devices under ``sh`` — the unpark
+        work unit.  Pure memory ops (numpy slicing + one ``jax.device_put``
+        per device shard, no compiled primitives), so it is safe on
+        TransferEngine worker threads concurrently with the IMM's AOT
+        compile on the serve thread (STAGING ∥ COMPILING)."""
+        arr = np.asarray(arr)
+        shape = arr.shape
+        target = sh.devices_indices_map(shape)
+        out = []
+        for dev in sh.addressable_devices:
+            sub = np.ascontiguousarray(arr[target[dev]])
+            stats.h2d_bytes += sub.nbytes
+            out.append(jax.device_put(sub, dev))
+        return jax.make_array_from_single_device_arrays(shape, sh, out)
+
     def _reset_stage_session(self):
         self._stage_work = None
         self._stage_cursor = 0
@@ -981,6 +1022,8 @@ class HMM:
         new_cfg, mesh, params = self.staged
         stats = TransferStats()
         t0 = time.perf_counter()
+        if self._unpark:
+            return self._commit_unpark(new_cfg, mesh, params, stats, t0)
         if live_cache is not None:
             self.cache = live_cache
         self.cache = self._grow_cache(new_cfg, mesh, stats)
@@ -1019,8 +1062,212 @@ class HMM:
         self.staged = None
         self.last_migrations = None
         self._reset_stage_session()
+        self._unpark = False
+        self._unpark_table = None
         if self.page_table is not None:
             self.page_table.abort()
+
+    # -------------------------------------------------------- scale-to-zero
+    @obs.traced("hmm.park", cat="hmm")
+    def park(self) -> TransferStats:
+        """Scale to ZERO devices: snapshot EVERY weight bank into the
+        pinned-host tier and drop all device state — the whole-model
+        generalization of the PR-8 cold-expert host pool (DESIGN.md §12).
+
+        Dense banks are pulled back as full logical host arrays; pooled
+        expert banks are snapshotted per (layer, expert) page (already-
+        demoted host-tier experts are absorbed from ``_expert_host_pool``
+        without re-copying), so unpark can rebuild the pools at ANY target
+        device count.  The KV cache is DISCARDED — park is only legal once
+        in-flight sequences have drained (asserted by the callers); unpark
+        allocates a fresh pool.
+
+        Requires no staging/rebalance session in flight.  Returns stats
+        with the snapshot accounted in ``d2h_bytes``."""
+        assert self.active_cfg is not None, "nothing to park"
+        assert self._stage_work is None and self.staged is None, \
+            "park is mutually exclusive with scale staging"
+        assert self._rebalance_ops is None, \
+            "park is mutually exclusive with rebalancing"
+        from repro.core.expert_pages import HOST
+        t0 = time.perf_counter()
+        stats = TransferStats()
+        cfg = self.active_cfg
+        pooled = self.expert_mode == "pooled"
+        pages: Optional[Dict[Tuple[int, int], Dict[str, np.ndarray]]] = None
+        if pooled:
+            # per-page extraction: only live rows cross D2H, never the pool
+            # zeros (accounting mirrors _make_rebalance_fetch: one
+            # expert_page_nbytes per device-resident page)
+            pages = {}
+            ppd = self.expert_pool_pages
+            pools = self.params["moe_pool"]
+            shards = {k: {sh.device: sh.data for sh in l.addressable_shards}
+                      for k, l in pools.items()}
+            host_view: Dict[Tuple[str, int], np.ndarray] = {}
+
+            def bank_rows(k: str, logical: int) -> np.ndarray:
+                if (k, logical) not in host_view:
+                    host_view[(k, logical)] = np.asarray(
+                        shards[k][self.all_devices[logical]])
+                return host_view[(k, logical)]
+
+            page_bytes = self.expert_page_nbytes()
+            for (l, e), ref in self.page_table.active.items():
+                if ref.device == HOST:
+                    pages[(l, e)] = {k: np.array(v) for k, v
+                                     in self._expert_host_pool[(l, e)].items()}
+                else:
+                    pages[(l, e)] = {
+                        k: np.array(bank_rows(k, ref.device)[ref.page])
+                        for k in shards}
+                    stats.d2h_bytes += page_bytes
+                    stats.expert_d2h_bytes += page_bytes
+            host_tree = {k: v for k, v in self.params.items()
+                         if k != "moe_pool"}
+        else:
+            host_tree = self.params
+        host_tree = jax.tree.map(np.asarray, host_tree)
+        for leaf in jax.tree.leaves(host_tree):
+            stats.d2h_bytes += leaf.nbytes
+        total = (sum(leaf.nbytes for leaf in jax.tree.leaves(host_tree))
+                 + (sum(r.nbytes for p in pages.values() for r in p.values())
+                    if pages else 0))
+        self._parked = {"tree": host_tree, "pages": pages, "cfg": cfg,
+                        "bytes": total}
+        self.params = None
+        self.cache = None
+        self.kv_blocks = None
+        self.active_cfg = None
+        self._expert_host_pool = {}
+        if self.page_table is not None:
+            # reset to an empty table: no device placement exists while
+            # parked; unpark initial_places a fresh one at the target
+            self.page_table = ExpertPageTable(
+                self._n_moe_layers, self.mcfg.num_experts,
+                pool_pages_per_device=(self.expert_pool_pages or 0
+                                       if pooled else 0),
+                host_pool_pages=self.expert_host_pages)
+        stats.wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return stats
+
+    @property
+    def parked(self) -> bool:
+        return self._parked is not None
+
+    def parked_bytes(self) -> int:
+        """Pinned-host bytes held by the whole-model parked snapshot."""
+        return self._parked["bytes"] if self._parked is not None else 0
+
+    @obs.traced("hmm.begin_unpark", cat="hmm")
+    def begin_unpark(self, cfg: ElasticConfig) -> int:
+        """Open a staging session that streams the parked snapshot back to
+        devices (cold start from the pinned-host tier).  Exactly the
+        ``begin_scale`` discipline — serial mode drives it with
+        ``stage_increment``, overlap mode submits every unit to the
+        background ``TransferEngine`` and polls with ``poll_staging`` while
+        the IMM's AOT compile runs on the serve thread (STAGING ∥
+        COMPILING) — so the whole-model H2D window hides the compile.
+
+        ``commit`` then allocates a fresh KV cache/block pool and the model
+        is live again; tokens are bit-identical to a never-parked run (the
+        snapshot round-trips every byte).  Returns the work-unit count."""
+        assert self._parked is not None, "not parked"
+        assert self.active_cfg is None
+        assert self._stage_work is None, "staging already in progress"
+        assert cfg.tp == self.tp, "TP is fixed across park/unpark (§4.1)"
+        t0 = time.perf_counter()
+        mesh = make_instance_mesh(cfg, self.all_devices)
+        snap = self._parked
+        # fresh container copy; leaves stay shared with the host snapshot
+        params = jax.tree.map(lambda x: x, snap["tree"])
+        table = None
+        pooled = self.expert_mode == "pooled"
+        if self.page_table is not None:
+            table = ExpertPageTable(
+                self._n_moe_layers, self.mcfg.num_experts,
+                pool_pages_per_device=(self.expert_pool_pages or 0
+                                       if pooled else 0),
+                host_pool_pages=self.expert_host_pages)
+            table.initial_place(cfg)
+        if pooled:
+            pages = snap["pages"]
+            ppd = self.expert_pool_pages
+            sample = next(iter(pages.values()))
+            pools = {k: np.zeros((cfg.ndev * ppd,) + row.shape, row.dtype)
+                     for k, row in sample.items()}
+            for (l, e), ref in table.active.items():
+                row = cfg.slot(ref.device) * ppd + ref.page
+                for k in pools:
+                    pools[k][row] = pages[(l, e)][k]
+            params["moe_pool"] = pools
+            moe = params["blocks"]["moe"]
+            for name, arr in self._pooled_index_arrays(
+                    table.active, cfg).items():
+                moe[name] = np.asarray(arr, np.int32)
+        shardings = self.param_shardings(params, mesh)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        shard_leaves = jax.tree.leaves(shardings)
+        work = []
+        for (path_tuple, leaf), sh in zip(flat, shard_leaves):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path_tuple)
+            work.append((path, leaf, sh, None, "unpark"))
+        self._stage_work = work
+        self._stage_cursor = 0
+        self._stage_out = []
+        self._stage_treedef = treedef
+        self._stage_target = (cfg, mesh)
+        self._unpark = True
+        self._unpark_table = table
+        self._stage_stats = TransferStats(wall_s=time.perf_counter() - t0)
+        if pooled:
+            # expert sub-accounting: the live-page share of the pool H2D
+            # stream (h2d_bytes counts whole pool slices, zeros included —
+            # that is what actually crosses the bus)
+            self._stage_stats.expert_h2d_bytes += (
+                len(snap["pages"]) * self.expert_page_nbytes())
+        if self.staging_mode == "overlap":
+            from repro.core.transfer import TransferOp
+            self._stage_t0 = t0
+            ops = [TransferOp(index=i, label=f"unpark:{path}",
+                              fn=self._make_stage_op(leaf, sh, expert_dim,
+                                                     kind, cfg, mesh))
+                   for i, (path, leaf, sh, expert_dim, kind)
+                   in enumerate(work)]
+            self._stage_session = self.transfer_engine().submit(ops)
+        return len(work)
+
+    def _commit_unpark(self, new_cfg: ElasticConfig, mesh, params,
+                       stats: TransferStats, t0: float) -> TransferStats:
+        """Commit tail of an unpark session: adopt the streamed weights,
+        allocate a FRESH KV cache/block pool (nothing survived the park —
+        the INIT lane of the cost model), and swap in the fresh page
+        table built at ``begin_unpark``."""
+        cache = self.make_cache(new_cfg)
+        cshard = self.cache_shardings(cache, mesh)
+        self.cache = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                                  cache, cshard)
+        for leaf in jax.tree.leaves(self.cache):
+            stats.init_bytes += leaf.nbytes
+        if self.kv_mode == "paged":
+            from repro.serving.kv_blocks import KVBlockManager
+            self.kv_blocks = KVBlockManager(new_cfg.dp,
+                                            self.kv_blocks_per_replica,
+                                            self.kv_block_size)
+        self.active_cfg = new_cfg
+        self.params = params
+        self.staged = None
+        if self._unpark_table is not None:
+            self.page_table = self._unpark_table
+        self._unpark = False
+        self._unpark_table = None
+        self._parked = None
+        stats.wall_s = time.perf_counter() - t0
+        if self.last_stats is not None:
+            self.last_stats.merge(stats)
+        return stats
 
     # ------------------------------------------------------------ rebalance
     def begin_rebalance(self, actions, load=None) -> int:
@@ -1229,8 +1476,10 @@ class HMM:
             self.page_table.abort_rebalance()
 
     def host_tier_bytes(self) -> int:
-        """Resident bytes of the pinned-host cold tier."""
-        return len(self._expert_host_pool) * self.expert_page_nbytes()
+        """Resident bytes of the pinned-host cold tier: demoted expert
+        pages plus, when parked, the whole-model snapshot."""
+        return (len(self._expert_host_pool) * self.expert_page_nbytes()
+                + self.parked_bytes())
 
     def update_cache(self, cache):
         """The active instance writes back its KV state after each step."""

@@ -45,7 +45,9 @@ class IMM:
     def __init__(self, mcfg: ModelConfig, hmm: HMM, *,
                  batch_per_replica: int, max_len: int,
                  prefill_buckets=(64,), prefill_chunk: int = 0,
-                 lru_capacity: int = 4, collect_routing: bool = False):
+                 lru_capacity: int = 4, collect_routing: bool = False,
+                 shared_cache: Optional[
+                     "OrderedDict[Tuple, StandbyInstance]"] = None):
         self.mcfg = mcfg
         self.hmm = hmm
         self.batch_per_replica = batch_per_replica
@@ -58,12 +60,30 @@ class IMM:
         # twin ("decode_routed"; DESIGN.md §9)
         self.collect_routing = collect_routing
         self.lru_capacity = lru_capacity
-        self._cache: "OrderedDict[Tuple, StandbyInstance]" = OrderedDict()
+        # A fleet shares one standby LRU across models (pass the same
+        # OrderedDict to every IMM) so total cached executables stay
+        # bounded by one capacity, not N of them; keys carry the full
+        # model identity so same-mesh models can never collide.
+        self._cache: "OrderedDict[Tuple, StandbyInstance]" = (
+            shared_cache if shared_cache is not None else OrderedDict())
         self.stats = {"preinit_hits": 0, "preinit_misses": 0,
                       "compile_s_total": 0.0}
 
     def _key(self, cfg: ElasticConfig) -> Tuple:
-        return (cfg.dp, cfg.tp, cfg.devices)
+        # Standby executables are specialized on everything that shapes the
+        # traced program, not just the mesh: two fleet models with the same
+        # (dp, tp, devices) must not collide on a cached executable, so the
+        # key carries the model config and every compile-affecting knob.
+        return (repr(self.mcfg),
+                self.batch_per_replica, self.max_len,
+                self.prefill_buckets, self.prefill_chunk,
+                self.collect_routing,
+                self.hmm.kv_mode, self.hmm.kv_block_size,
+                self.hmm.kv_blocks_per_replica,
+                self.hmm.expert_mode, self.hmm.expert_pool_pages,
+                self.hmm.expert_slot_slack,
+                self.hmm.kv_dtype, self.hmm.expert_dtype,
+                cfg.dp, cfg.tp, cfg.devices)
 
     def has(self, cfg: ElasticConfig) -> bool:
         """True if a standby instance for ``cfg`` is already compiled (an

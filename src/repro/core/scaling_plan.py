@@ -261,6 +261,22 @@ def plan_horizontal(tensors, old, new_replica: ElasticConfig) -> ScalingPlan:
     return ScalingPlan(steps, old, new_replica)
 
 
+def plan_unpark(tensors, new: ElasticConfig) -> ScalingPlan:
+    """Whole-model cold start from the pinned-host tier (scale-to-zero,
+    DESIGN.md §12): every weight shard streams H2D (``Op.HOST`` — priced at
+    ``hw.h2d_bw``, one parallel lane per destination device), KV state is a
+    fresh ``INIT``.  No disk, no P2P: a parked model holds its complete
+    snapshot pinned host-side, so unpark is bounded by the H2D bus, not
+    storage — the cold-start limit case of the elastic planner."""
+    kv_names = {t.name for t in tensors if t.kind == "kv"}
+    steps: List[PlanStep] = []
+    for d, shards in placement(tensors, new).items():
+        for key, nbytes in shards.items():
+            op = Op.INIT if key.tensor in kv_names else Op.HOST
+            steps.append(PlanStep(op, key, nbytes, dst=d))
+    return ScalingPlan(steps, None, new)
+
+
 STRATEGIES = {
     "elastic": plan_elastic,
     "cold_restart": plan_cold_restart,

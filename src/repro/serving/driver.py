@@ -45,10 +45,13 @@ import enum
 import math
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
+from typing import Dict, Union
+
 from repro.configs.base import ModelConfig
 from repro.core.coordinator import LoadEstimator, ScalingPolicy
-from repro.core.costmodel import DEFAULT_HW, HardwareModel, plan_cost
-from repro.core.scaling_plan import STRATEGIES, placement
+from repro.core.costmodel import (DEFAULT_HW, HardwareModel, plan_cost,
+                                  unpark_cost)
+from repro.core.scaling_plan import STRATEGIES, placement, plan_unpark
 from repro.core.topology import ElasticConfig, kv_cache_bytes, model_tensors
 from repro.serving.metrics import latency_percentiles
 from repro.serving.workload import Request, merge_arrivals
@@ -177,6 +180,119 @@ def transition_cost(mcfg: ModelConfig, tp: int, old: ElasticConfig,
                      staging=staging, kv_migration_bytes=kv_migration_bytes)
 
 
+def unpark_transition_cost(mcfg: ModelConfig, tp: int, new: ElasticConfig, *,
+                           hw: Optional[HardwareModel] = None,
+                           preinit: bool = True, staging: str = "overlap",
+                           kv_seq_len: int = 4096, kv_batch: int = 8,
+                           kv_dtype: Optional[str] = None,
+                           expert_dtype: Optional[str] = None):
+    """Cold-start pricing for scale-from-zero (DESIGN.md §12): the parked
+    model's whole snapshot streams H2D at ``hw.h2d_bw`` while the IMM
+    compile window hides underneath (overlap staging) — the shared costing
+    path for the FleetDriver's unpark projections and the simulator's
+    unpark execution, mirroring how ``transition_cost`` is shared for
+    scale events.  Returns a ``costmodel.ScalingCost`` whose ``downtime_s``
+    equals the scale time (a parked model serves nothing until commit)."""
+    kvb = kv_cache_bytes(mcfg, kv_batch, kv_seq_len, kv_dtype=kv_dtype)
+    tensors = model_tensors(mcfg, tp, kv_bytes_per_replica=kvb,
+                            expert_dtype=expert_dtype)
+    plan = plan_unpark(tensors, new)
+    return unpark_cost(plan, hw=hw or DEFAULT_HW, preinit=preinit,
+                       staging=staging)
+
+
+# ------------------------------------------------------------- device pool
+
+class DevicePool:
+    """Single source of truth for accelerator ownership across models.
+
+    Every device id in the fleet belongs to exactly one owner (a model
+    name) or is free — the allocator raises on any claim that would
+    double-book a device (two backends binding overlapping ids, or a
+    driver handing a device to a model while another still holds it),
+    instead of silently aliasing accelerator memory.  ``check_invariants``
+    asserts pool conservation: owned ∪ free is exactly the pool, with no
+    device in both and none leaked."""
+
+    def __init__(self, devices: Sequence[int]):
+        devs = tuple(int(d) for d in devices)
+        if len(set(devs)) != len(devs):
+            raise ValueError(f"duplicate device ids in pool: {devs}")
+        self.devices: Tuple[int, ...] = devs
+        self._known = frozenset(devs)
+        self._owner: Dict[int, str] = {}
+
+    def claim(self, owner: str, devs: Sequence[int]) -> Tuple[int, ...]:
+        """Atomically claim ``devs`` for ``owner``.  Raises ValueError if
+        any device is outside the pool or already owned (by anyone,
+        including ``owner`` itself — a double-claim is a bookkeeping bug,
+        not a no-op)."""
+        devs = tuple(int(d) for d in devs)
+        for d in devs:
+            if d not in self._known:
+                raise ValueError(f"device {d} is not in the pool "
+                                 f"{self.devices}")
+            holder = self._owner.get(d)
+            if holder is not None:
+                raise ValueError(
+                    f"device {d} already owned by {holder!r} — refusing to "
+                    f"double-book it for {owner!r}")
+        if len(set(devs)) != len(devs):
+            raise ValueError(f"duplicate device ids in claim: {devs}")
+        for d in devs:
+            self._owner[d] = owner
+        return devs
+
+    def release(self, owner: str, devs: Sequence[int]) -> None:
+        """Return ``devs`` to the free set.  Raises ValueError unless every
+        device is currently owned by ``owner``."""
+        devs = tuple(int(d) for d in devs)
+        for d in devs:
+            holder = self._owner.get(d)
+            if holder != owner:
+                raise ValueError(
+                    f"device {d} is owned by {holder!r}, not {owner!r} — "
+                    f"refusing the release")
+        for d in devs:
+            del self._owner[d]
+
+    def owned(self, owner: str) -> Tuple[int, ...]:
+        return tuple(d for d in self.devices if self._owner.get(d) == owner)
+
+    def free(self) -> Tuple[int, ...]:
+        return tuple(d for d in self.devices if d not in self._owner)
+
+    def owners(self) -> Dict[int, str]:
+        return dict(self._owner)
+
+    def check_invariants(
+            self, leases: Optional[Dict[str, Sequence[int]]] = None) -> None:
+        """Pool conservation: every device is free xor owned by exactly one
+        model; nothing outside the pool is tracked.  ``leases``: optional
+        {owner -> devices} view the caller believes (e.g. the FleetDriver's
+        per-model lease lists) — asserted to agree with the allocator
+        exactly, so a device can neither be double-booked nor leaked."""
+        for d in self._owner:
+            assert d in self._known, f"unknown device {d} tracked"
+        free = set(self.free())
+        owned = set(self._owner)
+        assert not (free & owned), f"devices both free and owned: {free & owned}"
+        assert free | owned == self._known, \
+            f"devices leaked: {self._known - free - owned}"
+        if leases is not None:
+            seen: Dict[int, str] = {}
+            for owner, devs in leases.items():
+                for d in devs:
+                    assert d not in seen, \
+                        f"device {d} leased to both {seen[d]!r} and {owner!r}"
+                    seen[d] = owner
+                    assert self._owner.get(d) == owner, \
+                        f"lease says {owner!r} holds {d}, allocator says " \
+                        f"{self._owner.get(d)!r}"
+            assert set(seen) == owned, \
+                f"allocator/lease mismatch: {set(seen) ^ owned}"
+
+
 @runtime_checkable
 class ServingBackend(Protocol):
     """What the ClusterDriver needs from a serving system.  Implemented by
@@ -286,13 +402,22 @@ class ClusterDriver:
     """
 
     def __init__(self, backend: ServingBackend, policy: ScalingPolicy, *,
-                 mcfg: ModelConfig, tp: int, device_pool: Sequence[int],
+                 mcfg: ModelConfig, tp: int,
+                 device_pool: Union[DevicePool, Sequence[int]],
                  config: Optional[DriverConfig] = None):
         self.backend = backend
         self.estimator = LoadEstimator(policy)
         self.mcfg = mcfg
         self.tp = tp
-        self.pool: Tuple[int, ...] = tuple(device_pool)
+        # Pool ownership lives in the DevicePool allocator, not the driver:
+        # a raw id sequence gets its own private pool; passing a shared
+        # DevicePool makes double-booking (two drivers claiming overlapping
+        # ids) raise at construction instead of silently aliasing devices.
+        if not isinstance(device_pool, DevicePool):
+            device_pool = DevicePool(device_pool)
+        self.allocator = device_pool
+        self.pool: Tuple[int, ...] = self.allocator.claim(
+            mcfg.name, self.allocator.devices)
         self.config = config or DriverConfig()
         self.task: Optional[ScalingTask] = None
         self.events: List[DriverEvent] = []

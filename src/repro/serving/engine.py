@@ -324,6 +324,28 @@ class InferenceEngine:
         self._lazy_prefill = OrderedDict(
             (k, None) for k in self._lazy_prefill if k in compiled)
 
+    def unbind(self):
+        """Drop every device-array reference (park / scale-to-zero,
+        DESIGN.md §12): the HMM has snapshotted the weights host-side, and
+        the engine holding the old handles would keep the device buffers
+        alive past the release.  Callers drain first — refusing to unbind
+        under live sequences keeps park from silently killing requests."""
+        assert self.active_count() == 0, "unbind with active sequences"
+        self.cfg = None
+        self.mesh = None
+        self.params = None
+        self.cache = None
+        self.compiled = {}
+        self.kv = None
+        self.block_tables = None
+        self.slots = []
+        self.lengths = None
+        self.tokens = None
+        self._prefilling = []
+        self._chunk_ctx = {}
+        self._lazy_prefill = OrderedDict()
+        self.admit_limit = None
+
     def free_slots(self) -> List[int]:
         lim = self.admit_limit if self.admit_limit is not None else len(self.slots)
         return [i for i, s in enumerate(self.slots)

@@ -1,0 +1,402 @@
+"""FleetDriver (DESIGN.md §12): one shared accelerator pool, many models.
+
+The single-model ``ClusterDriver`` owns its whole pool for one backend;
+the fleet refactor moves pool ownership into the ``DevicePool`` allocator
+and arbitrates it across N serving backends (``ElasticServer`` or
+``ServingSimulator`` — anything implementing ``ServingBackend`` plus the
+``park``/``start_unpark`` scale-to-zero surface):
+
+* each model keeps its OWN ``LoadEstimator`` (per-model SLO windows,
+  cooldowns and confirm timers — the per-model hysteresis), feeding a
+  global allocator that scores candidate moves with the shared cost
+  model (``transition_cost`` / ``unpark_transition_cost``) and hands
+  devices between models through the existing per-model ``ScalingTask``
+  lifecycle — a device is claimed at decision time, serves through the
+  transition, and only returns to the free set when the releasing
+  model's task commits;
+* **scale-to-zero is first-class**: a model idle past
+  ``park_after_idle_s`` (with ``min_devices == 0``) parks — its whole
+  snapshot moves to the pinned-host tier, every device releases — and
+  the next queued request cold-starts it through an unpark task whose
+  H2D window hides the AOT compile (STAGING ∥ COMPILING);
+* pool conservation is enforced, not assumed: every claim/release goes
+  through the allocator (double-booking raises), and
+  ``check_invariants`` cross-checks the allocator against the driver's
+  per-model lease lists every tick.
+
+Backends address their devices *logically* (slots ``0..ndev-1`` — the
+simulator's internal device space, or indices into an ``ElasticServer``'s
+``all_devices``); the allocator's fleet device ids are the ownership
+ledger.  What conservation means is therefore exact: Σ leases + free ==
+pool, always, with no id in two leases.
+
+Anti-thrash hysteresis is layered: per-model estimator ``cooldown_s`` +
+``confirm_s`` (a burst must persist to trigger), the driver's
+``settle_s`` (no new decision while a transition just landed), and
+``park_after_idle_s`` (a trough must persist before the model gives up
+its last devices) — so anti-correlated bursts hand devices back and
+forth at workload cadence, not tick cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro import obs
+from repro.configs.base import ModelConfig
+from repro.core.coordinator import LoadEstimator, ScalingPolicy
+from repro.core.topology import ElasticConfig
+from repro.serving.driver import (DevicePool, ScalingTask, transition_cost,
+                                  unpark_transition_cost)
+from repro.serving.metrics import latency_percentiles
+from repro.serving.workload import Request, merge_arrivals
+
+
+@dataclasses.dataclass
+class FleetModelSpec:
+    """One fleet member: a serving backend plus its scaling envelope."""
+    name: str
+    backend: object                  # ServingBackend + park/start_unpark
+    policy: ScalingPolicy
+    mcfg: ModelConfig
+    tp: int
+    # device floor: the model never scales below ceil(min_devices/tp)
+    # replicas' worth of devices; 0 additionally allows scale-to-zero
+    min_devices: int = 0
+    # trough persistence before a min_devices==0 model parks
+    park_after_idle_s: float = 60.0
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    dt: float = 0.05
+    settle_s: float = 10.0           # post-transition decision quiet time
+    step_dp: int = 1
+    max_step_dp: int = 2
+    sample_every_s: float = 5.0      # devices-provisioned timeline cadence
+
+
+@dataclasses.dataclass
+class FleetEvent:
+    """One allocator move: scale up/down, park, or unpark."""
+    t: float
+    model: str
+    kind: str                        # 'up' | 'down' | 'park' | 'unpark'
+    src: str
+    dst: str
+    projected_s: float = 0.0
+    queue_depth: int = 0
+    free_devices: int = 0
+
+
+@dataclasses.dataclass
+class _ModelState:
+    spec: FleetModelSpec
+    estimator: LoadEstimator
+    lease: List[int]                 # fleet device ids currently owned
+    task: Optional[ScalingTask] = None
+    task_kind: Optional[str] = None  # 'up' | 'down' | 'unpark'
+    task_prev_lease: int = 0         # lease size before the in-flight claim
+    parked: bool = False
+    idle_since: Optional[float] = None
+    last_done_t: float = -math.inf
+    device_seconds: float = 0.0      # ∫ len(lease) dt — what this model cost
+    pending: List[Request] = dataclasses.field(default_factory=list)
+    pi: int = 0
+    finished: List[Request] = dataclasses.field(default_factory=list)
+
+
+class FleetDriver:
+    """Closed loop over N models sharing one ``DevicePool``."""
+
+    def __init__(self, specs: Sequence[FleetModelSpec],
+                 device_pool: Union[DevicePool, Sequence[int]],
+                 config: Optional[FleetConfig] = None):
+        if not isinstance(device_pool, DevicePool):
+            device_pool = DevicePool(device_pool)
+        self.pool = device_pool
+        self.config = config or FleetConfig()
+        names = [s.name for s in specs]
+        assert len(set(names)) == len(names), f"duplicate model names {names}"
+        self.states: Dict[str, _ModelState] = {}
+        for spec in specs:
+            cfg = spec.backend.current_config()
+            ndev = cfg.ndev if cfg is not None else 0
+            # adopt the backend's boot allocation: claim exactly as many
+            # devices as it currently runs on (raises if the pool cannot
+            # conserve them — e.g. two models booted past the pool size)
+            lease = list(self.pool.claim(spec.name, self.pool.free()[:ndev])) \
+                if ndev else []
+            if len(lease) != ndev:
+                raise ValueError(
+                    f"pool cannot cover {spec.name}'s boot config "
+                    f"({ndev} devices; {len(self.pool.devices)} in pool)")
+            self.states[spec.name] = _ModelState(
+                spec=spec, estimator=LoadEstimator(spec.policy), lease=lease,
+                parked=(cfg is None) or getattr(spec.backend, "parked",
+                                                False))
+        self.t = 0.0
+        self.events: List[FleetEvent] = []
+        self.timeline: List[dict] = []     # devices-provisioned samples
+        self._next_sample_t = 0.0
+        self.check_invariants()
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Pool conservation against the per-model lease ledger: every
+        device free xor leased to exactly one model, none leaked."""
+        self.pool.check_invariants(
+            {name: st.lease for name, st in self.states.items()})
+
+    # ----------------------------------------------------------- utilities
+    def _min_dp(self, spec: FleetModelSpec) -> int:
+        return max(1, math.ceil(spec.min_devices / spec.tp))
+
+    def _logical(self, dp: int, tp: int) -> ElasticConfig:
+        return ElasticConfig(dp=dp, tp=tp, devices=tuple(range(dp * tp)))
+
+    def _projected_scale_s(self, st: _ModelState, old: ElasticConfig,
+                           new: ElasticConfig) -> float:
+        """Shared-cost-model score of a candidate move (the same adoption
+        of backend staging/layout knobs as ``ClusterDriver``)."""
+        b = st.spec.backend
+        page_table = getattr(getattr(b, "hmm", None), "page_table", None)
+        if page_table is None:
+            page_table = getattr(b, "expert_pages", None)
+        try:
+            return transition_cost(
+                st.spec.mcfg, st.spec.tp, old, new,
+                strategy=getattr(b, "strategy", "elastic"),
+                hw=getattr(b, "hw", None),
+                preinit=bool(getattr(b, "preinit", True)),
+                kv_seq_len=getattr(getattr(b, "perf", None),
+                                   "kv_seq_len", 4096),
+                expert_mode=getattr(b, "expert_mode", "dense"),
+                page_table=page_table,
+                staging=getattr(b, "staging_mode", "serial"),
+                kv_dtype=getattr(b, "kv_dtype", None),
+                expert_dtype=getattr(b, "expert_dtype", None)).scale_time_s
+        except MemoryError:
+            return math.inf
+
+    def _projected_unpark_s(self, st: _ModelState,
+                            new: ElasticConfig) -> float:
+        b = st.spec.backend
+        return unpark_transition_cost(
+            st.spec.mcfg, st.spec.tp, new,
+            hw=getattr(b, "hw", None),
+            preinit=bool(getattr(b, "preinit", True)),
+            staging=getattr(b, "staging_mode", "serial"),
+            kv_seq_len=getattr(getattr(b, "perf", None), "kv_seq_len", 4096),
+            kv_dtype=getattr(b, "kv_dtype", None),
+            expert_dtype=getattr(b, "expert_dtype", None)).scale_time_s
+
+    def _record(self, st: _ModelState, kind: str, src: str, dst: str,
+                proj: float = 0.0) -> None:
+        ev = FleetEvent(t=self.t, model=st.spec.name, kind=kind, src=src,
+                        dst=dst, projected_s=proj,
+                        queue_depth=st.spec.backend.queue_depth(),
+                        free_devices=len(self.pool.free()))
+        self.events.append(ev)
+        obs.get_tracer().instant(f"fleet.{kind}", cat="fleet", t=self.t,
+                                 tid="fleet",
+                                 args={"model": st.spec.name, "src": src,
+                                       "dst": dst})
+
+    # ------------------------------------------------------- task lifecycle
+    def _advance_task(self, st: _ModelState, t: float) -> None:
+        if st.task is None:
+            return
+        phase = st.task.advance(t)
+        if not phase.terminal:
+            return
+        name = st.spec.name
+        aborted = phase.name == "ABORTED"
+        if st.task_kind == "down" and not aborted:
+            # the shrink committed: the tail of the lease returns to the
+            # free set — THIS is the handoff point to other models
+            new_n = st.task.target.ndev
+            self.pool.release(name, st.lease[new_n:])
+            del st.lease[new_n:]
+        elif st.task_kind in ("up", "unpark") and aborted:
+            # the claim at decision time never materialized: hand the
+            # delta straight back (an aborted unpark returns to parked)
+            self.pool.release(name, st.lease[st.task_prev_lease:])
+            del st.lease[st.task_prev_lease:]
+        if st.task_kind == "unpark" and not aborted:
+            st.parked = False
+            st.idle_since = None
+        st.task = None
+        st.task_kind = None
+        st.last_done_t = t
+
+    # ------------------------------------------------------------ decisions
+    def _decide(self, st: _ModelState, t: float) -> None:
+        if st.task is not None or t - st.last_done_t < self.config.settle_s:
+            return
+        if st.parked:
+            self._maybe_unpark(st, t)
+            return
+        spec, b, cfgd = st.spec, st.spec.backend, self.config
+        decision = st.estimator.decide(t, b.queue_depth(), b.utilization())
+        if decision == "up":
+            self._scale_up(st, t)
+        elif decision == "down":
+            self._scale_down(st, t)
+        else:
+            self._maybe_park(st, t)
+
+    def _maybe_unpark(self, st: _ModelState, t: float) -> None:
+        """A parked model's next request always answers with an unpark —
+        as soon as the pool can cover its smallest legal config."""
+        spec, b = st.spec, st.spec.backend
+        if b.queue_depth() == 0:
+            return
+        free = self.pool.free()
+        min_dp = self._min_dp(spec)
+        max_dp = len(free) // spec.tp
+        if max_dp < min_dp:
+            return                      # pool exhausted; retry next window
+        # smallest rung whose capacity covers the queued demand
+        demand = b.queue_depth()
+        dp = next((d for d in range(min_dp, max_dp + 1)
+                   if b.capacity(self._logical(d, spec.tp)) >= demand),
+                  max_dp)
+        target = self._logical(dp, spec.tp)
+        proj = self._projected_unpark_s(st, target)
+        st.task_prev_lease = len(st.lease)
+        st.lease.extend(self.pool.claim(spec.name, free[:dp * spec.tp]))
+        self._record(st, "unpark", "parked", target.describe(), proj)
+        st.task = b.start_unpark(target)
+        st.task_kind = "unpark"
+
+    def _scale_up(self, st: _ModelState, t: float) -> None:
+        spec, b, cfgd = st.spec, st.spec.backend, self.config
+        cur = b.current_config()
+        free = self.pool.free()
+        max_extra_dp = len(free) // spec.tp
+        rungs = [d for d in range(cur.dp + cfgd.step_dp,
+                                  cur.dp + cfgd.max_step_dp * cfgd.step_dp
+                                  + 1, cfgd.step_dp)
+                 if d - cur.dp <= max_extra_dp]
+        if not rungs:
+            return                      # pool exhausted; retry next window
+        demand = b.utilization() * b.capacity(cur) + b.queue_depth()
+        scored = []
+        for d in rungs:
+            cand = self._logical(d, spec.tp)
+            proj = self._projected_scale_s(st, cur, cand)
+            if math.isfinite(proj):
+                scored.append((cand, proj))
+        if not scored:
+            return
+        target, proj = next(((c, p) for c, p in scored
+                             if b.capacity(c) >= demand), scored[-1])
+        delta = target.ndev - cur.ndev
+        st.task_prev_lease = len(st.lease)
+        st.lease.extend(self.pool.claim(spec.name, free[:delta]))
+        self._record(st, "up", cur.describe(), target.describe(), proj)
+        st.task = b.start_scale(target)
+        st.task_kind = "up"
+
+    def _scale_down(self, st: _ModelState, t: float) -> None:
+        spec, b, cfgd = st.spec, st.spec.backend, self.config
+        cur = b.current_config()
+        d = cur.dp - cfgd.step_dp
+        if d < self._min_dp(spec):
+            return
+        cand = self._logical(d, spec.tp)
+        active = b.utilization() * b.capacity(cur)
+        if b.capacity(cand) < active * 1.25 or b.queue_depth():
+            return
+        proj = self._projected_scale_s(st, cur, cand)
+        if not math.isfinite(proj):
+            return
+        self._record(st, "down", cur.describe(), cand.describe(), proj)
+        # devices release when the task COMMITS (_advance_task), never at
+        # decision time — the model still serves on them while draining
+        st.task = b.start_scale(cand)
+        st.task_kind = "down"
+
+    def _maybe_park(self, st: _ModelState, t: float) -> None:
+        spec, b = st.spec, st.spec.backend
+        if spec.min_devices > 0:
+            return
+        idle = b.queue_depth() == 0 and b.utilization() == 0.0
+        if not idle:
+            st.idle_since = None
+            return
+        if st.idle_since is None:
+            st.idle_since = t
+            return
+        if t - st.idle_since < spec.park_after_idle_s:
+            return
+        cur = b.current_config()
+        self._record(st, "park", cur.describe(), "parked")
+        b.park()
+        self.pool.release(spec.name, st.lease)
+        st.lease.clear()
+        st.parked = True
+        st.idle_since = None
+        st.last_done_t = t
+
+    # -------------------------------------------------------------- the loop
+    def run(self, arrivals: Dict[str, Sequence[Request]],
+            until: float) -> Dict[str, List[Request]]:
+        """Advance the fleet loop to ``until``.  ``arrivals`` maps model
+        name -> new requests (added to that model's pending set; call again
+        with more to continue).  Returns per-model finished requests."""
+        for name, reqs in (arrivals or {}).items():
+            st = self.states[name]
+            if reqs:
+                st.pending = merge_arrivals(st.pending, st.pi, reqs)
+                st.pi = 0
+        cfgd = self.config
+        while self.t < until:
+            t = self.t
+            for st in self.states.values():
+                # deliver arrivals — parked models still take submissions
+                # (their queue is the unpark trigger)
+                while st.pi < len(st.pending) \
+                        and st.pending[st.pi].arrival_s <= t:
+                    st.spec.backend.submit(st.pending[st.pi])
+                    st.pi += 1
+                finished = st.spec.backend.step(t)
+                for r in finished:
+                    st.estimator.record(r)
+                st.finished.extend(finished)
+                st.device_seconds += len(st.lease) * cfgd.dt
+            for st in self.states.values():
+                self._advance_task(st, t)
+            for st in self.states.values():
+                self._decide(st, t)
+            if t >= self._next_sample_t:
+                self.timeline.append(
+                    {"t": round(t, 6),
+                     **{n: len(s.lease) for n, s in self.states.items()},
+                     "free": len(self.pool.free())})
+                self._next_sample_t = t + cfgd.sample_every_s
+            self.check_invariants()
+            self.t += cfgd.dt
+        return {name: st.finished for name, st in self.states.items()}
+
+    # ------------------------------------------------------------- reporting
+    def device_seconds(self) -> Dict[str, float]:
+        return {n: st.device_seconds for n, st in self.states.items()}
+
+    def finished_requests(self) -> Dict[str, List[Request]]:
+        return {n: st.finished for n, st in self.states.items()}
+
+    def summary(self) -> dict:
+        """Event/latency rollup (the fleet benchmark's raw material)."""
+        out = {}
+        for name, st in self.states.items():
+            kinds = [e.kind for e in self.events if e.model == name]
+            out[name] = {"ups": kinds.count("up"),
+                         "downs": kinds.count("down"),
+                         "parks": kinds.count("park"),
+                         "unparks": kinds.count("unpark"),
+                         "device_hours": st.device_seconds / 3600.0,
+                         **latency_percentiles(st.finished)}
+        return out

@@ -151,6 +151,37 @@ def summarize(reqs: Sequence[Request], slo: Optional[SLO] = None,
     return out
 
 
+def fleet_summary(per_model_requests: "dict[str, Sequence[Request]]",
+                  slo: SLO,
+                  device_seconds: "dict[str, float]") -> dict:
+    """Fleet-level rollup (DESIGN.md §12): per-model and aggregate SLO
+    attainment plus device-hours actually provisioned.
+
+    ``device_seconds`` is ∫(devices leased) dt per model — what the
+    FleetDriver (or a static allocation) actually paid for, the
+    denominator of the shared-pool win: the fleet arm must match or beat
+    the static arm's aggregate attainment at strictly fewer device-hours.
+    Aggregate attainment is request-weighted (all requests pooled), not a
+    mean of per-model ratios — a model serving 10× the traffic counts 10×."""
+    all_reqs: List[Request] = []
+    per_model = {}
+    for name, reqs in per_model_requests.items():
+        all_reqs.extend(reqs)
+        per_model[name] = {
+            "n": len(reqs),
+            "finished": sum(1 for r in reqs if r.finish_s is not None),
+            "slo_attainment": slo_attainment(reqs, slo),
+            "device_hours": device_seconds.get(name, 0.0) / 3600.0,
+        }
+    return {
+        "aggregate_slo_attainment": slo_attainment(all_reqs, slo),
+        "finished": sum(1 for r in all_reqs if r.finish_s is not None),
+        "n": len(all_reqs),
+        "device_hours": sum(device_seconds.values()) / 3600.0,
+        "per_model": per_model,
+    }
+
+
 def scaling_overlap_stats(backend) -> Optional[dict]:
     """Normalize a backend's ``scaling_summary()`` (ElasticServer or
     ServingSimulator): staging mode, total decode-stall seconds during

@@ -47,7 +47,7 @@ from repro.core.expert_pages import ExpertPageTable
 from repro.core.topology import ElasticConfig, kv_cache_bytes
 from repro.serving.driver import (ScalePhase, admission_during_scale,
                                   projected_migration_blocks,
-                                  transition_cost)
+                                  transition_cost, unpark_transition_cost)
 from repro.serving.kv_blocks import blocks_for as kv_blocks_for
 from repro.serving.metrics import latency_percentiles
 from repro.serving.rebalance import RebalancePolicy
@@ -254,6 +254,57 @@ class SimScalingTask:
         return self.phase
 
 
+class SimUnparkTask:
+    """driver.ScalingTask for a modelled cold start from the pinned-host
+    tier (scale-from-zero, DESIGN.md §12).  STAGING until the unpark cost
+    model's ``t_ready`` — the whole-snapshot H2D window priced at
+    ``hw.h2d_bw`` with the AOT compile hidden underneath (overlap mode) —
+    then an instantaneous commit: devices return, a fresh expert placement
+    is laid out, and admission resumes.  Mirrors the real ``UnparkTask``
+    phase-for-phase so a fleet loop drives either backend unchanged."""
+
+    def __init__(self, sim: "ServingSimulator", target: ElasticConfig,
+                 event: SimScaleEvent):
+        self.sim = sim
+        self.target = target
+        self.event = event
+        self.phase = ScalePhase.STAGING
+        self.stall_s = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.phase.terminal
+
+    def advance(self, now: float) -> ScalePhase:
+        if self.phase is ScalePhase.STAGING and now >= self.event.t_ready:
+            self.phase = ScalePhase.COMMITTING
+            obs.get_tracer().complete(
+                "unpark.STAGING", self.event.t_command, self.event.t_ready,
+                cat="scale", tid="sim-scale",
+                args={"new_ndev": self.event.new_ndev})
+        if self.phase is ScalePhase.COMMITTING:
+            sim = self.sim
+            sim.ndev = self.event.new_ndev
+            sim.parked = False
+            sim.scale = None
+            if sim.expert_pages is not None:
+                # nothing survived the park on-device: fresh table, fresh
+                # balanced placement at the cold-start width (the real HMM
+                # initial_places the unpark table the same way)
+                n_moe = sim.mcfg.num_layers - sim.mcfg.first_k_dense
+                sim.expert_pages = ExpertPageTable(
+                    n_moe, sim.mcfg.num_experts,
+                    host_pool_pages=sim._expert_host_pages)
+                sim.expert_pages.initial_place(sim.current_config())
+            if sim.routing is not None:
+                sim.routing.reset()
+            self.phase = ScalePhase.DONE
+            obs.get_tracer().instant(
+                "unpark.commit", cat="scale", t=now, tid="sim-scale",
+                args={"new_ndev": self.event.new_ndev})
+        return self.phase
+
+
 class ServingSimulator:
     """One logical serving instance with strategy-dependent scaling."""
 
@@ -381,6 +432,12 @@ class ServingSimulator:
                 host_pool_pages=expert_host_pages)
             self.expert_pages.initial_place(self.current_config())
         self.rebalance_events: List[dict] = []
+        self._expert_host_pages = expert_host_pages
+        # scale-to-zero (DESIGN.md §12): parked = whole model lives in the
+        # pinned-host tier, ndev == 0, queue accrues, nothing serves until
+        # a SimUnparkTask commits.  park_events: {"t", "kind", ["wall_s"]}.
+        self.parked = False
+        self.park_events: List[dict] = []
         # one expert page across the three banks: bf16 (PerfModel's bpe) or
         # int8 + three per-page f32 scales when the pool is quantized
         ebpe = 1 if expert_dtype == "int8" else 2
@@ -394,6 +451,7 @@ class ServingSimulator:
         Byte counts come from the real planner; durations from the cost
         model.  The task commits when modelled time reaches ``t_ready``."""
         assert self.scale is None, "scaling already in flight"
+        assert not self.parked, "parked: use start_unpark, not start_scale"
         old = ElasticConfig(self.ndev // self.tp, self.tp,
                             tuple(range(self.ndev)))
         if self.strategy in ("extravagant", "horizontal"):
@@ -457,6 +515,46 @@ class ServingSimulator:
             # Modelled as a finish-time shift of the in-flight requests.
             self._stall_running(cost.decode_stall_s)
         self.scale = SimScalingTask(self, target, event)
+        return self.scale
+
+    # -------------------------------------------------------- scale-to-zero
+    def park(self) -> None:
+        """Scale to ZERO devices: the model's snapshot moves to the
+        pinned-host tier and every device releases.  Legal only when fully
+        drained (no running/prefilling/queued requests) and no scale event
+        is in flight — the same preconditions as ``ElasticServer.park``."""
+        assert self.scale is None, "cannot park during a scale event"
+        assert not self.parked, "already parked"
+        assert not self.running and not self._prefilling and not self.queue, \
+            "park requires a drained instance"
+        self.parked = True
+        self.ndev = 0
+        self.park_events.append({"t": self.t, "kind": "park"})
+        obs.get_tracer().instant("park", cat="scale", t=self.t,
+                                 tid="sim-scale")
+
+    def start_unpark(self, target: ElasticConfig) -> SimUnparkTask:
+        """Open a modelled cold start toward ``target`` — the shared
+        ``unpark_transition_cost`` pricing (whole snapshot H2D at
+        ``h2d_bw``, fresh KV INIT, compile hidden under the transfer in
+        overlap mode) sets ``t_ready``; until then ndev stays 0 and the
+        queue accrues (the cold-start wall the fleet benchmark reports)."""
+        assert self.parked, "not parked"
+        assert self.scale is None
+        cost = unpark_transition_cost(
+            self.mcfg, self.tp, target, hw=self.hw, preinit=self.preinit,
+            staging=self.staging_mode, kv_seq_len=self.perf.kv_seq_len,
+            kv_dtype=self.kv_dtype, expert_dtype=self.expert_dtype)
+        t_ready = self.t + cost.scale_time_s
+        event = SimScaleEvent(
+            t_command=self.t, t_ready=t_ready,
+            downtime_until=self.t + cost.downtime_s if cost.downtime_s else 0,
+            old_ndev=0, new_ndev=target.ndev, cost=cost,
+            **latency_percentiles(self.finished))
+        self.events.append(event)
+        self.park_events.append({"t": self.t, "kind": "unpark",
+                                 "wall_s": cost.scale_time_s})
+        self.scale = SimUnparkTask(self, target, event)
         return self.scale
 
     def command_scale(self, new_ndev: int) -> SimScalingTask:

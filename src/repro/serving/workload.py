@@ -6,7 +6,7 @@ shared-prefix generator exercises the paged KV cache's copy-on-write path
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -168,3 +168,50 @@ def step_up(rps0: float, rps1: float, at: float):
 
 def burst(base: float, peak: float, start: float, width: float):
     return lambda t: peak if start <= t < start + width else base
+
+
+def diurnal(base: float, peak: float, period_s: float,
+            phase_frac: float = 0.0):
+    """Sinusoidal day/night demand: ``base`` rps at the trough, ``peak`` at
+    the crest, one cycle per ``period_s``.  ``phase_frac`` shifts the cycle
+    by a fraction of a period — a fleet of N models at ``phase_frac=i/N``
+    gives staggered (anti-correlated) peaks, the regime where one shared
+    pool beats N static pools (DESIGN.md §12).  With ``phase_frac=0`` the
+    trough is at t=0 and the crest at ``period_s/2``."""
+    amp = (peak - base) * 0.5
+    return lambda t: base + amp * (1.0 - np.cos(
+        2.0 * np.pi * (t / period_s + phase_frac)))
+
+
+def diurnal_crest(period_s: float, phase_frac: float = 0.0) -> float:
+    """Time of the first crest of ``diurnal(..., phase_frac)`` in [0, T)."""
+    return ((0.5 - phase_frac) % 1.0) * period_s
+
+
+def fleet_workload(model_names: Sequence[str], *, duration_s: float,
+                   base_rps: float, peak_rps: float, period_s: float,
+                   burst_rps: float = 0.0, burst_width_s: float = 0.0,
+                   prompt_len: PromptLen = 2000, output_range=(500, 750),
+                   seed: int = 0, dt: float = 0.05
+                   ) -> Dict[str, List[Request]]:
+    """Per-model arrival streams for a fleet benchmark: model ``i`` of N
+    rides ``diurnal(base_rps, peak_rps, period_s, phase_frac=i/N)`` —
+    staggered peaks, so aggregate demand is much flatter than any single
+    model's — plus an optional rate burst of ``burst_rps`` for
+    ``burst_width_s`` seconds at each model's own crest (bursty AND
+    anti-correlated, the fleet allocator's target regime).  Returns
+    ``{model_name: [Request, ...]}`` with independent seeds per model."""
+    out: Dict[str, List[Request]] = {}
+    n = max(len(model_names), 1)
+    for i, name in enumerate(model_names):
+        phase = i / n
+        rate = diurnal(base_rps, peak_rps, period_s, phase_frac=phase)
+        if burst_rps and burst_width_s:
+            spike = burst(0.0, burst_rps,
+                          diurnal_crest(period_s, phase), burst_width_s)
+            rate = (lambda t, f=rate, b=spike: f(t) + b(t))
+        out[name] = make_workload(duration_s=duration_s, rps_fn=rate,
+                                  prompt_len=prompt_len,
+                                  output_range=output_range,
+                                  seed=seed + i, dt=dt)
+    return out

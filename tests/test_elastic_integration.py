@@ -174,7 +174,7 @@ srv.preinitialize(c6)                   # anticipate the target config
 t0 = time.perf_counter()
 srv.scale_to(c6)
 warm = time.perf_counter() - t0
-cold_compile = srv.imm._cache[(3, 2, (0,1,2,3,4,5))].compile_s
+cold_compile = srv.imm._cache[srv.imm._key(c6)].compile_s
 assert warm < cold_compile, (warm, cold_compile)
 print(f"PREINIT-OK warm={warm:.2f}s cold_compile={cold_compile:.2f}s")
 """)

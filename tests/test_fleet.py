@@ -1,0 +1,477 @@
+"""Fleet refactor acceptance (DESIGN.md §12): one shared accelerator pool,
+many models, scale-to-zero via the whole-model pinned-host tier.
+
+* ``DevicePool`` allocator contracts: overlapping ids / double-booking
+  raise at construction or claim time; ``check_invariants`` cross-checks
+  the allocator against a per-model lease ledger.
+* ``IMM`` standby keys carry the full model identity, so two fleet models
+  on the same mesh can share one LRU without colliding.
+* ``unpark_transition_cost`` pricing sanity (cold start at ``h2d_bw``;
+  ``preinit=False`` adds the cold-boot tail; serial >= overlap).
+* Simulator park/unpark semantics (queue accrues at ndev=0; the unpark
+  task drains it; ``park_events`` records the cold-start wall).
+* Hypothesis property suite: random per-model demand traces through the
+  ``FleetDriver`` — device conservation every tick, ``min_devices``
+  floors respected, and a parked model's next request always unparks it
+  (every request finishes).
+* Slow tier: engine-level park -> unpark round trip is byte-exact
+  (bit-identical tokens vs an unscaled run) and the exported Chrome
+  trace shows the unpark H2D window hiding the AOT compile.
+
+CI runs the hypothesis tests under the fixed profile registered below
+(deadline disabled, derandomized) so they cannot flake.
+"""
+import os
+
+import pytest
+
+from helpers import TEST_MOE, run_with_devices
+
+try:                                   # optional test extra: the property
+    from hypothesis import given, settings   # tests fall back to fixed
+    from hypothesis import strategies as st  # representative cases
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("repro-ci", deadline=None, derandomize=True,
+                              max_examples=40)
+    settings.register_profile("repro-ci-thorough", deadline=None,
+                              derandomize=True, max_examples=300)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro-ci"))
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _given_or_cases(cases, **strategies):
+    """``@given(**strategies)`` when hypothesis is installed; otherwise
+    parametrize over the fixed ``cases`` so the properties still execute
+    (deterministically) on minimal environments."""
+    if HAVE_HYPOTHESIS:
+        return given(**strategies)
+    return pytest.mark.parametrize(",".join(strategies), cases)
+
+
+MODEL = "deepseek-v2-lite-16b"
+
+
+def _mk_sim(ndev, **kw):
+    from repro.configs import get_config
+    from repro.serving.simulator import ServingSimulator
+    return ServingSimulator(get_config(MODEL), tp=2, ndev=ndev,
+                            staging="overlap", **kw)
+
+
+def _policy(**kw):
+    from repro.core.coordinator import ScalingPolicy
+    from repro.serving.metrics import SLO
+    base = dict(slo=SLO(ttft_s=10.0, tpot_s=1.5), window=8, cooldown_s=5.0,
+                queue_scale_up=3, confirm_s=0.5, idle_utilization=0.4)
+    base.update(kw)
+    return ScalingPolicy(**base)
+
+
+# ------------------------------------------------------- DevicePool allocator
+
+def test_device_pool_rejects_overlapping_ids():
+    import repro.core  # noqa: F401 — break the serving.driver import cycle
+    from repro.serving.driver import DevicePool
+    with pytest.raises(ValueError, match="duplicate"):
+        DevicePool([0, 1, 1])
+
+
+def test_device_pool_claim_release_contracts():
+    import repro.core  # noqa: F401
+    from repro.serving.driver import DevicePool
+    p = DevicePool(range(4))
+    assert p.claim("a", [0, 1]) == (0, 1)
+    with pytest.raises(ValueError, match="already owned"):
+        p.claim("b", [1])                 # double-booking across owners
+    with pytest.raises(ValueError, match="already owned"):
+        p.claim("a", [0])                 # double-claim by the SAME owner
+    with pytest.raises(ValueError, match="not in the pool"):
+        p.claim("b", [9])
+    with pytest.raises(ValueError, match="duplicate"):
+        p.claim("b", [2, 2])
+    with pytest.raises(ValueError, match="refusing the release"):
+        p.release("b", [0])               # not the owner
+    with pytest.raises(ValueError, match="refusing the release"):
+        p.release("a", [2])               # free device
+    p.release("a", [0])
+    assert p.claim("b", [0]) == (0,)      # released devices recirculate
+    assert set(p.free()) == {2, 3}
+    assert p.owned("a") == (1,) and p.owned("b") == (0,)
+
+
+def test_device_pool_invariants_cross_check_ledger():
+    import repro.core  # noqa: F401
+    from repro.serving.driver import DevicePool
+    p = DevicePool(range(4))
+    p.claim("a", [0, 1])
+    p.claim("b", [2])
+    p.check_invariants()
+    p.check_invariants({"a": [0, 1], "b": [2]})
+    with pytest.raises(AssertionError):
+        p.check_invariants({"a": [0, 1]})           # b's lease leaked
+    with pytest.raises(AssertionError):
+        p.check_invariants({"a": [0, 1], "b": [3]})  # ledger disagrees
+    with pytest.raises(AssertionError):
+        p.check_invariants({"a": [0, 1, 2], "b": [2]})  # double-leased
+
+
+def test_two_cluster_drivers_cannot_share_a_pool():
+    """The satellite's construction-time guard: a second driver booting on
+    an already-claimed pool raises instead of double-booking devices."""
+    import repro.core  # noqa: F401 — break the serving.driver import cycle
+    from repro.configs import get_config
+    from repro.serving.driver import ClusterDriver, DevicePool, DriverConfig
+    pool = DevicePool(range(8))
+    mcfg = get_config(MODEL)
+    ClusterDriver(_mk_sim(4), _policy(), mcfg=mcfg, tp=2, device_pool=pool,
+                  config=DriverConfig(dt=0.05))
+    with pytest.raises(ValueError, match="already owned"):
+        ClusterDriver(_mk_sim(4), _policy(), mcfg=mcfg, tp=2,
+                      device_pool=pool, config=DriverConfig(dt=0.05))
+
+
+def test_fleet_boot_overflow_and_duplicate_names_raise():
+    from repro.serving.fleet import FleetDriver, FleetModelSpec
+    from repro.configs import get_config
+    mcfg = get_config(MODEL)
+
+    def spec(name, ndev):
+        return FleetModelSpec(name=name, backend=_mk_sim(ndev),
+                              policy=_policy(), mcfg=mcfg, tp=2)
+    with pytest.raises(ValueError, match="already owned|cannot cover"):
+        FleetDriver([spec("a", 4), spec("b", 4)], range(6))
+    with pytest.raises(AssertionError, match="duplicate model names"):
+        FleetDriver([spec("a", 2), spec("a", 2)], range(8))
+
+
+# ------------------------------------------------- IMM standby key separation
+
+def test_imm_standby_key_carries_model_identity():
+    """Two fleet models with the SAME (dp, tp, devices) mesh must never
+    collide in a shared standby LRU — the key carries the model config and
+    every compile-affecting knob."""
+    import types
+    from collections import OrderedDict
+
+    import repro.core  # noqa: F401
+    from repro.configs import get_config
+    from repro.core.imm import IMM
+    from repro.core.topology import ElasticConfig
+
+    def hmm_attrs():
+        return types.SimpleNamespace(
+            kv_mode="paged", kv_block_size=16, kv_blocks_per_replica=64,
+            expert_mode="pooled", expert_pool_pages=0, expert_slot_slack=0,
+            kv_dtype=None, expert_dtype=None)
+
+    shared = OrderedDict()
+    a = IMM(get_config(MODEL), hmm_attrs(), batch_per_replica=4, max_len=128,
+            shared_cache=shared)
+    b = IMM(get_config("qwen3-30b-a3b"), hmm_attrs(), batch_per_replica=4,
+            max_len=128, shared_cache=shared)
+    cfg = ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3))
+    assert a._key(cfg) != b._key(cfg)
+    assert a._cache is b._cache           # one LRU, one capacity bound
+    shared[a._key(cfg)] = "standby-a"     # simulate a's compiled standby
+    assert a.has(cfg) and not b.has(cfg)
+    # same model, different layout knob -> also a different key
+    c_attrs = hmm_attrs()
+    c_attrs.kv_block_size = 32
+    c = IMM(get_config(MODEL), c_attrs, batch_per_replica=4, max_len=128,
+            shared_cache=shared)
+    assert not c.has(cfg)
+
+
+# ------------------------------------------------------- cold-start pricing
+
+def test_unpark_transition_cost_pricing():
+    import repro.core  # noqa: F401
+    from repro.configs import get_config
+    from repro.core.topology import ElasticConfig
+    from repro.serving.driver import unpark_transition_cost
+
+    mcfg = get_config(MODEL)
+    tgt = ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3))
+    warm = unpark_transition_cost(mcfg, 2, tgt)
+    assert warm.scale_time_s > 0
+    assert warm.downtime_s == warm.scale_time_s  # parked => all dead time
+    assert "cold_start" in warm.breakdown
+    cold = unpark_transition_cost(mcfg, 2, tgt, preinit=False)
+    assert cold.scale_time_s > warm.scale_time_s  # cold-boot serial tail
+    serial = unpark_transition_cost(mcfg, 2, tgt, staging="serial")
+    assert serial.scale_time_s >= warm.scale_time_s  # overlap hides H2D
+
+
+# ------------------------------------------------- simulator park/unpark
+
+def test_sim_park_unpark_queue_accrual_and_cold_start_wall():
+    from repro.core.topology import ElasticConfig
+    from repro.serving.workload import Request
+
+    sim = _mk_sim(4)
+    sim.run([Request(0, 0.0, 2000, 20)], until=30.0)
+    assert sim.finished and sim.finished[0].finish_s is not None
+    sim.park()
+    assert sim.parked and sim.ndev == 0
+    assert sim.park_events[-1]["kind"] == "park"
+    # parked: submissions accrue, nothing serves
+    sim.submit(Request(1, sim.t, 2000, 20))
+    t0 = sim.t
+    for _ in range(10):
+        sim.step(sim.t + 0.05)
+    assert sim.queue_depth() == 1 and sim.utilization() == 0.0
+    with pytest.raises(AssertionError):
+        sim.park()                        # double-park is a bookkeeping bug
+    task = sim.start_unpark(ElasticConfig(dp=2, tp=2, devices=(0, 1, 2, 3)))
+    ev = sim.park_events[-1]
+    assert ev["kind"] == "unpark" and ev["wall_s"] > 0
+    until = sim.t + ev["wall_s"] + 60.0
+    while sim.t < until and sim.queue_depth() + len(sim.running):
+        task.advance(sim.t)
+        sim.step(sim.t + 0.05)
+    assert task.done and not sim.parked and sim.ndev == 4
+    r = sim.finished[-1]
+    assert r.rid == 1 and r.finish_s is not None
+    # the cold-start wall is dead time for the queued request
+    assert r.ttft >= ev["wall_s"] - 1e-6, (r.ttft, ev["wall_s"])
+    assert t0 + ev["wall_s"] <= r.first_token_s
+
+
+# --------------------------------------------------- fleet driver properties
+
+def _arrivals(windows, window_s, prompt_len=2000, output_len=24):
+    """Deterministic arrival stream: ``windows`` are per-window request
+    rates; requests are evenly spaced inside each window."""
+    from repro.serving.workload import Request
+    reqs, rid = [], 0
+    for i, rate in enumerate(windows):
+        n = int(rate * window_s)
+        for k in range(n):
+            reqs.append(Request(rid, i * window_s + (k + 0.5) * window_s / n,
+                                prompt_len, output_len))
+            rid += 1
+    return reqs
+
+
+def _drive(fd, arrivals, cap_s=600.0):
+    """Run the fleet loop (conservation is checked every tick inside) until
+    every request finishes, extending in 30s slabs up to ``cap_s``."""
+    until, first = 30.0, True
+    total = sum(len(v) for v in arrivals.values())
+    while True:
+        res = fd.run(arrivals if first else {}, until=until)
+        first = False
+        done = sum(len(v) for v in res.values())
+        if done == total:
+            return res
+        assert until < cap_s, \
+            f"fleet stalled: {done}/{total} finished by t={until}"
+        until += 30.0
+
+
+def test_fleet_parks_idle_model_and_unparks_on_next_request():
+    """Deterministic scale-to-zero round trip through the driver: an idle
+    trough parks the model (lease -> 0, devices back to the pool); the next
+    queued request triggers the unpark and gets served."""
+    from repro.configs import get_config
+    from repro.serving.fleet import FleetConfig, FleetDriver, FleetModelSpec
+
+    spec = FleetModelSpec(name="solo", backend=_mk_sim(2), policy=_policy(),
+                          mcfg=get_config(MODEL), tp=2, min_devices=0,
+                          park_after_idle_s=5.0)
+    fd = FleetDriver([spec], range(4),
+                     FleetConfig(dt=0.1, settle_s=2.0, sample_every_s=2.0))
+    from repro.serving.workload import Request
+    reqs = _arrivals([2.0], 10.0)         # 20 requests in [0, 10)
+    late = [Request(100, 60.0, 2000, 24)]  # arrives well after the park
+    res = _drive(fd, {"solo": reqs + late})
+    kinds = [e.kind for e in fd.events]
+    assert "park" in kinds and "unpark" in kinds
+    assert kinds.index("park") < kinds.index("unpark")
+    assert len(res["solo"]) == 21
+    # while parked the model held nothing and the pool saw every device
+    parked_t = next(e.t for e in fd.events if e.kind == "park")
+    unparked_t = next(e.t for e in fd.events if e.kind == "unpark")
+    for row in fd.timeline:
+        if parked_t < row["t"] < unparked_t:
+            assert row["solo"] == 0 and row["free"] == 4
+    fd.check_invariants()
+
+
+@_given_or_cases(
+    [([0.0, 1.0, 0.0], [3.0, 0.0, 5.0], 0),
+     ([1.0, 3.0, 0.0], [0.0, 5.0, 1.0], 4),
+     ([0.0, 0.0, 3.0], [5.0, 3.0, 0.0], 4)],
+    windows_a=st.lists(st.sampled_from([0.0, 0.0, 1.0, 3.0]),
+                       min_size=3, max_size=3) if HAVE_HYPOTHESIS else None,
+    windows_b=st.lists(st.sampled_from([0.0, 1.0, 3.0, 5.0]),
+                       min_size=3, max_size=3) if HAVE_HYPOTHESIS else None,
+    floor_b=st.sampled_from([0, 4]) if HAVE_HYPOTHESIS else None)
+def test_fleet_random_demand_conserves_devices_and_floors(windows_a,
+                                                          windows_b,
+                                                          floor_b):
+    """Random per-model demand traces through the allocator: device
+    conservation holds every tick (``check_invariants`` runs inside the
+    loop), ``min_devices`` floors are never violated, parked models with
+    queued requests always unpark (every request finishes)."""
+    from repro.configs import get_config
+    from repro.serving.fleet import FleetConfig, FleetDriver, FleetModelSpec
+
+    mcfg = get_config(MODEL)
+    boot_b = max(floor_b, 2)
+    specs = [
+        FleetModelSpec(name="a", backend=_mk_sim(2), policy=_policy(),
+                       mcfg=mcfg, tp=2, min_devices=0,
+                       park_after_idle_s=8.0),
+        FleetModelSpec(name="b", backend=_mk_sim(boot_b), policy=_policy(),
+                       mcfg=mcfg, tp=2, min_devices=floor_b,
+                       park_after_idle_s=8.0),
+    ]
+    fd = FleetDriver(specs, range(10),
+                     FleetConfig(dt=0.1, settle_s=3.0, max_step_dp=2,
+                                 sample_every_s=5.0))
+    arrivals = {"a": _arrivals(windows_a, 25.0),
+                "b": _arrivals(windows_b, 25.0)}
+    res = _drive(fd, arrivals)
+    # every request finished => queued requests on parked models unparked
+    assert sorted(len(v) for v in res.values()) == \
+        sorted(len(v) for v in arrivals.values())
+    fd.check_invariants()
+    leases = {n: st_.lease for n, st_ in fd.states.items()}
+    assert sum(map(len, leases.values())) + len(fd.pool.free()) == 10
+    # min_devices floor: the floored model never parked and never sampled
+    # below its floor; scale-downs never targeted a sub-floor config
+    if floor_b > 0:
+        assert not any(e.kind == "park" and e.model == "b"
+                       for e in fd.events)
+        assert all(row["b"] >= floor_b for row in fd.timeline)
+        assert len(leases["b"]) >= floor_b
+    for e in fd.events:
+        if e.kind == "down":              # dst like "DP2-TP2-EP4@[...]"
+            spec = fd.states[e.model].spec
+            dst_dp = int(e.dst.split("DP")[1].split("-")[0])
+            assert dst_dp >= fd._min_dp(spec)
+
+
+@_given_or_cases(
+    [(20.0, 1), (35.0, 2), (50.0, 4)],
+    gap=st.sampled_from([20.0, 35.0, 50.0]) if HAVE_HYPOTHESIS else None,
+    late_n=st.integers(1, 4) if HAVE_HYPOTHESIS else None)
+def test_fleet_parked_model_next_request_always_unparks(gap, late_n):
+    """The scale-to-zero liveness property, directly: whatever the idle gap
+    and the size of the late batch, a parked model's queued requests pull
+    it back through an unpark and all finish."""
+    from repro.configs import get_config
+    from repro.serving.fleet import FleetConfig, FleetDriver, FleetModelSpec
+    from repro.serving.workload import Request
+
+    spec = FleetModelSpec(name="m", backend=_mk_sim(2), policy=_policy(),
+                          mcfg=get_config(MODEL), tp=2, min_devices=0,
+                          park_after_idle_s=6.0)
+    fd = FleetDriver([spec], range(4),
+                     FleetConfig(dt=0.1, settle_s=2.0))
+    reqs = _arrivals([1.0], 8.0)
+    reqs += [Request(1000 + i, 8.0 + gap + 0.1 * i, 2000, 24)
+             for i in range(late_n)]
+    res = _drive(fd, {"m": reqs})
+    assert len(res["m"]) == len(reqs)
+    kinds = [e.kind for e in fd.events]
+    if "park" in kinds:                   # gap long enough to park
+        assert "unpark" in kinds[kinds.index("park"):]
+
+
+# ------------------------------------------------------- slow tier (engine)
+
+@pytest.mark.slow
+def test_engine_park_unpark_byte_exact_with_trace_overlap(tmp_path):
+    """ISSUE acceptance: park -> unpark round-trips byte-exact (bit-identical
+    tokens vs an unscaled run) and the exported trace shows the unpark H2D
+    transfer window overlapping the IMM AOT compile (STAGING ∥ COMPILING)."""
+    trace_path = tmp_path / "trace.json"
+    out = run_with_devices(TEST_MOE + f"""
+import time
+import numpy as np
+from repro import obs
+from repro.core.elastic_engine import ElasticServer
+from repro.core.topology import ElasticConfig
+from repro.serving.workload import Request
+
+tr = obs.install(obs.Tracer(capacity=200_000))
+
+def reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, arrival_s=0.0,
+                    prompt=rng.integers(1, 100, size=12).tolist(),
+                    prompt_len=12, output_len=8) for i in range(3)]
+
+def serve(server):
+    out = {{}}
+    for r in reqs():
+        server.submit(r)
+    t = 0.0
+    while len(out) < 3 and t < 200:
+        for rid in server.tick(t):
+            out[rid] = list(server.engine.generated[rid])
+        t += 0.05
+    return out
+
+cfg = ElasticConfig(dp=1, tp=2, devices=(0, 1))
+kw = dict(tp=2, batch_per_replica=4, max_len=32, prefill_buckets=(16,),
+          kv_mode="paged", kv_block_size=4, expert_mode="pooled",
+          staging="overlap", seed=0, transfer_workers=1)
+
+ref = ElasticServer(MCFG, **kw)
+ref.boot(cfg)
+base = serve(ref)
+
+srv = ElasticServer(MCFG, **kw)
+srv.boot(cfg)
+_ = serve(srv)                       # warm, then drain -> park
+st = srv.park()
+assert srv.parked and srv.current_config() is None
+assert srv.utilization() == 0.0 and srv.tick(0.0) == []
+assert st.d2h_bytes > 0 and srv.hmm.parked_bytes() == st.d2h_bytes
+
+# force a REAL AOT compile during the unpark (a standby hit would make the
+# compile span ~0s) and throttle each H2D op so the transfer window
+# deterministically spans it (same trick as test_trace_overlap.py)
+srv.imm._cache.clear()
+orig = srv.hmm._stage_unit
+def slow_unit(*a, **k):
+    time.sleep(0.05)
+    return orig(*a, **k)
+srv.hmm._stage_unit = slow_unit
+
+task = srv.start_unpark(cfg)
+t = 500.0
+while not task.done:
+    task.advance(t)
+    srv.tick(t)                      # legal (and a no-op) mid-unpark
+    t += 0.05
+srv.hmm._stage_unit = orig
+assert not srv.parked and task.event.compile_hit is False
+assert task.stats.h2d_bytes > 0
+
+out2 = serve(srv)
+assert out2 == base, (out2, base)
+print("byte-exact tokens after park->unpark OK")
+
+doc = obs.write_chrome_trace({str(trace_path)!r}, tr)
+obs.validate_trace(doc)
+spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+h2d = [e for e in spans if str(e["name"]).startswith("unpark:")]
+comp = [e for e in spans if e["name"] == "unpark.compile"]
+assert h2d, "no unpark TransferOp spans in trace"
+assert comp, "no unpark.compile span in trace"
+
+def overlap(a, b):
+    return max(a["ts"], b["ts"]) < min(a["ts"] + a["dur"],
+                                       b["ts"] + b["dur"])
+
+assert any(overlap(a, b) for a in h2d for b in comp), \\
+    "unpark H2D transfer did not overlap the AOT compile"
+print("unpark transfer overlapped AOT compile in exported trace OK")
+""", ndev=2, timeout=600)
+    assert "byte-exact tokens after park->unpark OK" in out
+    assert "overlapped AOT compile in exported trace OK" in out
